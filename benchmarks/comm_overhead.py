@@ -1,0 +1,60 @@
+"""Fig. 3 reproduction: AR / A2A communication overhead.
+
+Left subfigure: operator latency vs parallel degree for the paper's two
+models on the 910B cluster (intra-node d<=8, inter-node d>8 inflection).
+Right subfigure: intra- vs inter-node latency vs data size (the inflection
+point arrives later intra-node because of the higher bandwidth).
+
+Theoretical model (Eqs. 1-3) on the paper's cluster specs — the same curves
+the analyzer uses for strategy selection.
+"""
+
+from __future__ import annotations
+
+from repro.configs.paper_models import DEEPSEEK_R1, QWEN3_235B
+from repro.core import cost_model as cm
+from repro.core.topology import ASCEND_910B_CLUSTER as CL
+
+
+def left_subfigure(rows: list) -> None:
+    for model in (DEEPSEEK_R1, QWEN3_235B):
+        size = 16 * 1024 * model.d_model * cm.BYTES        # b=16, s=1024
+        for d in (2, 4, 8, 16, 32):
+            inter = d > CL.n_proc
+            bw, al = CL.bw(inter), CL.latency(inter)
+            ar = cm.ar_cost(size, d, bw, al)
+            a2a = cm.a2a_cost(size * model.top_k, d, bw, al)
+            rows.append((f"fig3L/{model.name}/d{d}/AR", ar * 1e6,
+                         f"inter={inter}"))
+            rows.append((f"fig3L/{model.name}/d{d}/A2A", a2a * 1e6,
+                         f"inter={inter}"))
+
+
+def right_subfigure(rows: list) -> None:
+    for mb in (1, 4, 16, 64, 256):
+        size = mb * 1e6
+        intra = cm.a2a_cost(size, 4, CL.intra_node_bw, CL.intra_node_latency)
+        inter = cm.a2a_cost(size, 4, CL.inter_node_bw, CL.inter_node_latency)
+        rows.append((f"fig3R/intra/{mb}MB", intra * 1e6, ""))
+        rows.append((f"fig3R/inter/{mb}MB", inter * 1e6,
+                     f"ratio={inter / max(intra, 1e-12):.1f}x"))
+
+
+def run() -> list:
+    rows: list = []
+    left_subfigure(rows)
+    right_subfigure(rows)
+    # headline observations the paper draws from Fig. 3
+    d32_ar = next(v for n, v, _ in rows
+                  if n == f"fig3L/{DEEPSEEK_R1.name}/d32/AR")
+    d8_ar = next(v for n, v, _ in rows
+                 if n == f"fig3L/{DEEPSEEK_R1.name}/d8/AR")
+    rows.append(("fig3/check/inter_node_cliff", 0.0,
+                 f"AR d=32 is {d32_ar / d8_ar:.1f}x AR d=8 (paper: sharp "
+                 "increase past d=8)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")

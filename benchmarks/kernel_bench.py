@@ -1,0 +1,45 @@
+"""Pallas kernel micro-bench: interpret-mode correctness-scale timings plus
+the jnp-oracle timings on matched shapes (CPU walltime; the TPU story is the
+BlockSpec structure, not these numbers)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.kernels import ops
+
+
+def run() -> list:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    e, c, h, d = 8, 256, 512, 512
+    x = jax.random.normal(key, (e, c, h), jnp.float32)
+    w = jax.random.normal(key, (e, h, d), jnp.float32)
+    us_ref = time_fn(jax.jit(ops.moe_gemm_ref), x, w)
+    flops = 2 * e * c * h * d
+    rows.append((f"kernel/moe_gemm_ref/{e}x{c}x{h}x{d}", us_ref,
+                 f"{flops / us_ref / 1e3:.1f}GFLOP/s(cpu)"))
+
+    t, ne, k = 4096, 160, 6
+    logits = jax.random.normal(key, (t, ne), jnp.float32)
+    us = time_fn(jax.jit(lambda l: ops.topk_gate_ref(l, k)), logits)
+    rows.append((f"kernel/topk_gate_ref/{t}x{ne}k{k}", us, ""))
+
+    b, nq, nkv, hd, s = 8, 32, 8, 128, 4096
+    q = jax.random.normal(key, (b, nq, hd), jnp.float32)
+    kk = jax.random.normal(key, (b, s, nkv, hd), jnp.float32)
+    vv = jax.random.normal(key, (b, s, nkv, hd), jnp.float32)
+    lens = jnp.full((b,), s, jnp.int32)
+    us = time_fn(jax.jit(ops.flash_decode_ref), q, kk, vv, lens)
+    bytes_read = b * s * nkv * hd * 2 * 4
+    rows.append((f"kernel/flash_decode_ref/b{b}s{s}", us,
+                 f"{bytes_read / us / 1e3:.1f}GB/s(cpu)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, v, derived in run():
+        print(f"{name},{v:.1f},{derived}")

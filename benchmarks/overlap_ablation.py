@@ -1,0 +1,48 @@
+"""Fig. 12 reproduction: sync vs async (fused) AR-A2A communication.
+
+(a) Gantt decomposition: per-phase times of the fused RS-Combine and fused
+    AG-Dispatch schedules, sync (back-to-back) vs async (overlapped).
+(b) End-to-end indicator impact on DeepSeek-R1 @ Ascend 910B, matching the
+    paper's ablation cluster.
+
+The paper's observation: the async gain is "approximately slightly greater
+than inter-node communication overhead" — we report exactly that delta.
+"""
+
+from __future__ import annotations
+
+from repro.configs.paper_models import DEEPSEEK_R1
+from repro.core import cost_model as cm
+from repro.core.topology import ASCEND_910B_CLUSTER as CL
+
+BATCH, L_IN, L_OUT = 16, 4096 - 256, 256
+
+
+def run() -> list:
+    rows = []
+    model = DEEPSEEK_R1
+    work = cm.Workload(batch=BATCH, seq_len=1)      # decode-phase ablation
+    for algo in ("sync", "fused"):
+        s = cm.Strategy(attn_tp=8, attn_dp=4, moe_tp=8, moe_ep=4,
+                        comm_algo=algo, ep_inter_node=True)
+        lam = cm.comm_latency(model, s, work, CL)
+        ind = cm.indicators(model, s, CL, batch=BATCH, l_in=L_IN,
+                            l_out=L_OUT)
+        rows.append((f"fig12/{algo}/comm_per_layer", lam * 1e6,
+                     f"ttft={ind.ttft*1e3:.1f}ms itl={ind.itl*1e3:.2f}ms "
+                     f"thr={ind.throughput:.1f}tok/s"))
+    sync = next(v for n, v, _ in rows if n.startswith("fig12/sync"))
+    fused = next(v for n, v, _ in rows if n.startswith("fig12/fused"))
+    # the overlap hides min(intra, inter) per phase; paper says the gain is
+    # ~ the inter-node overhead of one phase
+    size = BATCH * 1 * model.d_model * cm.BYTES * model.top_k / 8
+    inter_phase = cm.a2a_cost(size, 4, CL.bw(True), CL.latency(True))
+    rows.append(("fig12/async_gain", sync - fused,
+                 f"~inter_node_phase={inter_phase*1e6:.1f}us (paper: gain "
+                 "slightly > inter-node overhead)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, v, derived in run():
+        print(f"{name},{v:.1f},{derived}")

@@ -1,0 +1,72 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run JSON records.
+
+  PYTHONPATH=src:. python -m benchmarks.report > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+
+import repro.configs as C
+from benchmarks.roofline import analyze, load_records
+from repro.configs.base import INPUT_SHAPES
+
+
+def dryrun_table(recs) -> str:
+    lines = ["| arch | shape | mesh | devs | args GB | temp GB | compile s | "
+             "HLO GFLOP/dev | coll MB/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        m, c = r["memory"], r["costs"]
+        coll = c["collectives"]["bytes"].get("total", 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['n_devices']} "
+            f"| {m['argument_bytes']/1e9:.2f} | {m['temp_bytes']/1e9:.2f} "
+            f"| {r['compile_s']:.0f} | {c['flops']/1e9:.1f} "
+            f"| {coll/1e6:.1f} |")
+    return "\n".join(lines)
+
+
+def skips_table() -> str:
+    lines = ["| arch | shape | reason |", "|---|---|---|"]
+    for a in C.ARCH_IDS:
+        cfg = C.get(a)
+        for s in INPUT_SHAPES.values():
+            if not C.shape_supported(cfg, s):
+                lines.append(f"| {a} | {s.name} | full quadratic attention — "
+                             "long_500k needs sub-quadratic (DESIGN.md §4) |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh: str = "single") -> str:
+    lines = ["| arch | shape | compute ms | memory ms | collective ms | "
+             "dominant | useful ratio | HBM GB |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        a = analyze(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {a['t_compute']*1e3:.2f} "
+            f"| {a['t_memory']*1e3:.2f} | {a['t_collective']*1e3:.3f} "
+            f"| **{a['dominant']}** | {a['useful_ratio']:.2f} "
+            f"| {a['hbm_gb_per_dev']:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_records()
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("### Dry-run records (strategy=mixserve)\n")
+    print(dryrun_table(recs))
+    print("\n### Shape skips\n")
+    print(skips_table())
+    print("\n### Roofline (single pod, 256 chips)\n")
+    print(roofline_table(recs, "single"))
+    print("\n### Roofline (multi pod, 512 chips)\n")
+    print(roofline_table(recs, "multi"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh).
+
+Reads the dry-run JSON records (experiments/dryrun/*.json) and derives:
+
+  compute term    = HLO_FLOPs / peak_FLOP/s          (per chip, s)
+  memory term     = HLO_bytes / HBM_bw               (per chip, s)
+  collective term = collective_bytes / link_bw       (per chip, s)
+
+Hardware constants (task spec): TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  cost_analysis() and the HLO parse are post-SPMD, i.e.
+already per-device, so no further division by chip count is needed.
+
+Also reports MODEL_FLOPS / HLO_FLOPS ("useful-compute ratio"): MODEL_FLOPS =
+6*N*D for training (fwd+bwd) and 2*N_active*D for inference, with D = tokens
+processed per step globally.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import repro.configs as C
+from repro.configs.base import INPUT_SHAPES
+from repro.models.model import count_params
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "dryrun")
+
+
+def model_flops(cfg, shape) -> float:
+    """Global useful FLOPs per step (6ND train, 2ND inference)."""
+    n_total = count_params(cfg)
+    if cfg.is_moe:
+        n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+        inactive = (n_moe_layers * (cfg.n_experts - cfg.top_k)
+                    * 3 * cfg.d_model * cfg.d_expert)
+        n_active = n_total - inactive
+    else:
+        n_active = n_total
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * d
+    d = shape.global_batch * 1          # decode: one token per request
+    return 2.0 * n_active * d
+
+
+def analyze(rec: dict) -> dict:
+    """Three roofline terms per chip per step.
+
+    XLA's HloCostAnalysis multiplies single-level while bodies by their trip
+    counts but UNDER-counts nested scans (grad-accum/prefill-chunk loops
+    around the layer scan), so the compute term takes the max of HLO FLOPs
+    and the MODEL_FLOPS floor; ``flops_src`` records which bound.  The
+    collective term comes from our own trip-count-aware HLO parse.
+    """
+    cfg = C.get(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    c = rec["costs"]
+    mf = model_flops(cfg, shape)
+    hlo = c["flops"]
+    floor = mf / rec["n_devices"]
+    eff_flops = max(hlo, floor)
+    t_compute = eff_flops / PEAK_FLOPS
+    t_memory = c["bytes_accessed"] / HBM_BW
+    coll = c["collectives"]["bytes"].get("total", 0)
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    return {
+        **{f"t_{k}": v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": mf,
+        "flops_src": "hlo" if hlo >= floor else "model-floor",
+        "useful_ratio": min(mf / (eff_flops * rec["n_devices"]), 1.0)
+        if eff_flops else 0.0,
+        "coll_bytes": coll,
+        "hbm_gb_per_dev": (rec["memory"]["argument_bytes"]
+                           + rec["memory"]["temp_bytes"]
+                           + rec["memory"]["output_bytes"]) / 1e9,
+    }
+
+
+def load_records(results_dir: str = RESULTS_DIR, strategy: str = "mixserve"):
+    recs = []
+    if not os.path.isdir(results_dir):
+        return recs
+    for fn in sorted(os.listdir(results_dir)):
+        if not fn.endswith(".json") or not fn.endswith(
+                f"_{strategy}.json"):
+            continue
+        with open(os.path.join(results_dir, fn)) as f:
+            r = json.load(f)
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def run() -> list:
+    rows = []
+    for rec in load_records():
+        a = analyze(rec)
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        total_us = (a["t_compute"] + a["t_memory"] + a["t_collective"]) * 1e6
+        rows.append((name, total_us,
+                     f"comp={a['t_compute']*1e3:.2f}ms "
+                     f"mem={a['t_memory']*1e3:.2f}ms "
+                     f"coll={a['t_collective']*1e3:.2f}ms "
+                     f"dom={a['dominant']} "
+                     f"useful={a['useful_ratio']:.2f} "
+                     f"hbm={a['hbm_gb_per_dev']:.1f}GB"))
+    if not rows:
+        rows.append(("roofline/NO_DRYRUN_RECORDS", 0.0,
+                     "run `python -m repro.launch.dryrun --all` first"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, v, derived in run():
+        print(f"{name},{v:.1f},{derived}")

@@ -1,0 +1,52 @@
+"""Benchmark driver — one harness per paper table/figure.
+
+  python -m benchmarks.run            # all
+  python -m benchmarks.run fig10      # one
+
+Output: ``name,value,derived`` CSV rows (value in us unless noted).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (comm_overhead, dp_ep_tradeoff, kernel_bench,
+                        overlap_ablation, perf_eval, roofline, serve_micro,
+                        table1)
+
+SUITES = {
+    "fig3": comm_overhead,       # AR/A2A overhead vs degree & size
+    "table1": table1,            # collective volumes
+    "fig10": perf_eval,          # TTFT/ITL/throughput vs baselines
+    "fig11": dp_ep_tradeoff,     # DP/EP trade-off ablation
+    "fig12": overlap_ablation,   # sync vs fused overlap ablation
+    "roofline": roofline,        # dry-run roofline terms (deliverable g)
+    "serve": serve_micro,        # measured engine indicators (reduced)
+    "kernels": kernel_bench,     # pallas kernel micro-bench
+}
+
+
+def main() -> int:
+    picks = sys.argv[1:] or list(SUITES)
+    failed = []
+    print("name,value,derived")
+    for name in picks:
+        mod = SUITES[name]
+        t0 = time.time()
+        try:
+            for row, v, derived in mod.run():
+                print(f"{row},{v:.1f},{derived}")
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# suite {name} done in {time.time() - t0:.1f}s")
+    if failed:
+        print(f"# FAILED suites: {failed}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,41 @@
+"""The automatic analyzer as a standalone tool (paper §III-B).
+
+For every assigned architecture, rank parallel strategies on a chosen
+cluster and print the top-3 with their theoretical TTFT/ITL/throughput —
+the offline stage MixServe runs before loading any weights.
+
+Run:  PYTHONPATH=src python examples/autotune_strategy.py \
+          [--cluster v5e-pod-256] [--objective throughput]
+"""
+
+import argparse
+
+import repro.configs as C
+from repro.core import analyzer
+from repro.core.topology import CLUSTERS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cluster", default="v5e-pod-256",
+                    choices=list(CLUSTERS))
+    ap.add_argument("--objective", default="balanced",
+                    choices=["ttft", "itl", "throughput", "balanced"])
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--l-in", type=int, default=1024)
+    ap.add_argument("--l-out", type=int, default=256)
+    args = ap.parse_args()
+    cluster = CLUSTERS[args.cluster]
+
+    for arch in C.ARCH_IDS:
+        cfg = C.get(arch)
+        rep = analyzer.select(cfg, cluster, batch=args.batch,
+                              l_in=args.l_in, l_out=args.l_out,
+                              objective=args.objective)
+        print(f"\n=== {arch} on {cluster.name} "
+              f"(objective={args.objective}) ===")
+        print(rep.describe(top=3))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: the MixServe pipeline end-to-end in one script.
+
+1. offline stage — the automatic analyzer picks a parallel strategy for
+   DeepSeek-V2-236B on a TPU v5e pod from the theoretical cost model;
+2. online stage — a reduced same-family model is built, partitioned by the
+   resulting plan semantics, and serves a couple of requests on this host.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.core import analyzer
+from repro.core.topology import TPU_V5E_POD
+from repro.models.model import count_params, init_params
+from repro.serving.engine import Engine, Request
+from repro.serving.scheduler import Scheduler
+
+ARCH = "deepseek-v2-236b"
+
+
+def main():
+    # ---------------- offline: automatic analyzer ----------------
+    full_cfg = C.get(ARCH)
+    print(f"model: {full_cfg.name}  ({count_params(full_cfg):,} params, "
+          f"{full_cfg.n_experts} experts top-{full_cfg.top_k})")
+    report = analyzer.select(full_cfg, TPU_V5E_POD, batch=16, l_in=1024,
+                             l_out=256, arrival_rate=4.0,
+                             objective="balanced")
+    print("\n== offline stage: strategy ranking (theoretical) ==")
+    print(report.describe(top=5))
+    best = report.best.strategy
+    print(f"\nselected: {best.describe()}")
+
+    # ---------------- online: serve a reduced variant ----------------
+    cfg = C.get_reduced(ARCH)
+    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    engine = Engine(cfg, params, max_batch=2, max_len=96)
+    sched = Scheduler(engine)
+    import numpy as np
+    for rid in range(3):
+        prompt = np.arange(10 + rid, dtype=np.int32) % cfg.vocab_size
+        sched.submit(Request(rid=rid, prompt=prompt, max_new_tokens=8))
+    done = sched.run()
+    print("\n== online stage: served requests (reduced config, CPU) ==")
+    for r in done:
+        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.out_tokens}")
+    print(sched.metrics().row())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Train a ~100M-parameter MoE for a few hundred steps (deliverable b).
+
+A scaled phi3.5-family model (8 experts top-2, ~100M params) trains on the
+synthetic Markov/Zipf pipeline; loss is expected to drop well below the
+uniform floor log(V).  Runs on CPU in a few minutes.
+
+Run:  PYTHONPATH=src python examples/train_small.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.model import count_params, init_params
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+CFG_100M = ModelConfig(
+    name="phi-mini-100m", family="moe", n_layers=6, d_model=512,
+    n_heads=8, n_kv_heads=4, d_ff=1024, vocab_size=8192,
+    n_experts=8, top_k=2, d_expert=1024, activation="swiglu",
+    source="scaled phi3.5-moe family (hf:microsoft/Phi-3.5-MoE-instruct)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = CFG_100M
+    print(f"{cfg.name}: {count_params(cfg):,} params "
+          f"({cfg.n_experts} experts top-{cfg.top_k})")
+    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(
+        cfg, opt_cfg=AdamWConfig(lr=args.lr, warmup_steps=20,
+                                 total_steps=args.steps)))
+    data = SyntheticLM(cfg, DataConfig(batch=args.batch, seq_len=args.seq))
+    t0, first = time.time(), None
+    for i, b in enumerate(data.batches(args.steps)):
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, m = step(params, opt, b)
+        loss = float(m["loss"])
+        first = first or loss
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={loss:.4f} aux={float(m['aux']):.3f} "
+                  f"({time.time()-t0:.0f}s)")
+    print(f"\nloss {first:.3f} -> {loss:.3f} "
+          f"(uniform floor would be {jnp.log(cfg.vocab_size):.2f})")
+    assert loss < first - 0.5, "expected clear loss descent"
+
+
+if __name__ == "__main__":
+    main()

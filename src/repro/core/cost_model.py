@@ -1,0 +1,461 @@
+"""Theoretical communication / computation cost model (paper §III-B).
+
+Implements Eqs. (1)-(13):
+
+  Eq. 1-2   AR(size, d) = RS + AG, each moving O(size/d) per round
+  Eq. 3     A2A(size, d) = (size/d) * (d-1) rounds  (Pairwise)
+  Eq. 4     compute latency  tau ∝ activated-params * tokens / chips
+  Eq. 5     per-layer comm latency lambda with the DP/EP trade-off
+  Eq. 6     Delta t_svc = l*(tau + lambda) + (d_PP - 1) * P2P
+  Eq. 7     M/M/1 queuing delay W_q
+  Eq. 8     memory constraint (weights + KV cache < HBM)
+  Eq. 9-11  TTFT / ITL / throughput estimators
+  Eq. 12    lambda_EP   (pure-EP MoE block; DeepSeek-V3 deployment)
+  Eq. 13    lambda_mix  (MixServe hybrid TP-EP, RS-A2A-AG)
+
+All sizes are bytes, all times seconds.  The model is intentionally
+alpha-beta style: ``time = latency_rounds * alpha + bytes_on_wire / bw``.
+
+Divergence from the paper (documented in DESIGN.md §2): Eq. 4 is stated as a
+proportionality; we instantiate it with the standard 2*N_active*D FLOP count
+plus the attention O(s^2) term, which preserves the paper's scaling in
+(d_TP, d_EP, d_DP) while giving absolute seconds for the roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+from repro.configs.base import ModelConfig
+from repro.core.topology import ClusterSpec
+
+BYTES = 2  # bf16 activations/weights on the wire
+
+
+# ---------------------------------------------------------------------------
+# Collective primitives (Eqs. 1-3, Table I)
+# ---------------------------------------------------------------------------
+
+def rs_cost(size: float, degree: int, bw: float, alpha: float) -> float:
+    """Reduce-scatter of a ``size``-byte tensor over ``degree`` ranks.
+
+    Table I: communication per round O(size/d), Broadcast algorithm, one
+    full-duplex round per peer -> (d-1) rounds of size/d on the wire.
+    """
+    if degree <= 1:
+        return 0.0
+    return alpha * (degree - 1) + (size / degree) * (degree - 1) / bw
+
+
+def ag_cost(size: float, degree: int, bw: float, alpha: float) -> float:
+    """All-gather; symmetric to RS (Eq. 1: RS == AG)."""
+    return rs_cost(size, degree, bw, alpha)
+
+
+def ar_cost(size: float, degree: int, bw: float, alpha: float) -> float:
+    """All-reduce decomposed as RS + AG (Eq. 2)."""
+    return rs_cost(size, degree, bw, alpha) + ag_cost(size, degree, bw, alpha)
+
+
+def a2a_cost(size: float, degree: int, bw: float, alpha: float) -> float:
+    """Pairwise all-to-all (Eq. 3): d-1 rounds, size/d bytes per round.
+
+    ``size`` is the full per-rank payload (what one rank holds before the
+    exchange); each of the d-1 remote peers receives size/d of it.
+    """
+    if degree <= 1:
+        return 0.0
+    return alpha * (degree - 1) + (size / degree) * (degree - 1) / bw
+
+
+def p2p_cost(size: float, bw: float, alpha: float) -> float:
+    """Point-to-point transfer (PP stage handoff, Eq. 6)."""
+    return alpha + size / bw
+
+
+def tp_link(cluster: ClusterSpec, degree: int) -> tuple[float, float]:
+    """(bw, alpha) for a TP collective of the given degree.
+
+    A TP group wider than one node is bottlenecked by the inter-node links —
+    this is the Fig. 3 observation that AR-based TP 'generally fails to scale
+    effectively across multiple nodes' (TP worse than EP at d=32).
+    """
+    inter = degree > cluster.n_proc
+    return cluster.bw(inter), cluster.latency(inter)
+
+
+# ---------------------------------------------------------------------------
+# Parallel strategy
+# ---------------------------------------------------------------------------
+
+# "fused"   = RS-A2A-AG with async intra/inter overlap (the paper's Alg. 1-2)
+# "sync"    = RS-A2A-AG executed back-to-back (Fig. 12 sync ablation)
+# "unfused" = AR at full width, then full-volume A2A (Tutel-style baseline)
+CommAlgo = Literal["fused", "sync", "unfused"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Strategy:
+    """A per-Decoder-layer parallel strategy (paper §III-B1 grammar).
+
+    grammar:  strategy -> Decoder [| PP=degree]
+              Decoder  -> Attention, MoE
+              block    -> intra-node + inter-node | parallel
+              parallel -> TP | EP (DP) = degree   (degree = 2^k)
+
+    ``attn_tp``/``attn_dp``: attention block TP (intra) x DP (inter) degrees.
+    ``moe_tp``/``moe_ep``:   MoE block TP (intra) x EP (inter) degrees.
+    Pure strategies are expressed by setting the other degree to 1 (e.g. pure
+    EP is moe_tp=1, moe_ep=n_devices).
+    """
+
+    attn_tp: int = 1
+    attn_dp: int = 1
+    moe_tp: int = 1
+    moe_ep: int = 1
+    d_pp: int = 1
+    comm_algo: CommAlgo = "fused"
+    # True when the moe_ep groups span nodes (the usual case we optimize).
+    ep_inter_node: bool = True
+
+    @property
+    def devices_per_pp_stage(self) -> int:
+        return self.attn_tp * self.attn_dp
+
+    @property
+    def n_devices(self) -> int:
+        return self.devices_per_pp_stage * self.d_pp
+
+    def validate(self) -> None:
+        if self.attn_tp * self.attn_dp != self.moe_tp * self.moe_ep:
+            raise ValueError(
+                f"attention degrees ({self.attn_tp}x{self.attn_dp}) and MoE "
+                f"degrees ({self.moe_tp}x{self.moe_ep}) must cover the same "
+                "device set within a PP stage")
+        for d in (self.attn_tp, self.attn_dp, self.moe_tp, self.moe_ep, self.d_pp):
+            if d < 1 or (d & (d - 1)):
+                raise ValueError(f"degrees must be powers of two, got {self}")
+
+    def describe(self) -> str:
+        parts = [f"TP={self.attn_tp} + DP={self.attn_dp}"]
+        if self.moe_tp > 1:
+            parts.append(f"TP={self.moe_tp} + EP={self.moe_ep}")
+        else:
+            parts.append(f"EP={self.moe_ep}")
+        s = ", ".join(parts)
+        if self.d_pp > 1:
+            s += f" [PP={self.d_pp}]"
+        return s + f" ({self.comm_algo})"
+
+
+# ---------------------------------------------------------------------------
+# Workload
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    batch: int          # global batch (requests in flight)
+    seq_len: int        # tokens processed this step per request (prefill: L_in, decode: 1)
+    kv_len: int = 0     # KV cache length (decode); 0 -> seq_len
+    arrival_rate: float = 0.0  # requests/s for W_q (Eq. 7)
+
+    @property
+    def context(self) -> int:
+        return self.kv_len or self.seq_len
+
+
+# ---------------------------------------------------------------------------
+# Eq. 4: computation latency per rank
+# ---------------------------------------------------------------------------
+
+MFU = 0.5  # assumed achievable fraction of peak in steady state
+GEMM_RAMP_TOKENS = 64  # per-expert batch at which expert GEMMs hit 50% eff
+
+
+def compute_latency(model: ModelConfig, strat: Strategy, work: Workload,
+                    cluster: ClusterSpec) -> float:
+    """tau(d_TP, d_EP, d_DP): per-rank per-layer compute latency (Eq. 4).
+
+    Matmul FLOPs = 2 * params_active_per_layer * tokens_per_rank, sharded by
+    d_TP (attention+shared) and d_TP*d_EP (routed experts); plus the
+    attention score/value FLOPs 4 * tokens * ctx * n_heads * head_dim / d_TP.
+    """
+    tokens_per_rank = work.batch * work.seq_len / strat.attn_dp
+
+    attn_p = model.attn_params_per_layer()
+    attn_flops = 2 * attn_p * tokens_per_rank / strat.attn_tp
+    if model.attention != "none":
+        attn_flops += (4 * tokens_per_rank * work.context
+                       * model.n_heads * model.head_dim / strat.attn_tp)
+
+    if model.is_moe:
+        # Routed expert FLOPs per chip (Eq. 4): balanced routing spreads the
+        # global token*top_k work over ALL chips of the stage regardless of
+        # how (moe_tp, moe_ep, replica groups) tile them — replication under
+        # d_DP > d_EP copies WEIGHTS, not work; dropping under d_DP < d_EP
+        # removes the redundant copies before compute (Fig. 6c).
+        global_tokens = work.batch * work.seq_len
+        n_stage = strat.attn_tp * strat.attn_dp
+        ffn_flops = 2 * model.expert_params() * model.top_k * global_tokens \
+            / n_stage
+        shared = 2 * model.n_shared_experts * model.expert_params() * tokens_per_rank
+        ffn_flops += shared / strat.moe_tp
+        # Expert-GEMM efficiency ramps with per-expert-instance batch (the
+        # DeepSeek-V3 argument for wide EP: "each expert processes a
+        # sufficiently large batch").  Replicating experts (d_DP > d_EP)
+        # halves per-instance tokens and costs efficiency.
+        instances = max(1, n_stage // (strat.moe_ep * strat.moe_tp))
+        tok_per_expert = global_tokens * model.top_k / (
+            max(model.n_experts, 1) * instances)
+        gemm_eff = tok_per_expert / (tok_per_expert + GEMM_RAMP_TOKENS)
+        ffn_flops = ffn_flops / max(gemm_eff, 1e-2)
+    else:
+        ffn_flops = 2 * model.dense_ffn_params_per_layer() * tokens_per_rank / strat.attn_tp
+
+    t_flops = (attn_flops + ffn_flops) / (cluster.peak_flops * MFU)
+
+    # ---- memory-bound term (dominates decode): weight + KV-cache reads ----
+    w_bytes = model.attn_params_per_layer() / strat.attn_tp * BYTES
+    if model.is_moe:
+        global_tokens = work.batch * work.seq_len
+        local_experts = max(1, model.n_experts // strat.moe_ep)
+        touched = min(local_experts,
+                      max(1.0, global_tokens * model.top_k
+                          / (strat.attn_dp * strat.moe_ep)))
+        w_bytes += (touched + model.n_shared_experts) \
+            * model.expert_params() / strat.moe_tp * BYTES
+    else:
+        w_bytes += model.dense_ffn_params_per_layer() / strat.attn_tp * BYTES
+    kv_bytes = (work.batch / strat.attn_dp) * work.context \
+        * model.kv_bytes_per_token_per_layer()
+    t_mem = (w_bytes + kv_bytes) / cluster.hbm_bw
+
+    return max(t_flops, t_mem)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 5 / 12 / 13: communication latency per rank per layer
+# ---------------------------------------------------------------------------
+
+def _moe_lambda_hybrid(model: ModelConfig, strat: Strategy, work: Workload,
+                       cluster: ClusterSpec) -> float:
+    """MoE-block comm under hybrid TP-EP (Eq. 13), fused or unfused.
+
+    unfused:  AR(bsh, tp)  then  2 x A2A(bshk, ep)   at FULL hidden width
+    fused:    RS-A2A-AG — the A2A operates on hidden states already sharded
+              1/tp, so inter-node volume drops by 1/tp (Eq. 13); with
+              ``comm_algo == 'fused'`` intra- and inter-node rounds overlap
+              (Fig. 9) so the wall time is max(intra, inter) + epilogue.
+    """
+    bw_intra, a_intra = tp_link(cluster, strat.moe_tp)
+    inter = strat.ep_inter_node
+    bw_ep = cluster.bw(inter)
+    a_ep = cluster.latency(inter)
+    # d_DP > d_EP: the dDP/dEP parallel A2A groups (Fig. 6b) CONTEND for the
+    # same inter-node links — per-group bandwidth divides accordingly.
+    if inter:
+        n_groups = max(1, strat.attn_dp // max(strat.moe_ep, 1))
+        bw_ep = bw_ep / n_groups
+
+    # Intra-node fabric contention: moe_tp < n_proc means several MoE TP
+    # groups share one node's NVLink/HCCS fabric.
+    if strat.moe_tp < cluster.n_proc:
+        bw_intra = bw_intra * strat.moe_tp / cluster.n_proc
+
+    # Fig. 6c: d_DP < d_EP drops the redundant hidden-state copies — the A2A
+    # carries b/d_EP tokens over d_DP-device groups (Eq. 5 else-branch).
+    tokens = work.batch * work.seq_len / max(strat.attn_dp, strat.moe_ep)
+    ep_degree = min(strat.moe_ep, strat.attn_dp) if strat.attn_dp > 1 \
+        else strat.moe_ep
+    size = tokens * model.d_model * BYTES          # hidden states per DP group
+    k = max(1, model.top_k)
+
+    if strat.moe_ep <= 1:
+        # pure TP MoE block: just the AR (Eq. 12 degenerate)
+        return ar_cost(size, strat.moe_tp, bw_intra, a_intra)
+
+    if strat.moe_tp <= 1:
+        # pure EP (vLLM DP+EP): "EP is essentially equivalent to DP among the
+        # experts" — every device is its own token group, so the A2A runs at
+        # degree d_EP on bs/d_EP tokens per rank (no Fig. 6c dropping).
+        tok_ep = work.batch * work.seq_len / strat.moe_ep
+        size_ep = tok_ep * model.d_model * BYTES
+        return 2 * a2a_cost(size_ep * k, strat.moe_ep, bw_ep, a_ep)
+
+    if strat.comm_algo == "unfused":
+        # Tutel-style: synchronize TP at full width first, then full-volume
+        # A2A across the EP group (Eq. 12's structure inside a TP-EP layout).
+        return (ar_cost(size, strat.moe_tp, bw_intra, a_intra)
+                + 2 * a2a_cost(size * k, ep_degree, bw_ep, a_ep))
+
+    # ---- fused RS-A2A-AG (Eq. 13) ----
+    # Hidden states ride the inter-node wire 1/tp-sharded, so the A2A volume
+    # drops by 1/moe_tp relative to Eq. 12.
+    a2a_sharded = a2a_cost(size * k / strat.moe_tp, ep_degree, bw_ep, a_ep)
+    # dispatch epilogue: AG the received 1/tp-wide token shards back to full
+    # width inside the node (Alg. 2); combine prologue: RS the partial expert
+    # outputs (Alg. 1); combine epilogue: AG the weighted sum.
+    ag_disp = ag_cost(size * k, strat.moe_tp, bw_intra, a_intra)
+    rs_comb = rs_cost(size * k, strat.moe_tp, bw_intra, a_intra)
+    ag_comb = ag_cost(size, strat.moe_tp, bw_intra, a_intra)
+    if strat.comm_algo == "fused":
+        # Fig. 9: pairwise inter-node rounds overlap the intra-node RS/AG
+        # rounds; wall time ~ max(inter, intra) per phase + epilogue.
+        dispatch = max(a2a_sharded, ag_disp)
+        combine = max(a2a_sharded, rs_comb) + ag_comb
+    else:
+        dispatch = a2a_sharded + ag_disp
+        combine = rs_comb + a2a_sharded + ag_comb
+    return dispatch + combine
+
+
+def comm_latency(model: ModelConfig, strat: Strategy, work: Workload,
+                 cluster: ClusterSpec) -> float:
+    """lambda(d_TP, d_EP, d_DP): per-rank per-layer comm latency (Eq. 5)."""
+    bw_intra, a_intra = tp_link(cluster, strat.attn_tp)
+    # fabric contention: attn_tp < n_proc -> several attention TP groups
+    # share one node's NVLink/HCCS fabric
+    if 1 < strat.attn_tp < cluster.n_proc:
+        bw_intra = bw_intra * strat.attn_tp / cluster.n_proc
+
+    tokens = work.batch * work.seq_len / strat.attn_dp
+    size = tokens * model.d_model * BYTES
+
+    # Attention block TP: 2 ARs per layer (attn out + [dense] ffn out share
+    # the residual stream; Eq. 5 counts 2 x AR).
+    lam = 2 * ar_cost(size, strat.attn_tp, bw_intra, a_intra) \
+        if strat.attn_tp > 1 else 0.0
+
+    if model.is_moe:
+        lam += _moe_lambda_hybrid(model, strat, work, cluster)
+        if strat.attn_tp != strat.moe_tp and strat.moe_tp > 1:
+            # layout resync between the attention TP group and the MoE TP
+            # group (hidden states re-gathered on entry + exit)
+            lam += 2 * ag_cost(size, max(strat.attn_tp, strat.moe_tp),
+                               cluster.intra_node_bw, a_intra)
+    # dense models: the second AR above already covers the FFN TP sync.
+    return lam
+
+
+def lambda_pure_ep(model: ModelConfig, strat: Strategy, work: Workload,
+                   cluster: ClusterSpec) -> float:
+    """Eq. 12: DeepSeek-V3-style deployment, MoE block fully EP."""
+    tokens = work.batch * work.seq_len / strat.attn_dp
+    size = tokens * model.d_model * BYTES
+    k = max(1, model.top_k)
+    return (ar_cost(size, strat.attn_tp, cluster.intra_node_bw,
+                    cluster.intra_node_latency)
+            + 2 * a2a_cost(size * k, strat.moe_ep,
+                           cluster.bw(True), cluster.latency(True)))
+
+
+# ---------------------------------------------------------------------------
+# Eqs. 6-11: service latency, queuing, indicators
+# ---------------------------------------------------------------------------
+
+def service_latency(model: ModelConfig, strat: Strategy, work: Workload,
+                    cluster: ClusterSpec) -> float:
+    """Delta t_svc (Eq. 6)."""
+    tau = compute_latency(model, strat, work, cluster)
+    lam = comm_latency(model, strat, work, cluster)
+    t = model.n_layers * (tau + lam)
+    if strat.d_pp > 1:
+        tokens = work.batch * work.seq_len / strat.attn_dp
+        size = tokens * model.d_model * BYTES
+        t += (strat.d_pp - 1) * p2p_cost(size, cluster.bw(True),
+                                         cluster.latency(True))
+    return t
+
+
+def queuing_delay(service_time: float, arrival_rate: float) -> float:
+    """M/M/1 W_q (Eq. 7).  Returns inf when unstable (rho >= 1)."""
+    if arrival_rate <= 0:
+        return 0.0
+    mu = 1.0 / service_time
+    if arrival_rate >= mu:
+        return math.inf
+    return arrival_rate / (mu * (mu - arrival_rate))
+
+
+@dataclasses.dataclass(frozen=True)
+class Indicators:
+    ttft: float
+    itl: float
+    throughput: float  # tokens/s (Eq. 11)
+    w_q: float
+    stable: bool
+
+
+def indicators(model: ModelConfig, strat: Strategy, cluster: ClusterSpec, *,
+               batch: int, l_in: int, l_out: int,
+               arrival_rate: float = 0.0) -> Indicators:
+    """TTFT (Eq. 9), ITL (Eq. 10), throughput Theta (Eq. 11).
+
+    The M/M/1 service rate is batch-level: one continuous-batching "wave"
+    serves ``batch`` requests in (prefill + l_out decode steps).  When the
+    arrival rate exceeds that (rho >= 1) the system runs SATURATED — we then
+    report W_q = 0 and the saturation throughput (what a loadgen measures on
+    an overdriven server, which is how Fig. 10's throughput is collected),
+    flagging ``stable=False``.
+    """
+    prf = service_latency(model, strat,
+                          Workload(batch=batch, seq_len=l_in), cluster)
+    dec = service_latency(model, strat,
+                          Workload(batch=batch, seq_len=1, kv_len=l_in + l_out),
+                          cluster)
+    t_request = (prf + l_out * dec) / max(batch, 1)
+    w_q = queuing_delay(t_request, arrival_rate)
+    stable = math.isfinite(w_q)
+    if not stable:
+        w_q = 0.0
+    ttft = w_q + prf
+    denom = w_q + prf + l_out * dec
+    thr = batch * (l_in + l_out) / denom
+    return Indicators(ttft=ttft, itl=dec, throughput=thr, w_q=w_q,
+                      stable=stable)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 8: memory constraint
+# ---------------------------------------------------------------------------
+
+def memory_per_device(model: ModelConfig, strat: Strategy, *,
+                      batch: int, seq_len: int,
+                      bytes_per_el: int = BYTES) -> float:
+    """LHS of Eq. 8: weights + KV cache bytes on one chip."""
+    attn_total = model.n_layers * model.attn_params_per_layer()
+    n_moe_layers = (model.n_layers - model.first_dense_layers) if model.is_moe else 0
+    n_dense = model.n_layers - n_moe_layers
+    dense_total = n_dense * model.dense_ffn_params_per_layer()
+    moe_routed = n_moe_layers * model.n_experts * model.expert_params()
+    moe_shared = n_moe_layers * (model.n_shared_experts * model.expert_params()
+                                 + model.d_model * model.n_experts)
+    embed = model.d_model * model.vocab_size * (1 if model.tie_embeddings else 2)
+
+    w = (attn_total + dense_total + moe_shared) / strat.attn_tp
+    w += moe_routed / (strat.moe_ep * strat.moe_tp)
+    w += embed / strat.attn_tp
+    w /= strat.d_pp
+
+    kv = (batch / strat.attn_dp) * seq_len * model.n_layers \
+        * model.kv_bytes_per_token_per_layer(bytes_per_el) / strat.d_pp
+    # MQA/GQA KV is replicated when n_kv_heads < attn_tp; approximate by not
+    # dividing KV by TP (conservative — vLLM does the same for MQA).
+    return (w * bytes_per_el) + kv
+
+
+def fits_memory(model: ModelConfig, strat: Strategy, cluster: ClusterSpec, *,
+                batch: int, seq_len: int) -> bool:
+    return memory_per_device(model, strat, batch=batch, seq_len=seq_len) \
+        < cluster.hbm_bytes
+
+
+__all__ = [
+    "BYTES", "MFU", "Strategy", "Workload", "Indicators",
+    "rs_cost", "ag_cost", "ar_cost", "a2a_cost", "p2p_cost",
+    "compute_latency", "comm_latency", "lambda_pure_ep",
+    "service_latency", "queuing_delay", "indicators",
+    "memory_per_device", "fits_memory",
+]

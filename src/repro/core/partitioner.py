@@ -1,0 +1,254 @@
+"""Hybrid TP-EP partitioner (paper §III-C).
+
+Maps *logical* tensor axes (declared by the models) onto *mesh* axes according
+to the selected parallel strategy.  This is the online-stage "weight loader &
+partitioner": given the analyzer's strategy it emits ``PartitionSpec``s for
+every parameter and activation, which the launcher feeds to ``jax.jit`` as
+``in_shardings`` / sharding constraints.
+
+Mesh conventions (launch/mesh.py):
+    single-pod: (data=16, model=16)            axes ("data", "model")
+    multi-pod : (pod=2, data=16, model=16)     axes ("pod", "data", "model")
+
+Strategy mapping (MixServe hybrid):
+    "model" axis  = intra-node TP   (attention heads, FFN cols, vocab)
+    "data"  axis  = inter-node EP for MoE block / DP for attention block
+    "pod"   axis  = DCN-level DP (attention) and EP-group replication
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.core.cost_model import Strategy
+
+# Logical axis vocabulary used by the models.
+#   vocab, embed, heads, kv_heads, head_dim, qk (mla latents), ffn, expert,
+#   batch, seq, layers
+MeshAxes = Optional[tuple]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Logical-axis -> mesh-axis rules + the mesh itself.
+
+    ``mesh=None`` disables all constraints (single-device smoke tests).
+    """
+
+    mesh: Optional[Mesh] = None
+    rules: dict = dataclasses.field(default_factory=dict)
+    # mesh axis-name groups used by the fused comm algorithms:
+    tp_axes: tuple = ()        # "intra-node" TP group
+    ep_axes: tuple = ()        # "inter-node" EP group (MoE)
+    dp_axes: tuple = ()        # attention DP group (includes pod)
+    comm_algo: str = "fused"   # fused | sync | unfused
+
+    @property
+    def enabled(self) -> bool:
+        return self.mesh is not None
+
+    def axis_size(self, axes: tuple) -> int:
+        if not self.enabled or not axes:
+            return 1
+        s = 1
+        for a in axes:
+            s *= self.mesh.shape[a]
+        return s
+
+    @property
+    def tp(self) -> int:
+        return self.axis_size(self.tp_axes)
+
+    @property
+    def ep(self) -> int:
+        return self.axis_size(self.ep_axes)
+
+    @property
+    def dp(self) -> int:
+        return self.axis_size(self.dp_axes)
+
+    # ------------------------------------------------------------------
+    def spec(self, logical_axes: tuple) -> PartitionSpec:
+        """PartitionSpec for a tensor with the given logical axes."""
+        if not self.enabled:
+            return PartitionSpec()
+        out, used = [], set()
+        for ax in logical_axes:
+            m = self.rules.get(ax)
+            if m is None:
+                out.append(None)
+                continue
+            m = tuple(x for x in (m if isinstance(m, tuple) else (m,))
+                      if x not in used)
+            used.update(m)
+            out.append(m if len(m) > 1 else (m[0] if m else None))
+        while out and out[-1] is None:
+            out.pop()
+        return PartitionSpec(*out)
+
+    def spec_for_shape(self, shape: tuple, logical_axes: tuple) -> PartitionSpec:
+        """Divisibility-aware ``spec``: assigns mesh axes dim-by-dim, skipping
+        any that do not divide the dim (instead of uneven padding), which lets
+        a LATER logical axis claim the freed mesh axis.
+
+        This is the fallback chain that keeps small-head models sharded:
+        smollm's 15 query heads cannot take the 16-wide "model" axis, so the
+        ("heads", "head_dim") declaration shards head_dim instead; phi's 8 KV
+        heads likewise fall through to ("kv_heads", "kv_head_dim").
+        """
+        if not self.enabled:
+            return PartitionSpec()
+        axes_seq = tuple(logical_axes) + (None,) * (len(shape)
+                                                    - len(logical_axes))
+        out: list = [None] * len(shape)
+        used: set = set()
+
+        def assign(i, ax, dim):
+            rule = self.rules.get(ax) if ax is not None else None
+            if rule is None:
+                return
+            cand = tuple(a for a in (rule if isinstance(rule, tuple)
+                                     else (rule,)) if a not in used)
+            size = 1
+            for a in cand:
+                size *= self.mesh.shape[a]
+            if cand and dim % size == 0:
+                used.update(cand)
+                out[i] = cand if len(cand) > 1 else cand[0]
+
+        # two passes: the FSDP axes ("layers", "embed") have LOWEST priority
+        # so an expert/batch/vocab axis on the same tensor keeps its mesh
+        # axis; the FSDP axis only claims what is left.
+        low = ("layers", "embed")
+        for i, (dim, ax) in enumerate(zip(shape, axes_seq)):
+            if ax not in low:
+                assign(i, ax, dim)
+        for i, (dim, ax) in enumerate(zip(shape, axes_seq)):
+            if ax in low:
+                assign(i, ax, dim)
+        while out and out[-1] is None:
+            out.pop()
+        return PartitionSpec(*out)
+
+    def sharding(self, logical_axes: tuple) -> Optional[NamedSharding]:
+        if not self.enabled:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical_axes))
+
+    def sharding_for(self, shape: tuple, logical_axes: tuple):
+        if not self.enabled:
+            return None
+        return NamedSharding(self.mesh,
+                             self.spec_for_shape(shape, logical_axes))
+
+    def constrain(self, x, *logical_axes):
+        """with_sharding_constraint when a mesh is active, else identity."""
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh,
+                             self.spec_for_shape(x.shape, logical_axes)))
+
+    def tree_shardings(self, axes_pytree):
+        """Map an axes_tree (from models.param) to NamedShardings."""
+        is_axes = lambda t: isinstance(t, tuple) and all(
+            a is None or isinstance(a, str) for a in t)
+        return jax.tree.map(self.sharding, axes_pytree, is_leaf=is_axes)
+
+    def tree_specs(self, axes_pytree):
+        is_axes = lambda t: isinstance(t, tuple) and all(
+            a is None or isinstance(a, str) for a in t)
+        return jax.tree.map(self.spec, axes_pytree, is_leaf=is_axes)
+
+
+NULL_PLAN = ShardingPlan()
+
+
+def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
+              comm_algo: str = "fused", *, fsdp: bool = False,
+              sp: bool = True) -> ShardingPlan:
+    """Build the ShardingPlan for a named strategy on a given mesh.
+
+    ``strategy`` ∈ {"mixserve", "pure_tp", "pure_ep", "dp_ep"} or a
+    ``Strategy`` from the analyzer (mapped onto the closest mesh layout).
+
+    ``fsdp=True`` (training only): parameter/optimizer tensors shard their
+    embed axis over the data axis (ZeRO-3 style), gathered on use.  Lowest
+    priority — an expert/batch axis on the same tensor keeps the data axis.
+    Never used for serving (decode would re-gather weights every token).
+
+    ``sp=False`` disables the Megatron-SP residual-stream sharding
+    ("seq_resid"): small-dense models fit without it and save the per-layer
+    AG/RS transitions it costs (§Perf pair-3 iteration).
+    """
+    if mesh is None:
+        return NULL_PLAN
+    names = mesh.axis_names
+    pod = ("pod",) if "pod" in names else ()
+    data = ("data",)
+    model = ("model",)
+
+    if isinstance(strategy, Strategy):
+        # Analyzer output: map degrees onto the canonical axes.  moe_tp>1
+        # selects the hybrid layout; moe_tp==1 the pure-EP layout.
+        strategy = "mixserve" if strategy.moe_tp > 1 else "dp_ep"
+
+    if strategy == "mixserve":
+        # Attention: TP over "model", DP over pod+data.
+        # MoE: TP over "model", EP over "data", replicated over "pod"
+        # (pod rides DCN — the analyzer never puts A2A there).
+        return ShardingPlan(
+            mesh=mesh,
+            rules={
+                "vocab": model, "heads": model, "ffn": model,
+                "expert": data, "batch": pod + data,
+                "kv_heads": model, "qk": model,
+                "embed": data if fsdp else None,
+                "head_dim": model, "kv_head_dim": model,
+                "seq": None, "layers": None, "expert_ffn": model,
+                "kv_seq": model, "seq_resid": model if sp else None,
+            },
+            tp_axes=model, ep_axes=data, dp_axes=pod + data,
+            comm_algo=comm_algo,
+        )
+    if strategy == "pure_tp":
+        # vLLM TP[+PP]-style: everything TP over model axis; data/pod = DP.
+        return ShardingPlan(
+            mesh=mesh,
+            rules={
+                "vocab": model, "heads": model, "ffn": model,
+                "expert": None, "expert_ffn": model,
+                "batch": pod + data, "kv_heads": model,
+                "head_dim": model, "kv_head_dim": model,
+                "qk": model, "embed": data if fsdp else None, "seq": None,
+                "layers": None,
+                "kv_seq": model, "seq_resid": model if sp else None,
+            },
+            tp_axes=model, ep_axes=(), dp_axes=pod + data,
+            comm_algo="unfused",
+        )
+    if strategy in ("pure_ep", "dp_ep"):
+        # vLLM DP+EP-style: attention TP over model, experts sharded over
+        # data+model jointly (EP = n_devices per pod), full-width A2A.
+        return ShardingPlan(
+            mesh=mesh,
+            rules={
+                "vocab": model, "heads": model, "ffn": model,
+                "expert": data + model, "expert_ffn": None,
+                "batch": pod + data, "kv_heads": model,
+                "head_dim": model, "kv_head_dim": model,
+                "qk": model, "embed": data if fsdp else None, "seq": None,
+                "layers": None,
+                "kv_seq": model, "seq_resid": model if sp else None,
+            },
+            tp_axes=model, ep_axes=data + model, dp_axes=pod + data,
+            comm_algo="unfused",
+        )
+    raise KeyError(f"unknown strategy {strategy!r}")
+
+
+__all__ = ["ShardingPlan", "NULL_PLAN", "make_plan"]

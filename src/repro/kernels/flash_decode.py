@@ -1,0 +1,95 @@
+"""Flash-decode: single-token attention over a long KV cache (Pallas TPU).
+
+Grid (batch, kv_head, S-tiles); the S dimension is the innermost sequential
+axis so the online-softmax state (m, l, acc) lives in VMEM scratch across
+tiles.  Per tile: one (g, bs) MXU dot for scores + one (bs, hd) dot for
+values, masked by the per-request cache length.
+
+This is the TPU-native version of the decode path that
+``models.layers.decode_attention`` runs in pure JAX (and that the dry-run
+shards kv_seq-over-model); the kernel is the per-shard compute body.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, bs: int, scale: float):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (g, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (g, bs)
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))   # (g, 1)
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def flash_decode(q, k, v, lengths, *, bs: int = 512, interpret: bool = False):
+    """q (B, nq, hd); k/v (B, S, nkv, hd); lengths (B,) -> (B, nq, hd)."""
+    b, nq, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    bs = min(bs, skv)
+    ps = (-skv) % bs
+    if ps:
+        k = jnp.pad(k, ((0, 0), (0, ps), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, ps), (0, 0), (0, 0)))
+    sp = skv + ps
+
+    qg = q.reshape(b, nkv, g, hd)
+    # (B, S, nkv, hd) -> (B, nkv, S, hd) handled via BlockSpec index map on
+    # the padded arrays directly (avoids a transpose copy in HBM).
+    out = pl.pallas_call(
+        functools.partial(_flash_decode_kernel, bs=bs, scale=hd ** -0.5),
+        grid=(b, nkv, sp // bs),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ji: (bi,)),
+            pl.BlockSpec((1, 1, g, hd), lambda bi, hi, ji: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda bi, hi, ji: (bi, ji, hi, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda bi, hi, ji: (bi, ji, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda bi, hi, ji: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, hd), jnp.float32)],
+        interpret=interpret,
+    )(lengths, qg, k, v)
+    return out.reshape(b, nq, hd)
+
+
+__all__ = ["flash_decode"]

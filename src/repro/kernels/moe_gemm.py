@@ -1,0 +1,68 @@
+"""Grouped expert GEMM — the MoE hot-spot — as a Pallas TPU kernel.
+
+One (expert, C-tile, D-tile) output block per grid cell, accumulating over
+the contraction (H) dimension in a VMEM f32 scratch.  Block shapes default to
+MXU-aligned 128x128 tiles; the innermost grid dimension walks H so the
+accumulator lives across sequential grid steps (standard TPU matmul-pipeline
+structure: HBM->VMEM streaming of x/w tiles, MXU dot per step).
+
+TPU adaptation (DESIGN.md §2): the paper's NPU/GPU expert GEMMs become one
+MXU-tiled grouped GEMM over the (E, capacity, H) dispatch buffers that the
+fused AR-A2A communication delivers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _moe_gemm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(3) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[0], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bc", "bd", "bh", "interpret"))
+def moe_gemm(x, w, *, bc: int = 128, bd: int = 128, bh: int = 128,
+             interpret: bool = False):
+    """x (E, C, H) @ w (E, H, D) -> (E, C, D), per-expert batched."""
+    e, c, h = x.shape
+    d = w.shape[-1]
+    bc, bh, bd = min(bc, c), min(bh, h), min(bd, d)
+    pc, ph, pd = (-c) % bc, (-h) % bh, (-d) % bd
+    if pc or ph:
+        x = jnp.pad(x, ((0, 0), (0, pc), (0, ph)))
+    if ph or pd:
+        w = jnp.pad(w, ((0, 0), (0, ph), (0, pd)))
+    cp, hp, dp = c + pc, h + ph, d + pd
+
+    out = pl.pallas_call(
+        _moe_gemm_kernel,
+        grid=(e, cp // bc, dp // bd, hp // bh),
+        in_specs=[
+            pl.BlockSpec((1, bc, bh), lambda ei, ci, di, hi: (ei, ci, hi)),
+            pl.BlockSpec((1, bh, bd), lambda ei, ci, di, hi: (ei, hi, di)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bd),
+                               lambda ei, ci, di, hi: (ei, ci, di)),
+        out_shape=jax.ShapeDtypeStruct((e, cp, dp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bd), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return out[:, :c, :d]
+
+
+__all__ = ["moe_gemm"]

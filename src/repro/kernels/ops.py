@@ -1,0 +1,43 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the kernels lower natively; elsewhere (this CPU container)
+they execute in interpret mode, which runs the kernel body in Python and is
+what the allclose sweep tests validate against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.moe_gemm import moe_gemm as _moe_gemm
+from repro.kernels.topk_gate import topk_gate as _topk_gate
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def moe_gemm(x, w, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _moe_gemm(x, w, **kw)
+
+
+def topk_gate(logits, k: int, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _topk_gate(logits, k, **kw)
+
+
+def flash_decode(q, k, v, lengths, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _flash_decode(q, k, v, lengths, **kw)
+
+
+# oracles re-exported for benches/tests
+moe_gemm_ref = ref.moe_gemm_ref
+topk_gate_ref = ref.topk_gate_ref
+flash_decode_ref = ref.flash_decode_ref
+
+__all__ = ["moe_gemm", "topk_gate", "flash_decode",
+           "moe_gemm_ref", "topk_gate_ref", "flash_decode_ref"]

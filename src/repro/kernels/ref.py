@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gemm_ref(x, w):
+    """Grouped expert GEMM.  x (E, C, H) @ w (E, H, D) -> (E, C, D)."""
+    return jnp.einsum("ech,ehd->ecd", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def topk_gate_ref(logits, k: int, renorm: bool = True):
+    """Fused softmax + top-k router gate.
+
+    logits (T, E) -> (weights (T, k) f32, idx (T, k) i32).
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    if renorm:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return top_p, top_i.astype(jnp.int32)
+
+
+def flash_decode_ref(q, k, v, lengths):
+    """Decode attention.  q (B, nq, hd); k/v (B, S, nkv, hd); lengths (B,).
+
+    Returns (B, nq, hd).  Causal is implied by the length mask (the query is
+    the token at position lengths-1, so exactly `lengths` slots are visible).
+    """
+    b, nq, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    qg = q.reshape(b, nkv, g, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(skv)[None] < lengths[:, None]          # (b, s)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, nq, hd).astype(q.dtype)
+
+
+__all__ = ["moe_gemm_ref", "topk_gate_ref", "flash_decode_ref"]

@@ -1,0 +1,68 @@
+"""Fused softmax + top-k router gate as a Pallas TPU kernel.
+
+The router is tiny FLOP-wise but sits on the critical path of every MoE
+layer (its output gates the dispatch A2A).  Fusing softmax + iterative
+argmax top-k into one VMEM-resident kernel avoids materializing the (T, E)
+probability tensor in HBM between the two ops.
+
+Top-k is unrolled argmax-and-mask (k is 2..8 for all assigned configs), each
+iteration a VPU max-reduction over the expert axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_gate_kernel(logits_ref, w_ref, i_ref, *, k: int, renorm: bool):
+    x = logits_ref[...].astype(jnp.float32)          # (bt, E)
+    e = x.shape[-1]
+    x = x - jax.lax.stop_gradient(x.max(-1, keepdims=True))
+    ex = jnp.exp(x)
+    probs = ex / ex.sum(-1, keepdims=True)
+
+    p = probs
+    ids = jnp.broadcast_to(jnp.arange(e, dtype=jnp.int32)[None], p.shape)
+    ws, iis = [], []
+    for _ in range(k):
+        top = p.max(-1)
+        idx = jnp.argmax(p, -1).astype(jnp.int32)
+        ws.append(top)
+        iis.append(idx)
+        p = jnp.where(ids == idx[:, None], -1.0, p)
+    w = jnp.stack(ws, -1)
+    if renorm:
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    w_ref[...] = w
+    i_ref[...] = jnp.stack(iis, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "renorm", "bt", "interpret"))
+def topk_gate(logits, k: int, *, renorm: bool = True, bt: int = 256,
+              interpret: bool = False):
+    """logits (T, E) -> (weights (T, k) f32, idx (T, k) i32)."""
+    t, e = logits.shape
+    bt = min(bt, t)
+    pt = (-t) % bt
+    if pt:
+        logits = jnp.pad(logits, ((0, pt), (0, 0)))
+    tp = t + pt
+
+    w, i = pl.pallas_call(
+        functools.partial(_topk_gate_kernel, k=k, renorm=renorm),
+        grid=(tp // bt,),
+        in_specs=[pl.BlockSpec((bt, e), lambda ti: (ti, 0))],
+        out_specs=[pl.BlockSpec((bt, k), lambda ti: (ti, 0)),
+                   pl.BlockSpec((bt, k), lambda ti: (ti, 0))],
+        out_shape=[jax.ShapeDtypeStruct((tp, k), jnp.float32),
+                   jax.ShapeDtypeStruct((tp, k), jnp.int32)],
+        interpret=interpret,
+    )(logits)
+    return w[:t], i[:t]
+
+
+__all__ = ["topk_gate"]

@@ -1,0 +1,52 @@
+"""Automatic strategy -> plan wiring (the full MixServe loop).
+
+``auto_plan`` runs the offline analyzer for the target mesh's cluster spec,
+takes the best feasible strategy, and maps it onto a ShardingPlan — the
+"--strategy auto" path of the launcher/dry-run.  This is the piece that
+makes the system *automatic* end to end: model config in, mesh in, sharded
+program out.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import analyzer
+from repro.core.partitioner import ShardingPlan, make_plan
+from repro.core.topology import TPU_V5E_MULTIPOD, TPU_V5E_POD
+
+
+def cluster_for_mesh(mesh):
+    return TPU_V5E_MULTIPOD if mesh.devices.size > 256 else TPU_V5E_POD
+
+
+def auto_plan(cfg: ModelConfig, mesh, shape: InputShape, *,
+              fsdp: bool = False, sp: bool = True,
+              objective: str = "balanced") -> tuple:
+    """(plan, report): analyzer-selected ShardingPlan for (model, mesh, shape).
+
+    The analyzer enumerates the §III-B1 grammar on the mesh's cluster spec;
+    the winning strategy maps to the hybrid ("mixserve") layout when its MoE
+    block uses TP>1, else to pure-EP — with a divisibility guard: pure-EP
+    needs n_experts % n_devices == 0, otherwise the hybrid layout is the
+    only implementable choice on this mesh (the deepseek-v2 case: 160
+    experts on 256 chips).
+    """
+    cluster = cluster_for_mesh(mesh)
+    if shape.kind == "train":
+        batch, l_in, l_out = shape.global_batch, shape.seq_len, 1
+    elif shape.kind == "prefill":
+        batch, l_in, l_out = shape.global_batch, shape.seq_len, 1
+    else:
+        batch, l_in, l_out = shape.global_batch, shape.seq_len, 256
+    rep = analyzer.select(cfg, cluster, batch=batch, l_in=min(l_in, 8192),
+                          l_out=l_out, objective=objective)
+    best = rep.best.strategy
+
+    name = "mixserve" if best.moe_tp > 1 or not cfg.is_moe else "dp_ep"
+    if name == "dp_ep" and cfg.n_experts % mesh.devices.size != 0:
+        name = "mixserve"
+    plan = make_plan(name, mesh, comm_algo=best.comm_algo, fsdp=fsdp, sp=sp)
+    return plan, rep
+
+
+__all__ = ["auto_plan", "cluster_for_mesh"]

@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST precede any other import (jax locks the device count
+on first init).  512 placeholder CPU devices let ``jax.make_mesh`` build the
+production meshes:  (16,16) single pod and (2,16,16) two pods.
+
+For every combination this prints/records:
+  - compiled.memory_analysis()   (proves the sharded program fits)
+  - compiled.cost_analysis()     (FLOPs / bytes for the roofline)
+  - parsed collective bytes      (the roofline collective term)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-v2-236b \
+      --shape decode_32k --mesh single --strategy mixserve
+  (the --all driver spawns one subprocess per combo for memory isolation)
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+# per-arch grad-accum depth for train_4k (deepseek-v2's 236B needs the
+# deepest split; see EXPERIMENTS.md §Perf iteration log)
+TRAIN_MICROBATCHES = {"deepseek-v2-236b": 16}
+
+# archs whose TRAIN runs skip the Megatron-SP residual sharding: with
+# cleanly head-parallel attention (heads % 16 == 0) and small activations,
+# the SP scatter/gather churn costs more collectives than it saves memory
+# (minitron 3.9x with SP on; smollm is the opposite, 2.8x WORSE with SP
+# off — its 15 heads aren't head-parallel.  EXPERIMENTS §Perf pair-3)
+TRAIN_SP_OFF = {"minitron-8b"}
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, strategy: str,
+            out_dir: str, save_hlo: bool = False,
+            microbatches: int = 0, prefill_chunks: int = 8,
+            sp: bool = True, fsdp: bool = True) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    import repro.configs as C
+    from repro.configs.base import INPUT_SHAPES
+    from repro.core.partitioner import make_plan
+    from repro.launch.hlo_analysis import summarize_costs
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import input_specs
+    from repro.models.model import forward
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_step import train_step
+
+    cfg = C.get(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if not microbatches:
+        microbatches = TRAIN_MICROBATCHES.get(arch, 8)
+    if not C.shape_supported(cfg, shape):
+        return {"status": "skipped",
+                "reason": "long_500k requires sub-quadratic attention "
+                          "(DESIGN.md §4 shape-skip policy)"}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    if shape.kind == "train" and arch in TRAIN_SP_OFF:
+        sp = False
+    if strategy == "auto":
+        # the full MixServe loop: offline analyzer -> plan
+        from repro.launch.auto import auto_plan
+        plan, _rep = auto_plan(cfg, mesh, shape,
+                               fsdp=(fsdp and shape.kind == "train"), sp=sp)
+    else:
+        plan = make_plan(strategy, mesh,
+                         fsdp=(fsdp and shape.kind == "train"), sp=sp)
+    # grad-accum cannot split below one batch row per DP rank
+    if shape.kind == "train":
+        microbatches = min(microbatches, shape.global_batch // plan.dp)
+    args, shardings = input_specs(cfg, shape, plan)
+
+    if shape.kind == "train":
+        import jax.numpy as _jnp
+        def step(params, opt_state, batch):
+            return train_step(params, opt_state, batch, cfg=cfg, plan=plan,
+                              opt_cfg=AdamWConfig(), remat=True,
+                              microbatches=microbatches,
+                              accum_dtype=_jnp.bfloat16)
+    elif shape.kind == "prefill":
+        # Chunked prefill (Sarathi-style): the 32k prompt streams through in
+        # seq chunks, bounding MoE capacity buffers / attention activations;
+        # chunk i attends to the cache of chunks 0..i.
+        n_pc = prefill_chunks
+        def step(params, batch, cache):
+            toks = batch["tokens"]
+            s_total = toks.shape[1]
+            while s_total % n_pc:
+                raise ValueError(f"{s_total} tokens not divisible into "
+                                 f"{n_pc} prefill chunks")
+            chunk = s_total // n_pc
+            out0 = forward(params, cfg, plan, tokens=toks[:, :chunk],
+                           embeds=batch.get("embeds"),
+                           frames=batch.get("frames"), cache=cache)
+
+            def body(c, tchunk):
+                o = forward(params, cfg, plan, tokens=tchunk, cache=c)
+                return o.cache, o.logits[:, -1]
+
+            if n_pc > 1:
+                rest = toks[:, chunk:].reshape(
+                    toks.shape[0], n_pc - 1, chunk).transpose(1, 0, 2)
+                cache_f, logits = jax.lax.scan(body, out0.cache, rest)
+                return logits[-1], cache_f
+            return out0.logits[:, -1], out0.cache
+    else:  # decode
+        def step(params, tokens, cache):
+            out = forward(params, cfg, plan, tokens=tokens, cache=cache)
+            return out.logits[:, 0], out.cache
+
+    # Donation: train aliases (params, opt_state) into their updates; the
+    # serving steps alias the KV cache — without this every big buffer is
+    # double-counted (input + output) and decode would never fit.
+    donate = {"train": (0, 1), "prefill": (2,), "decode": (2,)}[
+        shape.kind if shape.kind in ("train", "prefill") else "decode"]
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step, in_shardings=shardings,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    costs = summarize_costs(compiled, hlo)
+    n_dev = mesh.devices.size
+
+    rec = {
+        "status": "ok",
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "strategy": strategy, "n_devices": int(n_dev),
+        "microbatches": microbatches if shape.kind == "train" else 1,
+        "prefill_chunks": prefill_chunks if shape.kind == "prefill" else 1,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+        },
+        "costs": costs,
+    }
+    if save_hlo:
+        with open(os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_kind}_"
+                               f"{strategy}.hlo.txt"), "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--strategy", default="mixserve",
+                    choices=["mixserve", "dp_ep", "pure_tp", "auto"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape x both meshes) via "
+                         "subprocesses")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if not args.all:
+        rec = run_one(args.arch, args.shape, args.mesh, args.strategy,
+                      args.out, save_hlo=args.save_hlo)
+        name = f"{args.arch}_{args.shape}_{args.mesh}_{args.strategy}"
+        with open(os.path.join(args.out, name + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        print(json.dumps(rec, indent=1))
+        return 0 if rec["status"] in ("ok", "skipped") else 1
+
+    # --all: subprocess per combo (compile-memory isolation on the 1-core host)
+    import repro.configs as C          # safe here: parent does no lowering
+    from repro.configs.base import INPUT_SHAPES
+    combos = [(a, s, m)
+              for a in C.ARCH_IDS
+              for s in INPUT_SHAPES
+              for m in ("single", "multi")]
+    failures = []
+    for a, s, m in combos:
+        name = f"{a}_{s}_{m}_{args.strategy}"
+        path = os.path.join(args.out, name + ".json")
+        if os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    print(f"[cached] {name}")
+                    continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+               "--shape", s, "--mesh", m, "--strategy", args.strategy,
+               "--out", args.out]
+        if args.save_hlo:
+            cmd.append("--save-hlo")
+        t0 = time.time()
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            ok = r.returncode == 0
+        except subprocess.TimeoutExpired:
+            ok, r = False, None
+        dt = time.time() - t0
+        print(f"[{'ok' if ok else 'FAIL'}] {name}  ({dt:.0f}s)")
+        if not ok:
+            failures.append(name)
+            if r is not None:
+                tail = (r.stderr or "")[-2000:]
+                with open(os.path.join(args.out, name + ".err"), "w") as f:
+                    f.write(tail)
+                print(tail[-800:])
+    print(f"\n{len(combos) - len(failures)}/{len(combos)} combos passed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)

@@ -1,0 +1,158 @@
+"""Collective-traffic extraction from compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but NOT collective
+bytes — we parse the partitioned module text and sum the result-shape bytes of
+every collective op, bucketed by kind.  Post-SPMD shapes are per-partition, so
+the totals are per-device bytes on the wire (the §Roofline collective term's
+numerator).
+
+Scan-over-layers makes this subtle: a collective inside a ``lax.scan`` body
+appears ONCE in the HLO while-loop body but executes trip-count times.  We
+therefore account per-computation, detect ``while`` ops, recover their trip
+counts from the loop-condition constant, and scale the body's traffic.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^)=]*?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(", re.M)
+# computation header:  %name (args) -> shape {     (or "ENTRY %name ...")
+# args may contain nested tuple parens, so match loosely to end-of-line "{".
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$", re.M)
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:call|fusion)\(.*?\).*?(?:to_apply|calls)=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def _split_computations(text: str) -> dict:
+    """computation name -> body text."""
+    comps = {}
+    matches = list(_COMP_RE.finditer(text))
+    for i, m in enumerate(matches):
+        end = matches[i + 1].start() if i + 1 < len(matches) else len(text)
+        comps[m.group(1)] = text[m.start():end]
+    # fallback: no headers matched -> whole module is one computation
+    if not comps:
+        comps["__module__"] = text
+    return comps
+
+
+def _local_traffic(body: str) -> tuple:
+    """(bytes_by_kind, counts_by_kind) for collectives directly in a body."""
+    out: dict = defaultdict(int)
+    counts: dict = defaultdict(int)
+    for m in _OP_RE.finditer(body):
+        shape_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":           # count async pairs on the start op
+            continue
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    return out, counts
+
+
+def _entry_name(text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+    return m.group(1) if m else next(iter(_split_computations(text)))
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind collective result bytes per device, while-loops scaled."""
+    comps = _split_computations(hlo_text)
+    local = {name: _local_traffic(body) for name, body in comps.items()}
+
+    memo: dict = {}
+
+    def resolve(name: str, depth: int = 0):
+        if name in memo:
+            return memo[name]
+        if depth > 16 or name not in comps:
+            return defaultdict(int), defaultdict(int)
+        body = comps[name]
+        bts = defaultdict(int, local[name][0])
+        cts = defaultdict(int, local[name][1])
+        for wm in _WHILE_RE.finditer(body):
+            cond, wbody = wm.group(1), wm.group(2)
+            trip = 1
+            # prefer XLA's own annotation on the while line
+            line_end = body.find("\n", wm.end())
+            line = body[wm.end():line_end if line_end > 0 else len(body)]
+            km = re.search(r'known_trip_count":\{"n":"(\d+)"', line)
+            if km:
+                trip = int(km.group(1))
+            elif cond in comps:
+                consts = [int(c) for c in _TRIP_RE.findall(comps[cond])]
+                if consts:
+                    trip = max(consts)
+            sub_b, sub_c = resolve(wbody, depth + 1)
+            for k, v in sub_b.items():
+                bts[k] += v * trip
+            for k, v in sub_c.items():
+                cts[k] += v * trip
+        for cm in _CALL_RE.finditer(body):
+            sub_b, sub_c = resolve(cm.group(1), depth + 1)
+            for k, v in sub_b.items():
+                bts[k] += v
+            for k, v in sub_c.items():
+                cts[k] += v
+        memo[name] = (bts, cts)
+        return bts, cts
+
+    bts, cts = resolve(_entry_name(hlo_text))
+    total = sum(bts.values())
+    return {"bytes": {**dict(bts), "total": total}, "counts": dict(cts)}
+
+
+def summarize_costs(compiled, hlo_text: str | None = None) -> dict:
+    """Merge cost_analysis() with parsed collective traffic."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            mem[f] = getattr(ma, f, None)
+    except Exception:
+        pass
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": mem,
+    }
+
+
+__all__ = ["collective_bytes", "summarize_costs", "COLLECTIVES"]

@@ -1,0 +1,75 @@
+"""Serving driver: the MixServe online stage end-to-end.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch phi3.5-moe-42b --reduced \
+      --requests 16 --rate 4
+
+Offline stage first (automatic analyzer on the target cluster), then the
+engine + scheduler replay a Poisson workload and report measured TTFT / ITL /
+throughput next to the analyzer's theoretical estimates (Eqs. 9-11).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.core import analyzer
+from repro.core.topology import CLUSTERS
+from repro.models.model import init_params
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Scheduler, synthetic_workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=C.ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=4.0)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--cluster", default="v5e-pod-256",
+                    choices=list(CLUSTERS))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg_full = C.get(args.arch)
+    cluster = CLUSTERS[args.cluster]
+
+    # ---- offline stage: automatic analyzer on the FULL config ----
+    rep = analyzer.select(cfg_full, cluster, batch=args.max_batch,
+                          l_in=args.prompt_len, l_out=args.max_new,
+                          arrival_rate=args.rate)
+    print("== offline analyzer (theoretical, full config on "
+          f"{cluster.name}) ==")
+    print(rep.describe(top=3))
+
+    # ---- online stage: run the reduced config on this host ----
+    cfg = C.get_reduced(args.arch) if args.reduced else cfg_full
+    params = init_params(jax.random.PRNGKey(args.seed), cfg, jnp.float32)
+    embeds_fn = None
+    if cfg.frontend == "audio_stub":
+        e = cfg.encoder
+        embeds_fn = lambda b: {"frames": jnp.full(
+            (b, e.n_frames, e.d_model), 0.01, jnp.float32)}
+    eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
+                 embeds_fn=embeds_fn)
+    sched = Scheduler(eng)
+    for r in synthetic_workload(args.requests, prompt_len=args.prompt_len,
+                                max_new_tokens=args.max_new,
+                                vocab=cfg.vocab_size,
+                                arrival_rate=args.rate, seed=args.seed):
+        sched.submit(r)
+    sched.run()
+    m = sched.metrics()
+    print("== online measured (reduced config on this host) ==")
+    print(m.row())
+
+
+if __name__ == "__main__":
+    main()

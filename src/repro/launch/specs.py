@@ -1,0 +1,115 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch x shape).
+
+``input_specs`` returns (abstract_inputs, in_shardings) for the step function
+that the given workload shape lowers:
+
+  train_4k                   -> train_step(params, opt_state, batch)
+  prefill_32k                -> prefill_step(params, batch, cache)
+  decode_32k / long_500k     -> serve_step(params, tokens, cache)
+
+No device allocation happens here — everything is weak-type-correct
+ShapeDtypeStructs, shardable via the plan's NamedShardings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.partitioner import ShardingPlan
+from repro.models.model import abstract_params, cache_axes, init_cache, param_axes
+from repro.training.optimizer import abstract_opt_state
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _tree_shardings_for(plan: ShardingPlan, abstract_tree_, axes_tree_):
+    """NamedShardings for a tree of ShapeDtypeStructs + logical axes."""
+    is_axes = lambda t: isinstance(t, tuple) and all(
+        a is None or isinstance(a, str) for a in t)
+    return jax.tree.map(
+        lambda sds, ax: plan.sharding_for(sds.shape, ax),
+        abstract_tree_, axes_tree_,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct) or is_axes(x))
+
+
+def params_and_shardings(cfg: ModelConfig, plan: ShardingPlan,
+                         dtype=jnp.bfloat16):
+    ap = abstract_params(cfg, dtype)
+    sh = _tree_shardings_for(plan, ap, param_axes(cfg))
+    return ap, sh
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, plan: ShardingPlan, *,
+                with_labels: bool):
+    """Abstract {tokens, labels, embeds, frames, mask} + shardings."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        s = 1
+    n_front = cfg.n_frontend_tokens if (cfg.frontend == "vision_stub"
+                                        and shape.kind != "decode") else 0
+    s_text = s - n_front
+    batch = {"tokens": _sds((b, s_text), jnp.int32)}
+    shard = {"tokens": plan.sharding_for((b, s_text), ("batch", "seq"))}
+    if n_front:
+        batch["embeds"] = _sds((b, n_front, cfg.d_model), jnp.bfloat16)
+        shard["embeds"] = plan.sharding_for(batch["embeds"].shape,
+                                            ("batch", "seq", "embed"))
+    if cfg.frontend == "audio_stub" and shape.kind != "decode":
+        e = cfg.encoder
+        batch["frames"] = _sds((b, e.n_frames, e.d_model), jnp.bfloat16)
+        shard["frames"] = plan.sharding_for(batch["frames"].shape,
+                                            ("batch", "seq", "embed"))
+    if with_labels:
+        batch["labels"] = _sds((b, s), jnp.int32)
+        shard["labels"] = plan.sharding_for((b, s), ("batch", "seq"))
+        if n_front:
+            batch["mask"] = _sds((b, s), jnp.float32)
+            shard["mask"] = plan.sharding_for((b, s), ("batch", "seq"))
+    return batch, shard
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                plan: ShardingPlan, dtype=jnp.bfloat16, *,
+                vector_lengths: bool = True):
+    """vector_lengths: per-slot (batch,) lengths (continuous-batching decode);
+    prefill uses a scalar length (all requests start at offset 0)."""
+    ac = init_cache(cfg, batch, max_len, dtype, abstract=True)
+    ax = cache_axes(cfg, batch, max_len)
+    if vector_lengths:
+        ac = {**ac, "length": _sds((batch,), jnp.int32)}
+        ax = {**ax, "length": ("batch",)}
+    sh = _tree_shardings_for(plan, ac, ax)
+    return ac, sh
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, plan: ShardingPlan,
+                dtype=jnp.bfloat16):
+    """(abstract_args, in_shardings) matching the lowered step's signature."""
+    ap, ap_sh = params_and_shardings(cfg, plan, dtype)
+    if shape.kind == "train":
+        batch, b_sh = batch_specs(cfg, shape, plan, with_labels=True)
+        # bf16 moments: f32 would exceed HBM on the 236B config (see
+        # training/optimizer.py note)
+        opt = abstract_opt_state(ap, jnp.bfloat16)
+        opt_sh = type(opt)(step=plan.sharding_for((), ()),
+                           m=_tree_shardings_for(plan, opt.m, param_axes(cfg)),
+                           v=_tree_shardings_for(plan, opt.v, param_axes(cfg)))
+        return (ap, opt, batch), (ap_sh, opt_sh, b_sh)
+    if shape.kind == "prefill":
+        batch, b_sh = batch_specs(cfg, shape, plan, with_labels=False)
+        cache, c_sh = cache_specs(cfg, shape.global_batch, shape.seq_len,
+                                  plan, dtype, vector_lengths=False)
+        return (ap, batch, cache), (ap_sh, b_sh, c_sh)
+    # decode
+    batch, b_sh = batch_specs(cfg, shape, plan, with_labels=False)
+    cache, c_sh = cache_specs(cfg, shape.global_batch, shape.seq_len,
+                              plan, dtype)
+    return (ap, batch["tokens"], cache), (ap_sh, b_sh["tokens"], c_sh)
+
+
+__all__ = ["input_specs", "params_and_shardings", "batch_specs",
+           "cache_specs"]

@@ -1,0 +1,76 @@
+"""Training driver.
+
+CPU-runnable example:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+      --steps 50 --batch 8 --seq 128
+
+On a real TPU slice, drop --reduced and pass --mesh single|multi to train the
+full config under the MixServe sharding plan.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.core.partitioner import NULL_PLAN, make_plan
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.model import count_params, init_params
+from repro.training import checkpoint
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=C.ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = C.get_reduced(args.arch) if args.reduced else C.get(args.arch)
+    print(f"arch={cfg.name} params={count_params(cfg):,}")
+
+    plan = NULL_PLAN
+    if args.mesh:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        plan = make_plan("mixserve", mesh)
+
+    dtype = jnp.float32 if args.reduced else jnp.bfloat16
+    params = init_params(jax.random.PRNGKey(args.seed), cfg, dtype)
+    opt_state = init_opt_state(params)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, plan, opt_cfg,
+                                      remat=not args.reduced))
+
+    data = SyntheticLM(cfg, DataConfig(batch=args.batch, seq_len=args.seq,
+                                       seed=args.seed))
+    t0 = time.time()
+    for i, batch in enumerate(data.batches(args.steps)):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"ce={float(m['ce']):.4f} aux={float(m['aux']):.3f} "
+                  f"lr={float(m['lr']):.2e} gnorm={float(m['grad_norm']):.2f} "
+                  f"({time.time() - t0:.1f}s)")
+    if args.save:
+        checkpoint.save(args.save, {"params": params})
+        print(f"saved -> {args.save}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,481 @@
+"""Transformer layer substrate: norms, RoPE/M-RoPE, attention variants, MLPs.
+
+Attention is implemented with a chunked online-softmax scan over KV blocks
+(flash-attention structure in pure JAX) so that prefill at 32k lowers with
+bounded live memory; the Pallas ``flash_decode`` kernel in ``repro.kernels``
+is the TPU-optimized version of the decode path.
+
+All parameter declarations carry logical axes consumed by the partitioner:
+  "heads"/"kv_heads"/"ffn"/"vocab" shard over the TP ("model") mesh axis,
+  "batch" over the DP axes, "expert" over the EP axis (see moe.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.partitioner import NULL_PLAN, ShardingPlan
+from repro.models.param import P
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms & activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + weight.astype(jnp.float32))
+            ).astype(dtype)
+
+
+def activate(x_gate, x_up, kind: str):
+    if kind == "swiglu":
+        return jax.nn.silu(x_gate) * x_up
+    if kind == "geglu":
+        return jax.nn.gelu(x_gate, approximate=True) * x_up
+    return jax.nn.gelu(x_gate, approximate=True)  # plain gelu: x_up unused
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., s, n, hd); positions: broadcastable to (..., s)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., s, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta: float = 10000.0):
+    """Qwen2-VL multimodal RoPE: three position streams (t, h, w) drive
+    disjoint frequency sections.  x: (b, s, n, hd); positions3: (b, 3, s);
+    sections: per-stream pair counts summing to hd//2."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    # section id of every frequency pair -> which position stream drives it
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=hd // 2)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, :, None],
+                         (x.shape[0], hd // 2, positions3.shape[-1])),
+        axis=1)                          # (b, hd/2, s)
+    ang = jnp.einsum("bfs,f->bsf", pos, inv)      # (b, s, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (flash structure, pure JAX)
+# ---------------------------------------------------------------------------
+
+_SCORE_BLOCK_BUDGET = 256 * 1024 * 1024   # f32 score-block bytes per q-step
+
+
+def _pick_q_block(b: int, nq: int, sq: int, skv: int) -> int:
+    """Largest power-of-2 q-block whose (b, nq, qb, skv) f32 score tensor
+    stays under the budget (>= 8)."""
+    qb = 8
+    while qb * 2 <= sq and b * nq * (qb * 2) * skv * 4 <= _SCORE_BLOCK_BUDGET:
+        qb *= 2
+    return qb
+
+
+def chunked_attention(q, k, v, *, q_offset=0, kv_len: Optional[jax.Array] = None,
+                      causal: bool = True, window: int = 0,
+                      chunk_size: Optional[int] = None,
+                      scale: Optional[float] = None,
+                      k_positions: Optional[jax.Array] = None):
+    """q: (b, sq, nq, hd); k, v: (b, skv, nkv, hd[v]).  GQA via head groups.
+
+    Blocked over the QUERY axis: an outer ``lax.scan`` walks q blocks with no
+    carry (ys only), so the backward pass recomputes per-block rather than
+    saving running-softmax carries — this is what lets train_4k/prefill_32k
+    fit.  Each step materializes one (b, nkv, g, qb, skv) f32 score block,
+    with qb auto-sized to a fixed VMEM/HBM budget (or forced via chunk_size).
+
+    ``kv_len`` masks the cache tail, ``window`` applies a sliding-window
+    mask, ``k_positions`` (skv,) gives explicit absolute KV positions for
+    ring-buffer caches (negative = invalid).
+    """
+    b, sq, nq, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    groups = nq // nkv
+    scale = scale if scale is not None else hd ** -0.5
+    qb = chunk_size or _pick_q_block(b, nq, sq, skv)
+    qb = min(qb, sq)
+    n_blocks = -(-sq // qb)
+    pad = n_blocks * qb - sq
+    qg = (q * scale).reshape(b, sq, nkv, groups, hd)
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qc = qg.reshape(b, n_blocks, qb, nkv, groups, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    if k_positions is None:
+        k_pos = jnp.arange(skv)
+        base_mask = (jnp.ones((skv,), bool) if kv_len is None
+                     else k_pos < jnp.asarray(kv_len))
+    else:
+        k_pos = k_positions
+        base_mask = k_pos >= 0
+
+    def step(_, inp):
+        idx, q_blk = inp                       # q_blk: (b, qb, nkv, g, hd)
+        q_pos = q_offset + idx * qb + jnp.arange(qb)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k,
+                       preferred_element_type=jnp.float32)
+        mask = jnp.broadcast_to(base_mask[None, :], (qb, skv))
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
+                        preferred_element_type=jnp.float32)
+        out_blk = pv / jnp.maximum(l, 1e-20)[..., None]
+        return (), out_blk.astype(q.dtype)     # (b, nkv, g, qb, hdv)
+
+    step = jax.checkpoint(step, prevent_cse=False)
+    _, outs = jax.lax.scan(step, (), (jnp.arange(n_blocks), qc))
+    # (nb, b, nkv, g, qb, hdv) -> (b, nb*qb, nq, hdv)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, n_blocks * qb, nq, hdv)
+    return out[:, :sq]
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token against a long cache)
+# ---------------------------------------------------------------------------
+
+def positions_from(idx, s: int):
+    """(s,) or (b, s) absolute positions from a scalar or (b,) offset."""
+    idx = jnp.asarray(idx)
+    if idx.ndim:
+        return idx[:, None] + jnp.arange(s)
+    return jnp.arange(s) + idx
+
+
+def write_cache(buf, new, idx):
+    """Write ``new`` (b, s, ...) into ``buf`` (b, S, ...) at offset ``idx``.
+
+    scalar idx  -> dynamic_update_slice (uniform batch — train/prefill)
+    (b,) idx    -> per-slot masked write (continuous batching decode, s == 1)
+    """
+    if jnp.ndim(idx) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, idx, axis=1)
+    assert new.shape[1] == 1, "per-slot cache writes are decode-only (s=1)"
+    b, skv = buf.shape[:2]
+    m = jnp.arange(skv)[None] == idx[:, None]              # (b, S)
+    m = m.reshape(b, skv, *([1] * (buf.ndim - 2)))
+    return jnp.where(m, new.astype(buf.dtype), buf)
+
+
+def decode_attention(q, k, v, *, kv_len=None, q_positions=None, window: int = 0,
+                     k_positions: Optional[jax.Array] = None,
+                     scale: Optional[float] = None):
+    """One-step attention: q (b, sq<=2, nq, hd) vs cache k/v (b, S, nkv, hd[v]).
+
+    No chunk scan — the score tensor (b, nkv, g, sq, S) is materialized so
+    that a *seq-sharded* cache (kv_seq over the TP mesh axis) keeps the whole
+    computation local-per-shard with XLA inserting only the softmax-reduction
+    collectives (flash-decode structure under GSPMD).
+
+    ``kv_len`` (scalar or (b,)) masks slots >= length; ``k_positions`` ((S,) or
+    (b, S)) gives explicit absolute positions for ring-buffer caches
+    (negative = invalid) and replaces the slot index in causal/window tests.
+    ``q_positions``: (sq,) or (b, sq) absolute positions of the queries.
+    """
+    b, sq, nq, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = scale if scale is not None else hd ** -0.5
+    if q_positions is None:
+        q_positions = jnp.zeros((sq,), jnp.int32)
+    q_pos = jnp.broadcast_to(jnp.atleast_2d(q_positions), (b, sq))
+    qg = (q * scale).reshape(b, sq, nkv, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32)
+    if k_positions is None:
+        k_pos = jnp.broadcast_to(jnp.arange(skv)[None], (b, skv))
+        if kv_len is None:
+            valid = jnp.ones((b, skv), bool)
+        else:
+            valid = k_pos < jnp.broadcast_to(jnp.atleast_1d(kv_len),
+                                             (b,))[:, None]
+    else:
+        k_pos = jnp.broadcast_to(jnp.atleast_2d(k_positions), (b, skv))
+        valid = k_pos >= 0
+    mask = valid[:, None, :] & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window > 0:
+        mask = mask & (k_pos[:, None, :] > q_pos[:, :, None] - window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)      # (b,nkv,g,sq,skv)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, nq, v.shape[-1]) \
+        .astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA attention block
+# ---------------------------------------------------------------------------
+
+def gqa_spec(cfg: ModelConfig) -> dict:
+    h, nq, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        # (heads, head_dim) fallback chain: when the head count does not
+        # divide the TP axis (smollm 15q, phi 8kv, gemma 1kv) the partitioner
+        # shards head_dim instead — see ShardingPlan.spec_for_shape.
+        "wq": P((h, nq, hd), ("embed", "heads", "head_dim")),
+        "wk": P((h, nkv, hd), ("embed", "kv_heads", "kv_head_dim")),
+        "wv": P((h, nkv, hd), ("embed", "kv_heads", "kv_head_dim")),
+        "wo": P((nq, hd, h), ("heads", "head_dim", "embed")),
+        "norm": P((h,), ("embed",), init="zeros"),
+    }
+
+
+@dataclasses.dataclass
+class KVView:
+    """Either fresh K/V (prefill/train) or a cache to read+update (decode)."""
+    k: jax.Array
+    v: jax.Array
+    length: Optional[jax.Array] = None  # valid prefix length of the cache
+
+
+def gqa_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
+                  positions=None, cache: Optional[KVView] = None,
+                  window: int = 0, chunk_size: int = 1024):
+    """Returns (out, new_cache_kv).  x: (b, s, h).
+
+    Three modes:
+      cache is None                 train / stateless prefill (fresh K/V)
+      cache given, s > 1            prefill INTO a preallocated cache buffer
+      cache given, s == 1           decode — single token vs the cache, via
+                                    ``decode_attention`` (seq-sharded friendly)
+    """
+    b, s, h = x.shape
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsh,hnd->bsnd", xn, p["wq"])
+    k = jnp.einsum("bsh,hnd->bsnd", xn, p["wk"])
+    v = jnp.einsum("bsh,hnd->bsnd", xn, p["wv"])
+    if cache is None or s > 1:
+        q = plan.constrain(q, "batch", "seq", "heads", None)
+        k = plan.constrain(k, "batch", "seq", "kv_heads", None)
+
+    idx = 0 if cache is None else cache.length
+    if positions is None:
+        positions = jnp.atleast_2d(positions_from(idx, s))
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        out = chunked_attention(q, k, v, causal=True, window=window,
+                                chunk_size=chunk_size)
+        new_kv = (k, v)
+    else:
+        kc = write_cache(cache.k, k, idx)
+        vc = write_cache(cache.v, v, idx)
+        kc = plan.constrain(kc, "batch", "kv_seq", None, None)
+        vc = plan.constrain(vc, "batch", "kv_seq", None, None)
+        if s == 1:
+            out = decode_attention(q, kc, vc, kv_len=idx + s,
+                                   q_positions=positions_from(idx, s),
+                                   window=window)
+        else:  # prefill into the buffer (uniform batch, scalar idx)
+            out = chunked_attention(q, kc, vc, q_offset=idx, kv_len=idx + s,
+                                    causal=True, window=window,
+                                    chunk_size=chunk_size)
+        new_kv = (kc, vc)
+    out = jnp.einsum("bsnd,ndh->bsh", out, p["wo"])
+    return plan.constrain(out, "batch", "seq_resid", "embed"), new_kv
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention) — DeepSeek-V2 / MiniCPM3
+# ---------------------------------------------------------------------------
+
+def mla_spec(cfg: ModelConfig) -> dict:
+    h, nh, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    r, qr, rd, vd = (cfg.kv_lora_rank, cfg.q_lora_rank or cfg.d_model,
+                     cfg.rope_head_dim, cfg.v_head_dim)
+    return {
+        "w_dq": P((h, qr), ("embed", "qk")),
+        "q_norm": P((qr,), ("qk",), init="zeros"),
+        "w_uq": P((qr, nh, hd + rd), ("qk", "heads", "head_dim")),
+        "w_dkv": P((h, r), ("embed", "qk")),
+        "kv_norm": P((r,), ("qk",), init="zeros"),
+        "w_kr": P((h, rd), ("embed", None)),
+        "w_uk": P((r, nh, hd), ("qk", "heads", "head_dim")),
+        "w_uv": P((r, nh, vd), ("qk", "heads", "head_dim")),
+        "wo": P((nh, vd, h), ("heads", "head_dim", "embed")),
+        "norm": P((h,), ("embed",), init="zeros"),
+    }
+
+
+def _mla_qkr(p, x, cfg, positions):
+    """Shared query path + rope'd latent key."""
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    ql = rms_norm(xn @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rnd->bsnd", ql, p["w_uq"])
+    q_nope, q_rope = jnp.split(q, [cfg.head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c = rms_norm(xn @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)   # (b, s, r)
+    k_rope = apply_rope((xn @ p["w_kr"])[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]                 # (b, s, rd)
+    return q_nope, q_rope, c, k_rope
+
+
+def mla_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
+                  positions=None, cache=None, chunk_size: Optional[int] = None,
+                  absorb: Optional[bool] = None):
+    """MLA attention.  cache = (c_cache, kr_cache, length) for decode.
+
+    ``absorb=None`` auto-selects the regime (the DeepSeek serving recipe):
+      s > 1 (train / prefill)  expanded — K/V up-projected per head, standard
+                               attention; scores cost nh*(hd+rd) per pair.
+      s == 1 (decode)          absorbed — scores/values live in the rank-r
+                               latent space, so the per-step cache read is
+                               (r + rd) per token instead of 2*nh*hd.
+    Using absorbed at s >> 1 would multiply score FLOPs/bytes by ~r/hd (4x
+    for deepseek-v2) — that blowup is exactly what the auto rule avoids.
+    """
+    b, s, h = x.shape
+    nh, hd, vd, r = cfg.n_heads, cfg.head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    if absorb is None:
+        absorb = (cache is not None and s == 1)
+    if positions is None:
+        off = 0 if cache is None else cache[2]
+        positions = jnp.atleast_2d(positions_from(off, s))
+    q_nope, q_rope, c, k_rope = _mla_qkr(p, x, cfg, positions)
+    q_nope = plan.constrain(q_nope, "batch", "seq", "heads", None)
+
+    if not absorb:
+        # training/prefill: expand K,V per head and run standard attention.
+        # With a cache (chunked prefill) the expansion reads the FULL latent
+        # buffer so chunk i attends to chunks 0..i (DeepSeek's recipe:
+        # recompute per-head K/V from the latent cache).
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        if cache is not None:
+            c_cache, kr_cache, idx = cache
+            cc = write_cache(c_cache, c, idx)
+            krc = write_cache(kr_cache, k_rope, idx)
+            cc = plan.constrain(cc, "batch", "kv_seq", None)
+            krc = plan.constrain(krc, "batch", "kv_seq", None)
+            src_c, src_kr, skv = cc, krc, cc.shape[1]
+            off, kv_len = idx, idx + s
+            new_cache = (cc, krc)
+        else:
+            src_c, src_kr, skv = c, k_rope, s
+            off, kv_len = 0, None
+            new_cache = (c, k_rope)
+        k_nope = jnp.einsum("bsr,rnd->bsnd", src_c, p["w_uk"])
+        v = jnp.einsum("bsr,rnd->bsnd", src_c, p["w_uv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(src_kr[:, :, None],
+                                      (b, skv, nh, cfg.rope_head_dim))],
+            axis=-1)
+        # explicit head sharding: without these GSPMD's backward guesses
+        # reshard q/k/v to full-head replicas ("involuntary full
+        # rematerialization" warnings, f32 full copies in the HLO)
+        q = plan.constrain(q, "batch", "seq", "heads", None)
+        k = plan.constrain(k, "batch", "seq", "heads", None)
+        v = plan.constrain(v, "batch", "seq", "heads", None)
+        out = chunked_attention(q, k, v, q_offset=off, kv_len=kv_len,
+                                causal=True, chunk_size=chunk_size,
+                                scale=(hd + cfg.rope_head_dim) ** -0.5)
+    else:
+        # absorbed attention: fold w_uk into q, w_uv into the output
+        q_lat = jnp.einsum("bsnd,rnd->bsnr", q_nope, p["w_uk"])  # (b,s,nh,r)
+        if cache is None:
+            cc, krc, off, kv_len = c, k_rope, 0, None
+            new_cache = (c, k_rope)
+        else:
+            c_cache, kr_cache, idx = cache
+            cc = write_cache(c_cache, c, idx)
+            krc = write_cache(kr_cache, k_rope, idx)
+            cc = plan.constrain(cc, "batch", "kv_seq", None)
+            krc = plan.constrain(krc, "batch", "kv_seq", None)
+            off, kv_len = idx, idx + s
+            new_cache = (cc, krc)
+        # latent "keys" = [c ; k_rope], latent "values" = c (single kv head)
+        k_lat = jnp.concatenate([cc, krc], axis=-1)[:, :, None, :]
+        q_full = jnp.concatenate([q_lat, q_rope], axis=-1)       # (b,s,nh,r+rd)
+        if cache is not None and s == 1:                         # decode
+            o_lat = decode_attention(
+                q_full, k_lat, cc[:, :, None, :], kv_len=kv_len,
+                q_positions=positions_from(off, s),
+                scale=(hd + cfg.rope_head_dim) ** -0.5)          # (b,s,nh,r)
+        else:
+            o_lat = chunked_attention(
+                q_full, k_lat, cc[:, :, None, :], q_offset=off, kv_len=kv_len,
+                causal=True, chunk_size=chunk_size,
+                scale=(hd + cfg.rope_head_dim) ** -0.5)          # (b,s,nh,r)
+        out = jnp.einsum("bsnr,rnd->bsnd", o_lat, p["w_uv"])
+    out = jnp.einsum("bsnd,ndh->bsh", out, p["wo"])
+    return plan.constrain(out, "batch", "seq_resid", "embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU / GeGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_spec(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    h, f = cfg.d_model, d_ff or cfg.d_ff
+    gated = cfg.activation in ("swiglu", "geglu")
+    spec = {
+        "w_in": P((h, f), ("embed", "ffn")),
+        "w_out": P((f, h), ("ffn", "embed")),
+        "norm": P((h,), ("embed",), init="zeros"),
+    }
+    if gated:
+        spec["w_gate"] = P((h, f), ("embed", "ffn"))
+    return spec
+
+
+def mlp(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN):
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    up = xn @ p["w_in"]
+    gate = xn @ p["w_gate"] if "w_gate" in p else up
+    hmid = activate(gate, up, cfg.activation)
+    hmid = plan.constrain(hmid, "batch", "seq", "ffn")
+    out = hmid @ p["w_out"]
+    return plan.constrain(out, "batch", "seq_resid", "embed")
+
+
+__all__ = [
+    "rms_norm", "activate", "apply_rope", "apply_mrope", "chunked_attention",
+    "gqa_spec", "gqa_attention", "mla_spec", "mla_attention",
+    "mlp_spec", "mlp", "KVView", "NEG_INF",
+]

@@ -1,0 +1,417 @@
+"""MoE block with MixServe's hybrid TP-EP layout and fused AR-A2A comm.
+
+Four execution paths, selected by the ShardingPlan (see partitioner.make_plan):
+
+  local      no mesh — single-device oracle (dispatch/compute/combine in-core)
+  mixserve   hybrid TP-EP: experts sharded over the EP ("data") axis, expert
+             FFN sharded over the TP ("model") axis.
+             comm_algo == "fused"/"sync": the paper's RS-A2A-AG — the A2A rides
+             the inter-node wire on 1/d_TP-sharded hidden states (Alg. 1-2).
+             comm_algo == "unfused": Tutel-style — full-width A2A + AR.
+  dp_ep      vLLM-style pure EP: experts sharded over (data x model); tokens
+             sliced over the model axis (EP≡DP among experts), full-width A2A.
+  pure_tp    no EP: every device holds all experts TP-sharded; AR only.
+
+All paths share routing/dispatch/combine numerics, so with ample capacity they
+are numerically equivalent — tests/test_moe.py asserts this on a CPU mesh.
+
+TPU adaptation note (DESIGN.md §2): the paper's async isend/irecv rounds
+become XLA async collectives; what we encode is the *communication structure*
+(volume and axis placement), which is the dominant term of Eq. 13.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.configs.base import ModelConfig
+from repro.core.partitioner import NULL_PLAN, ShardingPlan
+from repro.models.layers import activate, rms_norm
+from repro.models.param import P
+
+
+# ---------------------------------------------------------------------------
+# Spec
+# ---------------------------------------------------------------------------
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    h, e, de = cfg.d_model, cfg.n_experts, cfg.d_expert
+    gated = cfg.activation in ("swiglu", "geglu")
+    spec = {
+        "norm": P((h,), ("embed",), init="zeros"),
+        "router": P((h, e), ("embed", None), scale=0.02),
+        "w_in": P((e, h, de), ("expert", "embed", "expert_ffn")),
+        "w_out": P((e, de, h), ("expert", "expert_ffn", "embed")),
+    }
+    if gated:
+        spec["w_gate"] = P((e, h, de), ("expert", "embed", "expert_ffn"))
+    if cfg.n_shared_experts:
+        ds = cfg.d_expert * cfg.n_shared_experts
+        spec["shared_in"] = P((h, ds), ("embed", "ffn"))
+        spec["shared_out"] = P((ds, h), ("ffn", "embed"))
+        if gated:
+            spec["shared_gate"] = P((h, ds), ("embed", "ffn"))
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Routing (top-k, capacity, sort-based position assignment)
+# ---------------------------------------------------------------------------
+
+def route_topk(logits, k: int, renorm: bool = True,
+               use_kernel: bool = False):
+    """logits: (T, E) -> (idx (T,k), weights (T,k), aux_loss scalar).
+
+    ``use_kernel=True`` routes through the fused Pallas softmax+top-k gate
+    (repro.kernels.topk_gate) — the TPU hot path; the jnp path is the
+    oracle.  Both return identical (idx, weights) (tests/test_kernels.py).
+    """
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    if use_kernel:
+        from repro.kernels import ops as _kops
+        top_p, top_i = _kops.topk_gate(logits, k, renorm=renorm)
+        top_p = top_p.astype(logits.dtype)
+    else:
+        top_p, top_i = jax.lax.top_k(probs, k)
+        if renorm:
+            top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+        top_p = top_p.astype(logits.dtype)
+    # Switch-Transformer load-balance loss: E * sum_e f_e * P_e
+    e = logits.shape[-1]
+    f = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    f = f / jnp.maximum(top_i.size, 1)
+    p_mean = probs.mean(0)
+    aux = e * jnp.sum(f * p_mean)
+    return top_i, top_p, aux
+
+
+def positions_in_expert(flat_e, n_experts: int):
+    """Rank of each (token, k) slot within its expert, via stable sort —
+    O(N log N), no (N, E) one-hot materialization."""
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    ar = jnp.arange(n, dtype=jnp.int32)
+    new_seg = jnp.concatenate([jnp.ones((1,), bool),
+                               sorted_e[1:] != sorted_e[:-1]])
+    seg_start = jax.lax.associative_scan(jnp.maximum,
+                                         jnp.where(new_seg, ar, 0))
+    pos_sorted = ar - seg_start
+    return jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+
+
+def capacity_for(tokens: int, k: int, n_experts: int, cf: float) -> int:
+    """Per-expert buffer capacity.
+
+    Aligned up to a multiple of 8 for TPU layouts ONLY once past 8 — a hard
+    floor of 8 inflated decode-time buffers up to 8x (8 tokens x top-6 over
+    160 experts needs capacity 1, not 8), and every dispatch/combine
+    collective scales with E x capacity (§Perf pair-2 iteration)."""
+    c = int(math.ceil(tokens * k * cf / max(n_experts, 1)))
+    if c <= 8:
+        return max(1, c)
+    return -(-c // 8) * 8
+
+
+@dataclasses.dataclass
+class DispatchInfo:
+    flat_e: jax.Array     # (T*k,) expert id per slot
+    pos: jax.Array        # (T*k,) clipped position within expert buffer
+    keep: jax.Array       # (T*k,) bool, False => dropped (over capacity)
+    weights: jax.Array    # (T*k,)
+    capacity: int
+
+
+def make_dispatch(idx, weights, n_experts: int, capacity: int) -> DispatchInfo:
+    flat_e = idx.reshape(-1)
+    pos = positions_in_expert(flat_e, n_experts)
+    keep = pos < capacity
+    return DispatchInfo(flat_e=flat_e, pos=jnp.minimum(pos, capacity - 1),
+                        keep=keep, weights=weights.reshape(-1),
+                        capacity=capacity)
+
+
+def scatter_to_buffers(x, d: DispatchInfo, n_experts: int):
+    """x: (T, h) -> (E, C, h) capacity buffers (dropped slots contribute 0)."""
+    t, h = x.shape
+    k = d.flat_e.shape[0] // t
+    vals = jnp.repeat(x, k, axis=0) * d.keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((n_experts, d.capacity, h), x.dtype)
+    return buf.at[d.flat_e, d.pos].add(vals)
+
+
+def gather_from_buffers(buf, d: DispatchInfo, t: int):
+    """buf: (E, C, h) -> (T, h) weighted combine."""
+    vals = buf[d.flat_e, d.pos]
+    vals = vals * (d.weights * d.keep.astype(d.weights.dtype))[:, None]
+    k = d.flat_e.shape[0] // t
+    return vals.reshape(t, k, -1).sum(1)
+
+
+# ---------------------------------------------------------------------------
+# Expert FFN on capacity buffers
+# ---------------------------------------------------------------------------
+
+def expert_ffn(p, buf, cfg: ModelConfig, use_kernel: bool = False):
+    """buf: (E_local, C', h) with w_in (E_local, h, de') -> (E_local, C', h).
+
+    Output is a *partial sum* over the expert_ffn (TP) shards when de' < de.
+    ``use_kernel=True`` runs the grouped GEMMs through the Pallas
+    ``moe_gemm`` kernel (MXU-tiled) instead of jnp.einsum.
+    """
+    if use_kernel:
+        from repro.kernels import ops as _kops
+        up = _kops.moe_gemm(buf, p["w_in"])
+        if "w_gate" in p:
+            mid = activate(_kops.moe_gemm(buf, p["w_gate"]), up,
+                           cfg.activation)
+        else:
+            mid = activate(up, up, cfg.activation)
+        return _kops.moe_gemm(mid, p["w_out"])
+    up = jnp.einsum("ech,ehd->ecd", buf, p["w_in"])
+    if "w_gate" in p:
+        gate = jnp.einsum("ech,ehd->ecd", buf, p["w_gate"])
+        mid = activate(gate, up, cfg.activation)
+    else:
+        mid = activate(up, up, cfg.activation)
+    return jnp.einsum("ecd,edh->ech", mid, p["w_out"])
+
+
+def shared_expert_ffn(p, x, cfg: ModelConfig):
+    """Shared experts on local tokens; returns partial sums under TP."""
+    up = x @ p["shared_in"]
+    if "shared_gate" in p:
+        mid = activate(x @ p["shared_gate"], up, cfg.activation)
+    else:
+        mid = activate(up, up, cfg.activation)
+    return mid @ p["shared_out"]
+
+
+# ---------------------------------------------------------------------------
+# Local (single-device) oracle
+# ---------------------------------------------------------------------------
+
+def moe_local(p, x, cfg: ModelConfig, cf: Optional[float] = None,
+              use_kernels: bool = False):
+    """x: (b, s, h).  Returns (out, aux_loss).
+
+    ``use_kernels=True`` runs the router gate and the expert GEMMs through
+    the Pallas kernels (interpret mode on CPU; native on TPU)."""
+    b, s, h = x.shape
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    tok = xn.reshape(-1, h)
+    t = tok.shape[0]
+    idx, w, aux = route_topk(tok @ p["router"], cfg.top_k,
+                             use_kernel=use_kernels)
+    cap = capacity_for(t, cfg.top_k, cfg.n_experts, cf or cfg.capacity_factor)
+    d = make_dispatch(idx, w, cfg.n_experts, cap)
+    buf = scatter_to_buffers(tok, d, cfg.n_experts)
+    out_buf = expert_ffn(p, buf, cfg, use_kernel=use_kernels)
+    out = gather_from_buffers(out_buf, d, t)
+    if cfg.n_shared_experts:
+        out = out + shared_expert_ffn(p, tok, cfg)
+    return out.reshape(b, s, h).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Distributed paths (shard_map)
+# ---------------------------------------------------------------------------
+
+def _axis_index(axes: tuple):
+    if not axes:
+        return 0
+    idx = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _axis_size(axes: tuple):
+    s = 1
+    for a in axes:
+        s *= jax.lax.axis_size(a)
+    return s
+
+
+def _moe_shard_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes, comm_algo,
+                  token_sliced: bool, cf: float, mesh_axes: tuple = ()):
+    """Per-device body.  x: (b_loc, s, h) — replicated across tp_axes.
+
+    Returns (out (b_loc, s, h), aux scalar) — out replicated across tp_axes.
+    """
+    b, s, h = x.shape
+    tp = _axis_size(tp_axes) if tp_axes else 1
+    ep = _axis_size(ep_axes) if ep_axes else 1
+    e_global = cfg.n_experts
+    e_local = e_global // max(ep, 1)
+
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    tok_full = xn.reshape(-1, h)
+
+    t_real = tok_full.shape[0]
+    if token_sliced and tp > 1:
+        # pure-EP (vLLM DP+EP): the TP group's replicated tokens are sliced
+        # along the *token* axis so each (data x model) device is its own
+        # EP/DP rank — "EP is essentially equivalent to DP among the experts".
+        # Pad to a multiple of tp (odd counts occur in tests/serving).
+        pad = (-t_real) % tp
+        if pad:
+            tok_full = jnp.pad(tok_full, ((0, pad), (0, 0)))
+        t_loc = tok_full.shape[0] // tp
+        tok = jax.lax.dynamic_slice_in_dim(
+            tok_full, _axis_index(tp_axes) * t_loc, t_loc, axis=0)
+    else:
+        tok = tok_full
+    t = tok.shape[0]
+
+    idx, w, aux = route_topk(tok @ p["router"], cfg.top_k)
+    cap = capacity_for(t, cfg.top_k, e_global, cf)
+    d = make_dispatch(idx, w, e_global, cap)
+
+    fused = (comm_algo in ("fused", "sync")) and tp > 1 and ep > 1 \
+        and not token_sliced
+
+    # ---------------- dispatch ----------------
+    if fused:
+        # Fused AG-Dispatch (Alg. 2): scatter only the LOCAL 1/tp hidden
+        # shard; the inter-node A2A then moves 1/tp of the volume, and the
+        # intra-node AG reconstructs full width (overlapped by XLA).
+        hs = h // tp
+        tok_shard = jax.lax.dynamic_slice_in_dim(
+            tok, _axis_index(tp_axes) * hs, hs, axis=1)
+        buf = scatter_to_buffers(tok_shard, d, e_global)      # (E, C, h/tp)
+    else:
+        buf = scatter_to_buffers(tok, d, e_global)            # (E, C, h)
+
+    if ep > 1:
+        buf = buf.reshape(ep, e_local, cap, buf.shape[-1])
+        ax = ep_axes if len(ep_axes) > 1 else ep_axes[0]
+        buf = jax.lax.all_to_all(buf, ax, split_axis=0, concat_axis=0,
+                                 tiled=False)
+        # (ep, e_local, C, h') — dim 0 now indexes the source EP rank
+        buf = buf.reshape(ep, e_local, cap, buf.shape[-1])
+    else:
+        buf = buf.reshape(1, e_global, cap, buf.shape[-1])
+
+    if fused:
+        buf = jax.lax.all_gather(buf, tp_axes, axis=-1, tiled=True)  # full h
+
+    # ---------------- expert compute ----------------
+    if ep > 1:
+        # (ep, e_local, C, h) -> (e_local, ep*C, h): one GEMM batch per
+        # local expert over the buffers received from every source rank.
+        comp = buf.transpose(1, 0, 2, 3).reshape(e_local, ep * cap, h)
+    else:
+        comp = buf.reshape(e_global, cap, h)
+    out_buf = expert_ffn(p, comp, cfg)     # partial over tp when sharded
+
+    # ---------------- combine ----------------
+    if ep > 1:
+        out_buf = out_buf.reshape(e_local, ep, cap, h).transpose(1, 0, 2, 3)
+
+    # Shared experts: under token slicing the TP ranks hold *different*
+    # tokens, so partial-width products cannot be psummed per slice — compute
+    # them on the full replicated token set instead (vLLM DP+EP does the
+    # same: shared experts stay TP with a standard AR).
+    shared_partial = None
+    if cfg.n_shared_experts:
+        shared_partial = shared_expert_ffn(
+            p, tok_full if token_sliced else tok, cfg)
+
+    if fused:
+        # Fused RS-Combine (Alg. 1): reduce-scatter the TP-partial expert
+        # outputs down to 1/tp width, A2A back at 1/tp volume, weighted
+        # combine, and a single epilogue AG restores full width.
+        out_buf = jax.lax.psum_scatter(out_buf, tp_axes, scatter_dimension=3,
+                                       tiled=True)            # (ep,eL,C,h/tp)
+        ax = ep_axes if len(ep_axes) > 1 else ep_axes[0]
+        out_buf = jax.lax.all_to_all(out_buf, ax, split_axis=0, concat_axis=0)
+        out_buf = out_buf.reshape(e_global, cap, h // tp)
+        out_tok = gather_from_buffers(out_buf, d, t)          # (T, h/tp)
+        if shared_partial is not None:
+            # fold the shared-expert partial into the same epilogue: RS it to
+            # 1/tp width and add before the single AG (beyond-paper fusion).
+            out_tok = out_tok + jax.lax.psum_scatter(
+                shared_partial, tp_axes, scatter_dimension=1, tiled=True)
+        out_tok = jax.lax.all_gather(out_tok, tp_axes, axis=-1, tiled=True)
+    else:
+        if tp > 1 and not token_sliced:
+            out_buf = jax.lax.psum(out_buf, tp_axes)          # AR (unfused)
+        if ep > 1:
+            ax = ep_axes if len(ep_axes) > 1 else ep_axes[0]
+            out_buf = jax.lax.all_to_all(out_buf, ax, split_axis=0,
+                                         concat_axis=0)
+            out_buf = out_buf.reshape(e_global, cap, h)
+        else:
+            out_buf = out_buf.reshape(e_global, cap, h)
+        out_tok = gather_from_buffers(out_buf, d, t)
+        if token_sliced and tp > 1:
+            # undo the token slice: gather the TP group's token shards back
+            out_tok = jax.lax.all_gather(out_tok, tp_axes, axis=0, tiled=True)
+            out_tok = out_tok[:t_real]          # drop slicing pad
+        if shared_partial is not None:
+            if tp > 1:
+                shared_partial = jax.lax.psum(shared_partial, tp_axes)
+            out_tok = out_tok + shared_partial
+
+    out = out_tok.reshape(b, s, h).astype(x.dtype)
+    if mesh_axes:
+        aux = jax.lax.pmean(aux, mesh_axes)  # replicate for the P() out_spec
+    return out, aux
+
+
+def moe_block(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
+              cf: Optional[float] = None):
+    """The MoE block.  x: (b, s, h) -> (out, aux_loss)."""
+    cf = cf or cfg.capacity_factor
+    if not plan.enabled:
+        return moe_local(p, x, cfg, cf)
+
+    mesh = plan.mesh
+    # dp_ep plan: ep_axes overlaps tp_axes (experts span data x model) ->
+    # token-sliced pure EP; tokens replicated within the TP group are sliced
+    # along the token axis instead of the hidden axis.
+    token_sliced = bool(set(plan.tp_axes) & set(plan.ep_axes))
+    comm_algo = "unfused" if token_sliced else plan.comm_algo
+
+    # The shard_map body expects the canonical EP/TP layout; any outer FSDP
+    # storage sharding (embed->data) is converted at the shard_map boundary
+    # (= the FSDP gather-on-use).  Pin the layout by dropping the fsdp rule.
+    import dataclasses as _dc
+    moe_plan = _dc.replace(plan, rules={**plan.rules, "embed": None})
+    x_spec = moe_plan.spec(("batch", "seq", "embed"))
+    p_axes = {k: v.axes for k, v in moe_spec(cfg).items() if k in p}
+    p_specs = {k: moe_plan.spec(ax) for k, ax in p_axes.items()}
+
+    ep = plan.axis_size(plan.ep_axes)
+    if ep > 1 and cfg.n_experts % ep:
+        raise ValueError(
+            f"{cfg.name}: n_experts={cfg.n_experts} not divisible by "
+            f"EP degree {ep} — pick a different plan (analyzer enforces this)")
+
+    fn = functools.partial(
+        _moe_shard_fn, cfg=cfg, tp_axes=plan.tp_axes, ep_axes=plan.ep_axes,
+        comm_algo=comm_algo, token_sliced=token_sliced, cf=cf,
+        mesh_axes=tuple(mesh.axis_names))
+
+    out, aux = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(p_specs, x_spec),
+        out_specs=(x_spec, PartitionSpec()),
+        check_vma=False,
+    )(p, x)
+    return out, aux
+
+
+__all__ = [
+    "moe_spec", "moe_block", "moe_local", "route_topk", "make_dispatch",
+    "scatter_to_buffers", "gather_from_buffers", "expert_ffn",
+    "capacity_for", "positions_in_expert", "DispatchInfo",
+]

@@ -1,0 +1,210 @@
+"""Recurrent / state-space layers: RWKV6 (Finch) and RG-LRU (RecurrentGemma).
+
+Both are attention-free, O(seq) layers, so the ``long_500k`` decode shape is
+supported for these families (see DESIGN.md §4 shape skips).
+
+Sequence processing uses a chunked ``lax.scan`` over time (state carried
+across chunks); decode processes one token against a carried state — the
+recurrent analogue of the KV cache.
+
+Note on the paper's technique (DESIGN.md §Arch-applicability): these layers
+have no attention heads and no experts, so MixServe's fused AR-A2A does not
+apply; TP shards the channel dimension and DP shards batch, which is what the
+partitioner's rules do for ``"heads"``-free specs.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.partitioner import NULL_PLAN, ShardingPlan
+from repro.models.layers import rms_norm
+from repro.models.param import P
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) time-mix: data-dependent decay  [arXiv:2404.05892]
+# ---------------------------------------------------------------------------
+
+def rwkv6_spec(cfg: ModelConfig) -> dict:
+    h = cfg.d_model
+    nh = max(1, h // 64)           # rwkv6 uses head_size 64
+    hd = h // nh
+    lora = 64                       # decay LoRA rank (w_lora in Finch)
+    return {
+        "norm": P((h,), ("embed",), init="zeros"),
+        "mu": P((5, h), (None, "embed"), init="zeros"),     # token-shift mixes r,k,v,w,g
+        "wr": P((h, nh, hd), ("embed", "heads", None)),
+        "wk": P((h, nh, hd), ("embed", "heads", None)),
+        "wv": P((h, nh, hd), ("embed", "heads", None)),
+        "wg": P((h, nh, hd), ("embed", "heads", None)),
+        "w0": P((nh, hd), ("heads", None), init="zeros"),   # decay bias
+        "w_lora_a": P((h, lora), ("embed", None)),
+        "w_lora_b": P((lora, nh, hd), (None, "heads", None)),
+        "bonus": P((nh, hd), ("heads", None), init="zeros"),  # "u" first-token bonus
+        "ln_x": P((h,), ("embed",), init="zeros"),          # group norm on output
+        "wo": P((nh, hd, h), ("heads", None, "embed")),
+    }
+
+
+def _rwkv6_step(state, rkvwu):
+    """One recurrence step.  state: (b, nh, hd, hd) outer-product memory."""
+    r, k, v, w, u = rkvwu                     # each (b, nh, hd)
+    kv = k[..., :, None] * v[..., None, :]    # (b, nh, hd, hd)
+    out = jnp.einsum("bnij,bni->bnj", state + u[..., :, None] * kv, r)
+    state = state * w[..., :, None] + kv
+    return state, out
+
+
+def rwkv6_time_mix(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
+                   state: Optional[jax.Array] = None,
+                   x_prev: Optional[jax.Array] = None):
+    """RWKV6 time-mix.  x: (b, s, h).  Returns (out, (state, x_last)).
+
+    ``state`` is the (b, nh, hd, hd) wkv memory, ``x_prev`` the last input
+    token (for token-shift across decode steps).
+    """
+    b, s, h = x.shape
+    nh = p["w0"].shape[0]
+    hd = h // nh
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    if x_prev is None:
+        x_prev = jnp.zeros((b, 1, h), xn.dtype)
+    shifted = jnp.concatenate([x_prev, xn[:, :-1]], axis=1)
+
+    mix = xn[None] + p["mu"][:, None, None, :] * (shifted - xn)[None]  # (5,b,s,h)
+    xr, xk, xv, xw, xg = mix
+
+    r = jnp.einsum("bsh,hnd->bsnd", xr, p["wr"])
+    k = jnp.einsum("bsh,hnd->bsnd", xk, p["wk"])
+    v = jnp.einsum("bsh,hnd->bsnd", xv, p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsh,hnd->bsnd", xg, p["wg"]))
+    # data-dependent decay (the Finch contribution): w_t = exp(-exp(dd_t))
+    dd = p["w0"] + jnp.einsum("bsh,hl,lnd->bsnd", xw, p["w_lora_a"],
+                              p["w_lora_b"])
+    w = jnp.exp(-jnp.exp(dd.astype(jnp.float32)))
+    u = jnp.broadcast_to(p["bonus"], (b, s, nh, hd))
+
+    if state is None:
+        state = jnp.zeros((b, nh, hd, hd), jnp.float32)
+
+    seq = (r.astype(jnp.float32), k.astype(jnp.float32),
+           v.astype(jnp.float32), w, u.astype(jnp.float32))
+    seq = jax.tree.map(lambda a: a.transpose(1, 0, 2, 3), seq)  # (s, b, nh, hd)
+    state, outs = jax.lax.scan(_rwkv6_step, state, seq)
+    out = outs.transpose(1, 0, 2, 3)                            # (b, s, nh, hd)
+    out = out.reshape(b, s, h).astype(x.dtype)
+    out = rms_norm(out, p["ln_x"], cfg.norm_eps) * g.reshape(b, s, h)
+    out = jnp.einsum("bsnd,ndh->bsh", out.reshape(b, s, nh, hd), p["wo"])
+    return plan.constrain(out, "batch", "seq_resid", "embed"), (state, xn[:, -1:])
+
+
+def rwkv6_channel_mix_spec(cfg: ModelConfig) -> dict:
+    h, f = cfg.d_model, cfg.d_ff
+    return {
+        "norm": P((h,), ("embed",), init="zeros"),
+        "mu": P((2, h), (None, "embed"), init="zeros"),
+        "wk": P((h, f), ("embed", "ffn")),
+        "wv": P((f, h), ("ffn", "embed")),
+        "wr": P((h, h), ("embed", None)),
+    }
+
+
+def rwkv6_channel_mix(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
+                      x_prev: Optional[jax.Array] = None):
+    b, s, h = x.shape
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    if x_prev is None:
+        x_prev = jnp.zeros((b, 1, h), xn.dtype)
+    shifted = jnp.concatenate([x_prev, xn[:, :-1]], axis=1)
+    mix = xn[None] + p["mu"][:, None, None, :] * (shifted - xn)[None]
+    xk, xr = mix
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    k = plan.constrain(k, "batch", "seq", "ffn")
+    kv = k @ p["wv"]
+    out = jax.nn.sigmoid(xr @ p["wr"]) * kv
+    return plan.constrain(out, "batch", "seq_resid", "embed"), xn[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin)  [arXiv:2402.19427]
+# ---------------------------------------------------------------------------
+
+def rglru_spec(cfg: ModelConfig) -> dict:
+    h = cfg.d_model
+    w = cfg.lru_width
+    cw = cfg.conv1d_width
+    return {
+        "norm": P((h,), ("embed",), init="zeros"),
+        "w_x": P((h, w), ("embed", "ffn")),       # input branch
+        "w_gate_branch": P((h, w), ("embed", "ffn")),
+        "conv_w": P((cw, w), (None, "ffn"), init="zeros"),
+        "conv_b": P((w,), ("ffn",), init="zeros"),
+        # RG-LRU gates
+        "w_input_gate": P((w, w), ("ffn", None)),
+        "b_input_gate": P((w,), ("ffn",), init="zeros"),
+        "w_rec_gate": P((w, w), ("ffn", None)),
+        "b_rec_gate": P((w,), ("ffn",), init="zeros"),
+        "lambda_p": P((w,), ("ffn",), init="zeros"),  # recurrence magnitude param
+        "w_out": P((w, h), ("ffn", "embed")),
+    }
+
+
+_C_LRU = 8.0  # Griffin's fixed scalar on the recurrence gate
+
+
+def _rglru_step(h_prev, inp):
+    a, gated_x = inp
+    h_new = a * h_prev + jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 0.0)) * gated_x
+    return h_new, h_new
+
+
+def rglru_block(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
+                state: Optional[jax.Array] = None,
+                conv_state: Optional[jax.Array] = None):
+    """Griffin recurrent block: conv1d + RG-LRU, gated.  x: (b, s, h).
+
+    Returns (out, (lru_state, conv_state)).
+    """
+    b, s, h = x.shape
+    w = cfg.lru_width
+    cw = cfg.conv1d_width
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(xn @ p["w_gate_branch"], approximate=True)
+    u = xn @ p["w_x"]
+    u = plan.constrain(u, "batch", "seq", "ffn")
+
+    # temporal conv1d (causal, width cw)
+    if conv_state is None:
+        conv_state = jnp.zeros((b, cw - 1, w), u.dtype)
+    u_pad = jnp.concatenate([conv_state, u], axis=1)
+    new_conv_state = u_pad[:, -(cw - 1):] if cw > 1 else conv_state
+    conv = sum(u_pad[:, i:i + s] * p["conv_w"][i] for i in range(cw))
+    conv = conv + p["conv_b"]
+
+    # RG-LRU
+    i_gate = jax.nn.sigmoid(conv @ p["w_input_gate"] + p["b_input_gate"])
+    r_gate = jax.nn.sigmoid(conv @ p["w_rec_gate"] + p["b_rec_gate"])
+    log_a = -_C_LRU * r_gate * jax.nn.softplus(p["lambda_p"])
+    a = jnp.exp(log_a.astype(jnp.float32))
+    gated_x = (i_gate * conv).astype(jnp.float32)
+
+    if state is None:
+        state = jnp.zeros((b, w), jnp.float32)
+    a_t = a.transpose(1, 0, 2)
+    gx_t = gated_x.transpose(1, 0, 2)
+    state, ys = jax.lax.scan(_rglru_step, state, (a_t, gx_t))
+    y = ys.transpose(1, 0, 2).astype(x.dtype)
+
+    out = (y * gate) @ p["w_out"]
+    return plan.constrain(out, "batch", "seq_resid", "embed"), (state, new_conv_state)
+
+
+__all__ = [
+    "rwkv6_spec", "rwkv6_time_mix", "rwkv6_channel_mix_spec",
+    "rwkv6_channel_mix", "rglru_spec", "rglru_block",
+]

@@ -1,0 +1,174 @@
+"""vLLM-lite serving engine: continuous batching over a slotted KV cache.
+
+The engine owns two jitted programs:
+  prefill_fn(params, tokens(1, s_bucket))           -> (last_logits, cache_1)
+  decode_fn(params, tokens(B, 1), cache, active(B)) -> (logits, cache)
+
+Requests are admitted into free slots at iteration granularity (Orca-style
+iteration-level scheduling); one decode step advances every active slot.
+Inactive slots decode a pad token whose cache writes land at their frozen
+``length`` — invisible (masked by kv_len) and overwritten before that
+position ever becomes visible to a future occupant.
+
+This is the "online stage" host of MixServe: the ShardingPlan injected here
+is the one the automatic analyzer selected offline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.partitioner import NULL_PLAN, ShardingPlan
+from repro.models.model import forward, init_cache
+from repro.serving.kv_cache import insert_slot, with_lengths
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (s,) int32 token ids
+    max_new_tokens: int = 32
+    arrival: float = 0.0
+    # filled by the engine:
+    out_tokens: list = dataclasses.field(default_factory=list)
+    t_admitted: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.arrival
+
+    @property
+    def itl(self) -> float:
+        n = len(self.out_tokens)
+        if n <= 1:
+            return 0.0
+        return (self.t_done - self.t_first_token) / (n - 1)
+
+
+def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, plan: ShardingPlan = NULL_PLAN,
+                 *, max_batch: int = 8, max_len: int = 512,
+                 dtype=jnp.float32, temperature: float = 0.0, seed: int = 0,
+                 embeds_fn: Optional[Callable] = None):
+        self.cfg, self.params, self.plan = cfg, params, plan
+        self.max_batch, self.max_len = max_batch, max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.embeds_fn = embeds_fn    # vlm/audio stub-frontend provider
+
+        self.cache = with_lengths(
+            init_cache(cfg, max_batch, max_len, dtype),
+            jnp.zeros((max_batch,), jnp.int32))
+        self.slots: list[Optional[Request]] = [None] * max_batch
+        self.cur_tokens = jnp.zeros((max_batch, 1), jnp.int32)
+
+        self._prefill_cache = {}
+        self._decode = jax.jit(self._decode_impl)
+        self.dtype = dtype
+
+    # -- jitted programs -------------------------------------------------
+    def _prefill_impl(self, params, tokens, real_len):
+        cache = init_cache(self.cfg, 1, self.max_len, self.dtype)
+        kw = {}
+        if self.embeds_fn is not None:
+            kw = self.embeds_fn(1)
+        out = forward(params, self.cfg, self.plan, tokens=tokens,
+                      cache=cache, **kw)
+        # bucketed prompt: logits of the last REAL token
+        last = out.logits[:, real_len - 1 + self._front_len() ]
+        cache = with_lengths(out.cache,
+                             jnp.full((1,), real_len + self._front_len(),
+                                      jnp.int32))
+        return last, cache
+
+    def _front_len(self) -> int:
+        if self.cfg.frontend == "vision_stub":
+            return self.cfg.n_frontend_tokens
+        return 0
+
+    def _decode_impl(self, params, tokens, cache, active, key):
+        out = forward(params, self.cfg, self.plan, tokens=tokens, cache=cache)
+        logits = out.logits[:, 0]
+        if self.temperature > 0:
+            nxt = jax.random.categorical(key, logits / self.temperature, -1)
+        else:
+            nxt = jnp.argmax(logits, -1)
+        # only advance lengths of active slots
+        new_len = jnp.where(active, out.cache["length"], cache["length"])
+        return nxt.astype(jnp.int32), with_lengths(out.cache, new_len)
+
+    # -- slot management -------------------------------------------------
+    def free_slots(self) -> list:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def admit(self, req: Request) -> bool:
+        free = self.free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        s = len(req.prompt)
+        bucket = _bucket(s)
+        if bucket not in self._prefill_cache:
+            self._prefill_cache[bucket] = jax.jit(
+                self._prefill_impl, static_argnames=())
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :s] = req.prompt
+        last_logits, cache1 = self._prefill_cache[bucket](
+            self.params, jnp.asarray(toks), s)
+        first = int(jnp.argmax(last_logits[0]))
+        self.cache = insert_slot(self.cache, cache1, slot)
+        self.cur_tokens = self.cur_tokens.at[slot, 0].set(first)
+        req.out_tokens.append(first)
+        req.t_admitted = req.t_first_token = time.perf_counter()
+        self.slots[slot] = req
+        return True
+
+    def step(self) -> list:
+        """One decode iteration for all active slots.  Returns finished."""
+        active = jnp.asarray([r is not None and not r.done
+                              for r in self.slots])
+        if not bool(active.any()):
+            return []
+        self.key, sub = jax.random.split(self.key)
+        nxt, self.cache = self._decode(self.params, self.cur_tokens,
+                                       self.cache, active, sub)
+        now = time.perf_counter()
+        finished = []
+        nxt_host = np.asarray(nxt)
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            r.out_tokens.append(int(nxt_host[i]))
+            r.t_done = now
+            if r.done:
+                finished.append(r)
+                self.slots[i] = None
+        self.cur_tokens = jnp.asarray(nxt_host[:, None])
+        return finished
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+
+__all__ = ["Engine", "Request"]

@@ -1,0 +1,53 @@
+"""Slot-based KV-cache manager for continuous batching.
+
+The cache pytree itself is defined by ``repro.models.model.init_cache`` (it
+is family-shaped: K/V buffers for GQA, latent buffers for MLA, ring buffers
+for local attention, recurrent state for SSM/hybrid).  This module adds the
+*slot* view the engine needs: per-slot lengths, insertion of a freshly
+prefilled single-request cache into a batch slot, and free-slot tracking.
+
+Cache layout reminder (decode sharding): every (layers, batch, kv_seq, ...)
+buffer is sharded batch->DP axes and kv_seq->TP ("model") axis, so per-chip
+cache bytes scale 1/(d_DP * d_TP).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import cache_axes, init_cache  # re-export
+
+
+def insert_slot(big, small, slot: int):
+    """Insert a batch=1 cache pytree into batch slot ``slot`` of ``big``.
+
+    Cache arrays are (layers, batch, ...) — insert along axis 1; ``kpos``
+    ring-position arrays are (layers, batch, W); ``length`` is (batch,).
+    """
+    def one(b, s):
+        if b.ndim == 1:                    # length vector (batch,)
+            return b.at[slot].set(s[0] if s.ndim else s)
+        return jax.lax.dynamic_update_slice_in_dim(b, s.astype(b.dtype),
+                                                   slot, axis=1)
+    return jax.tree.map(one, big, small)
+
+
+def batched_lengths(cache) -> jax.Array:
+    return cache["length"]
+
+
+def with_lengths(cache, lengths):
+    return {**cache, "length": lengths}
+
+
+def make_batched_cache(cfg: ModelConfig, batch: int, max_len: int,
+                       dtype=jnp.bfloat16):
+    """A batch cache whose ``length`` is a per-slot vector (all zero)."""
+    c = init_cache(cfg, batch, max_len, dtype)
+    return with_lengths(c, jnp.zeros((batch,), jnp.int32))
+
+
+__all__ = ["init_cache", "cache_axes", "insert_slot", "batched_lengths",
+           "with_lengths", "make_batched_cache"]

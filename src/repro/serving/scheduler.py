@@ -1,0 +1,109 @@
+"""Request scheduler: FIFO admission + iteration-level continuous batching.
+
+Implements the serving-side of the paper's §III-B4 latency model: requests
+arrive stochastically (arrival_rate), queue (the W_q term), are admitted into
+engine slots, and per-request TTFT / ITL / throughput are measured — the same
+indicators Eqs. 9-11 estimate theoretically.  ``summarize`` reports both so
+benchmarks can compare measured vs modeled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Iterable, Optional
+
+import numpy as np
+
+from repro.serving.engine import Engine, Request
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    n_requests: int
+    ttft_mean: float
+    ttft_p99: float
+    itl_mean: float
+    itl_p99: float
+    throughput_tok_s: float      # total tokens (in+out) / wall time
+    queue_wait_mean: float
+    wall_time: float
+
+    def row(self) -> str:
+        return (f"n={self.n_requests} ttft={self.ttft_mean*1e3:.1f}ms "
+                f"(p99 {self.ttft_p99*1e3:.1f}) itl={self.itl_mean*1e3:.2f}ms "
+                f"(p99 {self.itl_p99*1e3:.2f}) thr={self.throughput_tok_s:.1f}tok/s "
+                f"wq={self.queue_wait_mean*1e3:.1f}ms")
+
+
+class Scheduler:
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        self.waiting: deque[Request] = deque()
+        self.finished: list[Request] = []
+
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    def run(self, *, max_steps: int = 100000) -> list:
+        """Drain the queue: admit when slots free, decode-step otherwise.
+
+        Request ``arrival`` fields are *relative* offsets (seconds from run
+        start) — an open-loop Poisson workload replays in real time.
+        """
+        t0 = time.perf_counter()
+        for r in self.waiting:                 # rebase to absolute wall time
+            r.arrival += t0
+        steps = 0
+        while (self.waiting or self.engine.n_active) and steps < max_steps:
+            now = time.perf_counter()
+            while (self.waiting and self.engine.free_slots()
+                   and self.waiting[0].arrival <= now):
+                req = self.waiting[0]
+                if not self.engine.admit(req):
+                    break
+                self.waiting.popleft()
+            if self.engine.n_active:
+                self.finished.extend(self.engine.step())
+            else:                              # idle: wait for next arrival
+                time.sleep(max(0.0, min(self.waiting[0].arrival - now, 1e-3)))
+            steps += 1
+        self.wall = time.perf_counter() - t0
+        return self.finished
+
+    def metrics(self) -> ServeMetrics:
+        rs = self.finished
+        ttfts = np.array([r.ttft for r in rs])
+        itls = np.array([r.itl for r in rs if len(r.out_tokens) > 1])
+        waits = np.array([r.t_admitted - r.arrival for r in rs])
+        total_toks = sum(len(r.prompt) + len(r.out_tokens) for r in rs)
+        return ServeMetrics(
+            n_requests=len(rs),
+            ttft_mean=float(ttfts.mean()) if len(rs) else 0.0,
+            ttft_p99=float(np.percentile(ttfts, 99)) if len(rs) else 0.0,
+            itl_mean=float(itls.mean()) if len(itls) else 0.0,
+            itl_p99=float(np.percentile(itls, 99)) if len(itls) else 0.0,
+            throughput_tok_s=total_toks / max(self.wall, 1e-9),
+            queue_wait_mean=float(waits.mean()) if len(rs) else 0.0,
+            wall_time=self.wall,
+        )
+
+
+def synthetic_workload(n_requests: int, *, prompt_len: int = 64,
+                       max_new_tokens: int = 16, vocab: int = 256,
+                       arrival_rate: float = 0.0, seed: int = 0
+                       ) -> Iterable[Request]:
+    """Deterministic ShareGPT-stand-in workload (seeded, poisson arrivals)."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for rid in range(n_requests):
+        if arrival_rate > 0:
+            t += rng.exponential(1.0 / arrival_rate)
+        s = max(4, int(rng.integers(prompt_len // 2, prompt_len + 1)))
+        yield Request(rid=rid,
+                      prompt=rng.integers(0, vocab, size=s).astype(np.int32),
+                      max_new_tokens=max_new_tokens, arrival=t)
+
+
+__all__ = ["Scheduler", "ServeMetrics", "synthetic_workload"]

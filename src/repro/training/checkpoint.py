@@ -1,0 +1,47 @@
+"""Flat-npz pytree checkpointing (no orbax in the offline container).
+
+Pytree leaves are flattened with '/'-joined key paths; restore rebuilds into
+a reference pytree structure, validating shapes/dtypes.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree: Any) -> None:
+    tmp = path + ".tmp"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def restore(path: str, like: Any) -> Any:
+    with np.load(path) as data:
+        flat = dict(data)
+    leaves_ref, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, ref in leaves_ref:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {ref.shape}")
+        leaves.append(arr.astype(ref.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+
+
+__all__ = ["save", "restore"]

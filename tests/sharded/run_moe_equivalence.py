@@ -1,0 +1,46 @@
+"""Subprocess script: MoE block numerical equivalence across all plans/algos
+on a 4-device CPU mesh (fused RS-A2A-AG must be exact, not approximate)."""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.partitioner import make_plan
+from repro.models import moe as M
+from repro.models.param import init_tree
+
+
+def main():
+    cfg = ModelConfig(name="tiny-moe", family="moe", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      n_experts=8, top_k=2, d_expert=96, n_shared_experts=1)
+    key = jax.random.PRNGKey(0)
+    params = init_tree(key, M.moe_spec(cfg), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 64), jnp.float32)
+    out_local, _ = M.moe_local(params, x, cfg, cf=8.0)
+
+    meshes = {
+        "2x2": jax.make_mesh((2, 2), ("data", "model")),
+        "2x4": jax.make_mesh((2, 4), ("data", "model")),
+        "4x2": jax.make_mesh((4, 2), ("data", "model")),
+        "pod2x2x2": jax.make_mesh((2, 2, 2), ("pod", "data", "model")),
+    }
+    cases = [("mixserve", "fused"), ("mixserve", "sync"),
+             ("mixserve", "unfused"), ("dp_ep", "unfused"),
+             ("pure_tp", "unfused")]
+    for mesh_name, mesh in meshes.items():
+        for strat, algo in cases:
+            plan = make_plan(strat, mesh, comm_algo=algo)
+            out, _ = jax.jit(
+                lambda p, xx: M.moe_block(p, xx, cfg, plan, cf=8.0))(params, x)
+            err = float(jnp.max(jnp.abs(out - out_local)))
+            print(f"{mesh_name:9s} {strat:9s} {algo:8s} err={err:.2e}")
+            assert err < 1e-4, (mesh_name, strat, algo, err)
+    print("MOE_EQUIVALENCE_OK")
+
+
+if __name__ == "__main__":
+    main()

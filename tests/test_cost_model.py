@@ -1,0 +1,136 @@
+"""Unit tests for the theoretical cost model (paper Eqs. 1-13)."""
+
+import math
+
+import pytest
+
+from repro.configs import get
+from repro.core import cost_model as cm
+from repro.core.topology import (ASCEND_910B_CLUSTER, H20_CLUSTER,
+                                 TPU_V5E_POD, pow2_divisors)
+
+
+def test_rs_ag_symmetry_eq1():
+    # Eq. 1: RS(size, d) == AG(size, d)
+    assert cm.rs_cost(1e6, 8, 1e9, 0) == cm.ag_cost(1e6, 8, 1e9, 0)
+
+
+def test_ar_decomposition_eq2():
+    # Eq. 2: AR = RS + AG
+    ar = cm.ar_cost(1e6, 8, 1e9, 1e-6)
+    assert ar == pytest.approx(cm.rs_cost(1e6, 8, 1e9, 1e-6)
+                               + cm.ag_cost(1e6, 8, 1e9, 1e-6))
+
+
+def test_a2a_pairwise_scaling_eq3():
+    # Eq. 3: A2A ∝ (size/d) * (d-1); degree 1 is free
+    assert cm.a2a_cost(1e6, 1, 1e9, 0) == 0.0
+    t2 = cm.a2a_cost(1e6, 2, 1e9, 0)
+    t8 = cm.a2a_cost(1e6, 8, 1e9, 0)
+    assert t2 == pytest.approx(1e6 / 2 * 1 / 1e9)
+    assert t8 == pytest.approx(1e6 / 8 * 7 / 1e9)
+
+
+def test_collectives_monotone_in_size():
+    for f in (cm.rs_cost, cm.ag_cost, cm.ar_cost, cm.a2a_cost):
+        assert f(2e6, 4, 1e9, 1e-6) > f(1e6, 4, 1e9, 1e-6)
+
+
+def test_fig3_tp_worse_than_ep_at_d32():
+    """The paper's Fig. 3 observation: AR-based TP loses to A2A-based EP when
+    the communication group spans nodes (d=32 on the 910B cluster)."""
+    model = get("deepseek-v2-236b")
+    cl = ASCEND_910B_CLUSTER
+    work = cm.Workload(batch=16, seq_len=1024)
+    size = work.batch * work.seq_len * model.d_model * cm.BYTES
+    # d=32 spans 4 nodes -> AR rides inter-node links
+    bw, a = cm.tp_link(cl, 32)
+    ar32 = cm.ar_cost(size, 32, bw, a)
+    a2a32 = cm.a2a_cost(size * model.top_k, 32, cl.bw(True), cl.latency(True))
+    assert bw == cl.inter_node_bw        # TP at d=32 is inter-node
+    assert ar32 > cm.ar_cost(size, 8, cl.intra_node_bw, cl.intra_node_latency)
+
+
+def test_eq13_beats_eq12_on_910b():
+    """The hybrid TP-EP (Eq. 13) must beat pure EP (Eq. 12) on the paper's
+    clusters: the inter-node A2A volume drops by 1/n_proc."""
+    model = get("deepseek-v2-236b")
+    for cl in (ASCEND_910B_CLUSTER, H20_CLUSTER):
+        work = cm.Workload(batch=16, seq_len=1024)
+        pure = cm.Strategy(attn_tp=cl.n_proc, attn_dp=cl.n_node,
+                           moe_tp=1, moe_ep=cl.n_devices,
+                           comm_algo="unfused", ep_inter_node=True)
+        mix = cm.Strategy(attn_tp=cl.n_proc, attn_dp=cl.n_node,
+                          moe_tp=cl.n_proc, moe_ep=cl.n_node,
+                          comm_algo="fused", ep_inter_node=True)
+        lam_pure = cm.comm_latency(model, pure, work, cl)
+        lam_mix = cm.comm_latency(model, mix, work, cl)
+        assert lam_mix < lam_pure, (cl.name, lam_mix, lam_pure)
+
+
+def test_fused_beats_sync_beats_unfused():
+    """Fig. 12 ablation ordering: fused (overlapped) < sync < unfused."""
+    model = get("deepseek-v2-236b")
+    cl = ASCEND_910B_CLUSTER
+    work = cm.Workload(batch=16, seq_len=1024)
+    def lam(algo):
+        s = cm.Strategy(attn_tp=8, attn_dp=4, moe_tp=8, moe_ep=4,
+                        comm_algo=algo, ep_inter_node=True)
+        return cm.comm_latency(model, s, work, cl)
+    assert lam("fused") < lam("sync")
+    assert lam("sync") < lam("unfused")
+
+
+def test_queuing_delay_eq7():
+    # Eq. 7: W_q = rho / (mu (1 - rho)); unstable -> inf
+    svc = 0.01
+    assert cm.queuing_delay(svc, 0.0) == 0.0
+    w = cm.queuing_delay(svc, 50.0)       # mu=100, rho=0.5 -> 0.01
+    assert w == pytest.approx(50.0 / (100.0 * 50.0))
+    assert math.isinf(cm.queuing_delay(svc, 100.0))
+    assert math.isinf(cm.queuing_delay(svc, 200.0))
+
+
+def test_ttft_itl_eq9_eq10():
+    model = get("phi3.5-moe-42b")
+    strat = cm.Strategy(attn_tp=8, attn_dp=2, moe_tp=8, moe_ep=2)
+    ind = cm.indicators(model, strat, H20_CLUSTER, batch=16, l_in=1024,
+                        l_out=128)
+    # prefill processes 1024x the tokens of one decode step
+    assert ind.ttft > ind.itl
+    assert ind.throughput > 0
+    assert ind.stable
+
+
+def test_memory_constraint_eq8():
+    model = get("deepseek-v2-236b")
+    tiny = cm.Strategy(attn_tp=1, attn_dp=1, moe_tp=1, moe_ep=1)
+    big = cm.Strategy(attn_tp=16, attn_dp=16, moe_tp=16, moe_ep=16)
+    # 236B params cannot fit one 16GB chip; must fit 256 chips
+    assert not cm.fits_memory(model, tiny, TPU_V5E_POD, batch=1, seq_len=128)
+    m = cm.memory_per_device(model, big, batch=32, seq_len=4096)
+    assert m < cm.memory_per_device(model, tiny, batch=32, seq_len=4096)
+
+
+def test_memory_sharding_consistency():
+    """Total memory across devices >= unsharded footprint (replication only
+    ever adds)."""
+    model = get("phi3.5-moe-42b")
+    base = cm.memory_per_device(
+        model, cm.Strategy(), batch=8, seq_len=1024)
+    strat = cm.Strategy(attn_tp=4, attn_dp=4, moe_tp=4, moe_ep=4)
+    sharded = cm.memory_per_device(model, strat, batch=8, seq_len=1024)
+    assert sharded * 16 >= base * 0.99
+
+
+def test_pow2_divisors():
+    assert pow2_divisors(16) == [1, 2, 4, 8, 16]
+    assert pow2_divisors(12) == [1, 2, 4]
+
+
+def test_strategy_validation():
+    with pytest.raises(ValueError):
+        cm.Strategy(attn_tp=4, attn_dp=2, moe_tp=2, moe_ep=2).validate()
+    with pytest.raises(ValueError):
+        cm.Strategy(attn_tp=3, attn_dp=1, moe_tp=3, moe_ep=1).validate()
+    cm.Strategy(attn_tp=4, attn_dp=4, moe_tp=2, moe_ep=8).validate()

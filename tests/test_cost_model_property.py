@@ -1,0 +1,86 @@
+"""Property-based tests (hypothesis) on the cost model's invariants."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get
+from repro.core import cost_model as cm
+from repro.core.topology import ASCEND_910B_CLUSTER, H20_CLUSTER
+
+POW2 = st.sampled_from([1, 2, 4, 8, 16, 32])
+SIZE = st.floats(1e3, 1e10)
+BW = st.floats(1e8, 1e12)
+
+
+@settings(max_examples=50, deadline=None)
+@given(size=SIZE, d=POW2, bw=BW)
+def test_collectives_nonnegative_and_free_at_degree_1(size, d, bw):
+    for f in (cm.rs_cost, cm.ag_cost, cm.ar_cost, cm.a2a_cost):
+        t = f(size, d, bw, 1e-6)
+        assert t >= 0.0
+        assert f(size, 1, bw, 1e-6) == 0.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(size=SIZE, d=POW2, bw=BW)
+def test_collectives_monotone_in_size_and_bandwidth(size, d, bw):
+    for f in (cm.rs_cost, cm.ar_cost, cm.a2a_cost):
+        assert f(2 * size, d, bw, 0.0) >= f(size, d, bw, 0.0)
+        assert f(size, d, 2 * bw, 0.0) <= f(size, d, bw, 0.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.integers(1, 64), s=st.integers(1, 4096))
+def test_service_latency_monotone_in_tokens(b, s):
+    model = get("phi3.5-moe-42b")
+    strat = cm.Strategy(attn_tp=8, attn_dp=2, moe_tp=8, moe_ep=2)
+    t1 = cm.service_latency(model, strat,
+                            cm.Workload(batch=b, seq_len=s), H20_CLUSTER)
+    t2 = cm.service_latency(model, strat,
+                            cm.Workload(batch=b, seq_len=2 * s), H20_CLUSTER)
+    assert t2 >= t1 > 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(rate=st.floats(0.0, 1e4), svc=st.floats(1e-4, 1.0))
+def test_queuing_delay_monotone_in_rate(rate, svc):
+    w1 = cm.queuing_delay(svc, rate)
+    w2 = cm.queuing_delay(svc, rate * 1.5 + 1e-6)
+    assert w2 >= w1 >= 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(batch=st.integers(1, 64), l_in=st.integers(16, 4096),
+       l_out=st.integers(1, 512))
+def test_indicators_internally_consistent(batch, l_in, l_out):
+    model = get("deepseek-v2-236b")
+    strat = cm.Strategy(attn_tp=8, attn_dp=4, moe_tp=8, moe_ep=4)
+    ind = cm.indicators(model, strat, ASCEND_910B_CLUSTER, batch=batch,
+                        l_in=l_in, l_out=l_out)
+    assert ind.ttft >= 0 and ind.itl > 0 and ind.throughput > 0
+    # TTFT includes the whole prefill; must exceed one decode step's latency
+    # whenever the prompt is at least a decode step's worth of work
+    assert ind.ttft >= ind.w_q
+    # throughput can never exceed tokens/itl at perfect prefill
+    assert ind.throughput <= batch * (l_in + l_out) / (l_out * ind.itl) + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.integers(1, 32), s=st.integers(16, 2048))
+def test_memory_monotone_in_batch_and_seq(b, s):
+    model = get("minitron-8b")
+    strat = cm.Strategy(attn_tp=8, attn_dp=2, moe_tp=8, moe_ep=2)
+    m1 = cm.memory_per_device(model, strat, batch=b, seq_len=s)
+    m2 = cm.memory_per_device(model, strat, batch=b + 1, seq_len=s)
+    m3 = cm.memory_per_device(model, strat, batch=b, seq_len=s * 2)
+    assert m2 >= m1 and m3 >= m1
+
+
+@settings(max_examples=25, deadline=None)
+@given(d1=st.sampled_from([2, 4, 8]), d2=st.sampled_from([2, 4, 8]))
+def test_sharding_reduces_memory(d1, d2):
+    model = get("phi3.5-moe-42b")
+    small = cm.Strategy(attn_tp=d1, attn_dp=d2, moe_tp=d1, moe_ep=d2)
+    base = cm.Strategy()
+    assert cm.memory_per_device(model, small, batch=8, seq_len=512) <= \
+        cm.memory_per_device(model, base, batch=8, seq_len=512)

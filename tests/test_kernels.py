@@ -1,0 +1,90 @@
+"""Pallas kernel sweeps: shapes x dtypes, assert_allclose vs the jnp oracle.
+
+Kernels run in interpret mode on CPU (the kernel body executes in Python);
+on a TPU backend the same wrappers lower natively.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("e,c,h,d", [
+    (2, 64, 64, 64), (4, 128, 128, 128), (1, 100, 96, 200),
+    (8, 48, 256, 128), (3, 130, 70, 90),
+])
+def test_moe_gemm_sweep(e, c, h, d, dtype):
+    x = jax.random.normal(KEY, (e, c, h), dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (e, h, d), jnp.float32)
+         / np.sqrt(h)).astype(dtype)
+    got = ops.moe_gemm(x, w)
+    want = ops.moe_gemm_ref(x, w)
+    assert got.shape == (e, c, d) and got.dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("t,e,k", [
+    (64, 8, 2), (256, 16, 2), (100, 160, 6), (17, 4, 3), (512, 64, 8),
+])
+def test_topk_gate_sweep(t, e, k):
+    logits = jax.random.normal(KEY, (t, e), jnp.float32)
+    gw, gi = ops.topk_gate(logits, k)
+    ww, wi = ops.topk_gate_ref(logits, k)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(ww), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,nq,nkv,hd,s", [
+    (2, 8, 2, 64, 256), (1, 4, 1, 32, 77), (4, 16, 16, 64, 512),
+    (2, 28, 4, 128, 300),
+])
+def test_flash_decode_sweep(b, nq, nkv, hd, s, dtype):
+    q = jax.random.normal(KEY, (b, nq, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, hd), dtype)
+    lens = jnp.asarray(
+        np.random.default_rng(0).integers(1, s + 1, b), jnp.int32)
+    got = ops.flash_decode(q, k, v, lens, bs=128)
+    want = ops.flash_decode_ref(q, k, v, lens)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_decode_matches_model_decode_attention():
+    """Kernel == the model's pure-JAX decode path (same masking semantics)."""
+    from repro.models.layers import decode_attention
+    b, nq, nkv, hd, s = 2, 8, 4, 32, 128
+    q = jax.random.normal(KEY, (b, 1, nq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, hd))
+    lens = jnp.asarray([50, 128], jnp.int32)
+    jnp_out = decode_attention(q, k, v, kv_len=lens,
+                               q_positions=(lens - 1)[:, None])
+    krn_out = ops.flash_decode(q[:, 0], k, v, lens)
+    np.testing.assert_allclose(np.asarray(jnp_out[:, 0]),
+                               np.asarray(krn_out), atol=1e-4)
+
+
+def test_moe_gemm_grad_matches_ref():
+    """The pallas_call is differentiable in interpret mode? No — but the ops
+    wrapper is only used in inference paths; verify the forward at bf16
+    accumulates in f32 (no catastrophic error vs f32 oracle)."""
+    e, c, h, d = 2, 64, 128, 64
+    x32 = jax.random.normal(KEY, (e, c, h), jnp.float32)
+    w32 = jax.random.normal(jax.random.PRNGKey(1), (e, h, d)) / np.sqrt(h)
+    ref32 = ops.moe_gemm_ref(x32, w32)
+    got16 = ops.moe_gemm(x32.astype(jnp.bfloat16), w32.astype(jnp.bfloat16))
+    err = float(jnp.max(jnp.abs(got16.astype(jnp.float32) - ref32)))
+    assert err < 0.15   # bf16 inputs, f32 accumulation

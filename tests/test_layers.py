@@ -1,0 +1,168 @@
+"""Attention / RoPE / norm layer unit tests against naive references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import init_tree
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, kv_len=None,
+                    q_offset=0, scale=None):
+    b, sq, nq, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = scale or hd ** -0.5
+    qg = q.reshape(b, sq, nkv, g, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    q_pos = q_offset + np.arange(sq)
+    k_pos = np.arange(skv)
+    mask = np.ones((sq, skv), bool)
+    if kv_len is not None:
+        mask &= k_pos[None] < kv_len
+    if causal:
+        mask &= k_pos[None] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None] > q_pos[:, None] - window
+    s = jnp.where(jnp.asarray(mask)[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, nq, v.shape[-1])
+
+
+@pytest.mark.parametrize("sq,skv,nq,nkv,window", [
+    (16, 16, 4, 4, 0), (33, 33, 8, 2, 0), (64, 64, 6, 1, 0),
+    (32, 32, 4, 2, 8), (17, 40, 4, 4, 0),
+])
+def test_chunked_attention_matches_naive(sq, skv, nq, nkv, window):
+    key = jax.random.PRNGKey(0)
+    b, hd = 2, 16
+    q = jax.random.normal(key, (b, sq, nq, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, skv, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, skv, nkv, hd))
+    off = skv - sq
+    got = L.chunked_attention(q, k, v, q_offset=off, causal=True,
+                              window=window, chunk_size=8)
+    want = naive_attention(q, k, v, causal=True, window=window, q_offset=off)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_chunked_attention_kv_len_mask():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 4, 2, 8))
+    k = jax.random.normal(key, (1, 20, 2, 8))
+    v = jax.random.normal(key, (1, 20, 2, 8))
+    got = L.chunked_attention(q, k, v, q_offset=6, kv_len=10, chunk_size=4)
+    want = naive_attention(q, k, v, kv_len=10, q_offset=6)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_decode_attention_matches_naive():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (3, 1, 8, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (3, 32, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (3, 32, 2, 16))
+    got = L.decode_attention(q, k, v, kv_len=20,
+                             q_positions=jnp.asarray([19]))
+    want = naive_attention(q, k, v, kv_len=20, q_offset=19)[:, :1]
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_decode_attention_per_slot_lengths():
+    """Vector kv_len: each batch row masks its own cache tail."""
+    key = jax.random.PRNGKey(0)
+    b = 4
+    q = jax.random.normal(key, (b, 1, 4, 8))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, 16, 4, 8))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, 16, 4, 8))
+    lens = jnp.asarray([3, 7, 16, 1])
+    got = L.decode_attention(q, k, v, kv_len=lens,
+                             q_positions=(lens - 1)[:, None])
+    for i in range(b):
+        want = naive_attention(q[i:i+1], k[i:i+1], v[i:i+1],
+                               kv_len=int(lens[i]),
+                               q_offset=int(lens[i]) - 1)[:, :1]
+        np.testing.assert_allclose(got[i:i+1], want, atol=2e-5)
+
+
+def test_decode_attention_ring_positions():
+    """k_positions drives causal/window tests for ring-buffer caches."""
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 1, 2, 8))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 2, 8))
+    # ring holding positions 8..15 permuted, current q at 15, window 4
+    kpos = jnp.asarray([8, 9, 10, 11, 12, 13, 14, 15])
+    perm = jnp.asarray([3, 0, 6, 1, 7, 2, 5, 4])
+    got = L.decode_attention(q, k[:, perm], v[:, perm],
+                             q_positions=jnp.asarray([15]),
+                             k_positions=kpos[perm], window=4)
+    # reference: unpermuted k holds positions 8..15 at slots 0..7, so in the
+    # naive index space the query sits at slot 7
+    want = naive_attention(q, k, v, window=4, q_offset=7, kv_len=8)[:, :1]
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_write_cache_scalar_and_vector():
+    buf = jnp.zeros((3, 8, 2))
+    new = jnp.ones((3, 2, 2))
+    got = L.write_cache(buf, new, 4)
+    assert float(got[:, 4:6].sum()) == 12.0 and float(got.sum()) == 12.0
+    new1 = jnp.ones((3, 1, 2)) * jnp.asarray([1., 2., 3.])[:, None, None]
+    got = L.write_cache(buf, new1, jnp.asarray([0, 3, 7]))
+    assert got[0, 0, 0] == 1 and got[1, 3, 0] == 2 and got[2, 7, 0] == 3
+    assert float(got.sum()) == 12.0
+
+
+def test_rope_rotation_invariant():
+    """RoPE preserves norms and relative-position dot products."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 6, 2, 16))
+    pos = jnp.arange(6)[None]
+    r = L.apply_rope(x, pos)
+    np.testing.assert_allclose(jnp.linalg.norm(r, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jax.random.normal(key, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    def dot_at(p, d):
+        rq = L.apply_rope(q, jnp.asarray([[p]]))
+        rk = L.apply_rope(k, jnp.asarray([[p + d]]))
+        return float(jnp.sum(rq * rk))
+    assert abs(dot_at(0, 3) - dot_at(11, 3)) < 1e-4
+
+
+def test_mrope_sections_match_rope_when_uniform():
+    """M-RoPE with identical t/h/w position streams == plain RoPE."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 5, 3, 32))
+    pos = jnp.arange(5)
+    p3 = jnp.broadcast_to(pos, (2, 3, 5))
+    got = L.apply_mrope(x, p3, (4, 6, 6))
+    want = L.apply_rope(x, pos[None])
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_rms_norm():
+    x = jnp.asarray([[1.0, 2.0, 3.0, 4.0]])
+    w = jnp.zeros(4)
+    out = L.rms_norm(x, w)
+    rms = np.sqrt(np.mean(np.square([1, 2, 3, 4])) + 1e-6)
+    np.testing.assert_allclose(out, np.asarray([[1, 2, 3, 4]]) / rms,
+                               rtol=1e-5)
+
+
+def test_mla_absorbed_equals_expanded():
+    """The absorbed (latent-space) MLA path must equal head-expanded MLA."""
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=64,
+                      head_dim=16, attention="mla", kv_lora_rank=24,
+                      q_lora_rank=32, rope_head_dim=8, v_head_dim=16)
+    p = init_tree(jax.random.PRNGKey(0), L.mla_spec(cfg), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, 64))
+    out_a, _ = L.mla_attention(p, x, cfg, absorb=True)
+    out_e, _ = L.mla_attention(p, x, cfg, absorb=False)
+    np.testing.assert_allclose(out_a, out_e, atol=2e-5)

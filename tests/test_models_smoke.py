@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests: REDUCED variants of every assigned arch run
+one forward + one train step on CPU, asserting output shapes and no NaNs
+(deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import model as M
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, b, s):
+    kw, s_text = {}, s
+    if cfg.frontend == "vision_stub":
+        s_text = s - cfg.n_frontend_tokens
+        kw["embeds"] = jax.random.normal(
+            KEY, (b, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
+    if cfg.frontend == "audio_stub":
+        e = cfg.encoder
+        kw["frames"] = jax.random.normal(KEY, (b, e.n_frames, e.d_model)) * 0.02
+    tokens = jax.random.randint(KEY, (b, s_text), 0, cfg.vocab_size)
+    return tokens, kw
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_reduced_forward_shapes_and_finite(arch):
+    cfg = C.get_reduced(arch)
+    assert cfg.n_layers <= 3 and cfg.d_model <= 512
+    if cfg.is_moe:
+        assert cfg.n_experts <= 4
+    params = M.init_params(KEY, cfg, jnp.float32)
+    b, s = 2, 32
+    tokens, kw = _inputs(cfg, b, s)
+    out = jax.jit(lambda p, t: M.forward(p, cfg, tokens=t, **kw))(
+        params, tokens)
+    assert out.logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(out.logits)))
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_reduced_train_step(arch):
+    cfg = C.get_reduced(arch)
+    params = M.init_params(KEY, cfg, jnp.float32)
+    opt = init_opt_state(params)
+    b, s = 2, 32
+    tokens, kw = _inputs(cfg, b, s)
+    batch = {"tokens": tokens,
+             "labels": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size),
+             **kw}
+    step = jax.jit(make_train_step(cfg, opt_cfg=AdamWConfig(lr=1e-3),
+                                   remat=False))
+    new_params, new_opt, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert int(new_opt.step) == 1
+    # parameters actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a - b_))) > 0
+        for a, b_ in zip(jax.tree.leaves(params)[:5],
+                         jax.tree.leaves(new_params)[:5]))
+    assert moved
+
+
+def test_full_config_exactness():
+    """The FULL configs carry the exact assigned hyperparameters."""
+    rows = {
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "phi3.5-moe-42b": (32, 4096, 32, 8, 6400, 32064),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "rwkv6-1.6b": (24, 2048, 0, 0, 7168, 65536),
+        "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 12288, 102400),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    }
+    for arch, (nl, dm, nh, nkv, dff, v) in rows.items():
+        cfg = C.get(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (nl, dm, nh, nkv, dff, v), arch
+        assert cfg.source, arch
+    d = C.get("deepseek-v2-236b")
+    assert (d.n_experts, d.top_k, d.n_shared_experts, d.kv_lora_rank,
+            d.d_expert) == (160, 6, 2, 512, 1536)
+    p = C.get("phi3.5-moe-42b")
+    assert (p.n_experts, p.top_k) == (16, 2)
+    g = C.get("gemma-2b")
+    assert (g.head_dim, g.activation) == (256, "geglu")
+    r = C.get("recurrentgemma-9b")
+    assert r.block_pattern == ("rec", "rec", "attn")
+    q = C.get("qwen2-vl-7b")
+    assert q.mrope and q.frontend == "vision_stub"
+    w = C.get("whisper-tiny")
+    assert w.encoder is not None and w.frontend == "audio_stub"
+
+
+def test_param_counts_in_expected_range():
+    """Total parameter counts land near the names' advertised sizes."""
+    expect = {
+        "smollm-360m": (0.30e9, 0.45e9),
+        "gemma-2b": (2.0e9, 3.2e9),
+        "minicpm3-4b": (3.3e9, 5.0e9),
+        "qwen2-vl-7b": (6.5e9, 9.0e9),
+        "minitron-8b": (7.0e9, 10.0e9),
+        "rwkv6-1.6b": (1.3e9, 2.1e9),
+        "recurrentgemma-9b": (7.5e9, 11.0e9),
+        "phi3.5-moe-42b": (38e9, 46e9),
+        "deepseek-v2-236b": (210e9, 250e9),
+        "whisper-tiny": (0.02e9, 0.08e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = M.count_params(C.get(arch))
+        assert lo <= n <= hi, f"{arch}: {n:,} not in [{lo:.1e}, {hi:.1e}]"
+
+
+def test_layer_plan_grouping():
+    assert [g.kind for g in M.layer_plan(C.get("deepseek-v2-236b"))] == \
+        ["dense", "moe"]
+    hybrid = M.layer_plan(C.get("recurrentgemma-9b"))
+    assert hybrid[0].kind == "pattern" and hybrid[0].count == 12
+    assert hybrid[1].kind == "rec" and hybrid[1].count == 2
+    assert sum(g.count * (len(g.sub) or 1) for g in hybrid) == 38

@@ -1,0 +1,85 @@
+"""Partitioner / sharding-plan unit tests (no multi-device needed)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.partitioner import NULL_PLAN, ShardingPlan, make_plan
+
+
+class FakeMesh:
+    """Duck-typed mesh exposing .shape and .axis_names only."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def plan_with(rules, shape):
+    return ShardingPlan(mesh=FakeMesh(shape), rules=rules)
+
+
+def test_null_plan_identity():
+    assert not NULL_PLAN.enabled
+    assert NULL_PLAN.spec(("batch", "embed")) == P()
+    x = object()
+    assert NULL_PLAN.constrain(x, "batch") is x
+
+
+def test_spec_mapping():
+    p = plan_with({"heads": ("model",), "batch": ("data",)},
+                  {"data": 4, "model": 2})
+    assert p.spec(("batch", None, "heads")) == P("data", None, "model")
+    # trailing Nones trimmed
+    assert p.spec(("heads", "nope")) == P("model")
+
+
+def test_spec_no_duplicate_mesh_axes():
+    """A mesh axis may appear at most once in a PartitionSpec."""
+    p = plan_with({"a": ("model",), "b": ("model",)}, {"model": 2})
+    spec = p.spec(("a", "b"))
+    assert spec == P("model")       # second use dropped
+
+
+def test_spec_for_shape_divisibility():
+    p = plan_with({"heads": ("model",), "batch": ("data",)},
+                  {"data": 4, "model": 16})
+    # 15 heads % 16 != 0 -> replicated; 32 batch % 4 == 0 -> sharded
+    assert p.spec_for_shape((32, 15), ("batch", "heads")) == P("data")
+    assert p.spec_for_shape((32, 32), ("batch", "heads")) == P("data", "model")
+
+
+def test_make_plan_layouts():
+    mesh = FakeMesh({"data": 4, "model": 2})
+    mix = make_plan("mixserve", mesh)
+    assert mix.rules["expert"] == ("data",)
+    assert mix.rules["expert_ffn"] == ("model",)
+    assert mix.tp == 2 and mix.ep == 4 and mix.dp == 4
+    assert mix.comm_algo == "fused"
+
+    ep = make_plan("dp_ep", mesh)
+    assert set(ep.rules["expert"]) == {"data", "model"}
+    assert ep.comm_algo == "unfused"
+
+    tp = make_plan("pure_tp", mesh)
+    assert tp.rules["expert"] is None
+    assert tp.ep == 1
+
+    with pytest.raises(KeyError):
+        make_plan("nope", mesh)
+
+
+def test_make_plan_multipod_axes():
+    mesh = FakeMesh({"pod": 2, "data": 4, "model": 2})
+    mix = make_plan("mixserve", mesh)
+    # batch spans pod+data; experts only data (pod replicates EP groups —
+    # no A2A ever rides the DCN "pod" axis)
+    assert mix.rules["batch"] == ("pod", "data")
+    assert mix.rules["expert"] == ("data",)
+    assert mix.dp == 8
+
+
+def test_kv_seq_rule_present_in_all_plans():
+    mesh = FakeMesh({"data": 4, "model": 2})
+    for name in ("mixserve", "dp_ep", "pure_tp"):
+        p = make_plan(name, mesh)
+        assert p.rules["kv_seq"] == ("model",), name

@@ -1,0 +1,64 @@
+"""Regression guard on the dry-run -> roofline analysis pipeline."""
+
+import json
+import os
+
+import pytest
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+
+def _records():
+    if not os.path.isdir(RESULTS):
+        return []
+    out = []
+    for fn in sorted(os.listdir(RESULTS)):
+        if fn.endswith("_mixserve.json"):
+            with open(os.path.join(RESULTS, fn)) as f:
+                r = json.load(f)
+            if r.get("status") == "ok":
+                out.append(r)
+    return out
+
+
+@pytest.mark.skipif(not _records(), reason="no dry-run records generated")
+def test_dryrun_records_complete_and_analyzable():
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.roofline import analyze
+
+    recs = _records()
+    # 10 archs x {4,3} shapes x 2 meshes: 64 ok records expected
+    assert len(recs) == 64, len(recs)
+    seen = set()
+    for r in recs:
+        seen.add((r["arch"], r["shape"], r["mesh"]))
+        a = analyze(r)
+        assert a["t_compute"] > 0 and a["t_memory"] > 0
+        assert a["dominant"] in ("compute", "memory", "collective")
+        assert 0 < a["useful_ratio"] <= 1.0
+        # decode must never be collective-dominant post pair-2 fix
+        if r["shape"] in ("decode_32k", "long_500k"):
+            assert a["dominant"] == "memory", (r["arch"], r["shape"],
+                                               a["dominant"])
+        # memory proof: everything except the documented deepseek train cell
+        over = (r["memory"]["argument_bytes"]
+                + r["memory"]["temp_bytes"]) / 1e9 > 16.5
+        if over:
+            assert (r["arch"], r["shape"]) == ("deepseek-v2-236b",
+                                               "train_4k"), r["arch"]
+    assert len(seen) == 64
+
+
+@pytest.mark.skipif(not _records(), reason="no dry-run records generated")
+def test_collective_parser_scales_with_layers():
+    """Sanity: a deeper arch's per-step collective traffic in the same
+    family/shape should not be smaller than a much shallower one (trip-count
+    accounting actually multiplies)."""
+    recs = {(r["arch"], r["shape"], r["mesh"]): r for r in _records()}
+    deep = recs[("minicpm3-4b", "prefill_32k", "single")]  # 62 layers
+    shallow = recs[("whisper-tiny", "prefill_32k", "single")]  # 4 layers
+    d = deep["costs"]["collectives"]["bytes"]["total"]
+    s = shallow["costs"]["collectives"]["bytes"]["total"]
+    assert d > 5 * s

@@ -1,0 +1,86 @@
+"""Serving engine + scheduler integration tests (continuous batching)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models.model import init_params
+from repro.serving.engine import Engine, Request
+from repro.serving.scheduler import Scheduler, synthetic_workload
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = C.get_reduced("smollm-360m")
+    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    return cfg, params
+
+
+def test_engine_completes_all_requests(smollm):
+    cfg, params = smollm
+    eng = Engine(cfg, params, max_batch=3, max_len=96)
+    sched = Scheduler(eng)
+    reqs = list(synthetic_workload(7, prompt_len=16, max_new_tokens=5,
+                                   vocab=cfg.vocab_size))
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run()
+    assert len(done) == 7
+    assert all(len(r.out_tokens) == 5 for r in done)
+    m = sched.metrics()
+    assert m.n_requests == 7 and m.throughput_tok_s > 0
+
+
+def test_continuous_batching_matches_isolated_generation(smollm):
+    """Tokens generated under slot contention == tokens generated alone.
+
+    This is THE correctness property of per-slot lengths: an occupied slot's
+    generation must be unaffected by neighbours being admitted/retired."""
+    cfg, params = smollm
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (9, 14, 5, 11, 7)]
+
+    # isolated: one request at a time, fresh engine
+    isolated = []
+    for p in prompts:
+        eng = Engine(cfg, params, max_batch=1, max_len=64)
+        s = Scheduler(eng)
+        s.submit(Request(rid=0, prompt=p, max_new_tokens=6))
+        done = s.run()
+        isolated.append(done[0].out_tokens)
+
+    # contended: all five through a 2-slot engine
+    eng = Engine(cfg, params, max_batch=2, max_len=64)
+    s = Scheduler(eng)
+    for i, p in enumerate(prompts):
+        s.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+    done = sorted(s.run(), key=lambda r: r.rid)
+    contended = [r.out_tokens for r in done]
+
+    assert contended == isolated
+
+
+def test_slot_reuse_after_retirement(smollm):
+    cfg, params = smollm
+    eng = Engine(cfg, params, max_batch=1, max_len=64)
+    sched = Scheduler(eng)
+    for r in synthetic_workload(3, prompt_len=8, max_new_tokens=3,
+                                vocab=cfg.vocab_size):
+        sched.submit(r)
+    done = sched.run()
+    assert len(done) == 3          # same slot served all three sequentially
+
+
+def test_greedy_determinism(smollm):
+    cfg, params = smollm
+    p = np.arange(10, dtype=np.int32) % cfg.vocab_size
+    outs = []
+    for _ in range(2):
+        eng = Engine(cfg, params, max_batch=1, max_len=64)
+        s = Scheduler(eng)
+        s.submit(Request(rid=0, prompt=p, max_new_tokens=8))
+        outs.append(s.run()[0].out_tokens)
+    assert outs[0] == outs[1]

@@ -1,0 +1,34 @@
+"""Sharded integration tests, each in a subprocess with its own fake-device
+count (the main pytest process keeps the default 1 CPU device, per the
+dry-run isolation rule)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+def _run(script: str, timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, os.path.join(HERE, "sharded", script)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    if r.returncode != 0:
+        pytest.fail(f"{script} failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}")
+    return r.stdout
+
+
+def test_moe_equivalence_across_plans():
+    out = _run("run_moe_equivalence.py")
+    assert "MOE_EQUIVALENCE_OK" in out
+
+
+def test_sharded_model_matches_unsharded():
+    out = _run("run_sharded_model.py")
+    assert "SHARDED_MODEL_OK" in out

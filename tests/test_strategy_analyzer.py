@@ -1,0 +1,102 @@
+"""Strategy grammar enumeration + automatic analyzer behaviour."""
+
+import pytest
+
+from repro.configs import get
+from repro.core import analyzer
+from repro.core.cost_model import Strategy
+from repro.core.strategy import PRESETS, enumerate_strategies, preset
+from repro.core.topology import (ASCEND_910B_CLUSTER, H20_CLUSTER,
+                                 TPU_V5E_POD)
+
+
+def test_grammar_covers_cluster():
+    for cl in (H20_CLUSTER, ASCEND_910B_CLUSTER):
+        for moe in (True, False):
+            strats = list(enumerate_strategies(cl, model_is_moe=moe))
+            assert strats
+            for s in strats:
+                s.validate()
+                assert s.n_devices == cl.n_devices
+
+
+def test_grammar_degrees_are_pow2():
+    for s in enumerate_strategies(H20_CLUSTER, model_is_moe=True):
+        for d in (s.attn_tp, s.attn_dp, s.moe_tp, s.moe_ep, s.d_pp):
+            assert d & (d - 1) == 0
+
+
+def test_presets_match_table2():
+    cl = ASCEND_910B_CLUSTER             # 4 nodes x 8 NPUs
+    s = preset("vllm_tp_pp", cl)
+    assert (s.attn_tp, s.d_pp) == (8, 4)
+    s = preset("vllm_dp_ep", cl)
+    assert (s.attn_tp, s.attn_dp, s.moe_ep) == (8, 4, 32)
+    s = preset("tutel_tp_ep", cl)
+    assert (s.moe_tp, s.moe_ep) == (8, 4)
+    s = preset("mixserve", cl)
+    assert (s.moe_tp, s.moe_ep, s.comm_algo) == (8, 4, "fused")
+    for name in PRESETS:
+        preset(name, cl).validate()
+
+
+def test_analyzer_returns_feasible_best():
+    model = get("phi3.5-moe-42b")
+    rep = analyzer.select(model, H20_CLUSTER, batch=16, l_in=1024, l_out=128)
+    assert rep.best.feasible
+    assert rep.best.ind.stable
+    # ranked by the objective
+    scores = [c.score(rep.objective) for c in rep.ranked]
+    assert scores == sorted(scores)
+
+
+def test_analyzer_prefers_hybrid_for_deepseek_on_910b():
+    """The paper's headline result: for DeepSeek-R1-class models on the 910B
+    cluster the hybrid TP-EP fused strategy wins over pure EP and TP+PP."""
+    model = get("deepseek-v2-236b")
+    rep = analyzer.select(model, ASCEND_910B_CLUSTER, batch=16, l_in=1024,
+                          l_out=128, objective="throughput")
+    best = rep.best.strategy
+    assert best.moe_tp > 1 and best.moe_ep > 1, best.describe()
+    assert best.comm_algo == "fused"
+
+
+def test_analyzer_respects_memory():
+    model = get("deepseek-v2-236b")
+    rep = analyzer.select(model, TPU_V5E_POD, batch=16, l_in=1024, l_out=128)
+    for c in rep.ranked:
+        if c.feasible:
+            assert c.mem_bytes < TPU_V5E_POD.hbm_bytes
+
+
+def test_analyzer_expert_divisibility():
+    model = get("phi3.5-moe-42b")        # 16 experts
+    rep = analyzer.select(model, TPU_V5E_POD, batch=16, l_in=512, l_out=64)
+    # EP degree beyond n_experts is infeasible
+    for c in rep.ranked:
+        if c.strategy.moe_ep > 16:
+            assert not c.feasible
+
+
+def test_fused_dominates_unfused_when_ep_inter_node():
+    """The paper's regime: with the EP group spanning nodes, fused RS-A2A-AG
+    must not lose to the unfused layout.  (When EP fits INSIDE a node the
+    reorganization's extra intra RS/AG is pure overhead and the analyzer
+    correctly prefers unfused — deliberately NOT asserted here.)"""
+    model = get("deepseek-v2-236b")
+    rep = analyzer.select(model, ASCEND_910B_CLUSTER, batch=16, l_in=1024,
+                          l_out=128, comm_algos=("fused", "unfused"))
+    by_layout = {}
+    for c in rep.ranked:
+        s = c.strategy
+        key = (s.attn_tp, s.attn_dp, s.moe_tp, s.moe_ep, s.d_pp,
+               s.ep_inter_node)
+        by_layout.setdefault(key, {})[s.comm_algo] = c.ind.itl
+    checked = 0
+    for key, d in by_layout.items():
+        if ("fused" in d and "unfused" in d and 1 < key[2] and key[3] > 1
+                and key[5]                         # ep_inter_node
+                and key[2] <= ASCEND_910B_CLUSTER.n_proc):  # TP intra-node
+            assert d["fused"] <= d["unfused"] * 1.0001, (key, d)
+            checked += 1
+    assert checked > 0
