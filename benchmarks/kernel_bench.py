@@ -1,42 +1,99 @@
-"""Pallas kernel micro-bench: interpret-mode correctness-scale timings plus
-the jnp-oracle timings on matched shapes (CPU walltime; the TPU story is the
-BlockSpec structure, not these numbers)."""
+"""Pallas kernel micro-bench: matched-shape pairs of the jnp oracle and the
+actual Pallas kernel (interpret mode on CPU — correctness-scale timings; the
+TPU story is the BlockSpec structure, not these numbers).
+
+Rows come in ``<op>_ref`` / ``<op>_pallas`` pairs so the CSV/JSON output can
+be diffed shape-for-shape, including the fused permute/unpermute dispatch
+kernels against the repeat+scatter-add / gather+reduce jnp bodies they
+replace.  Block sizes go through the autotune selection cache exactly like
+the serving path."""
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import time_fn
-from repro.kernels import ops
+from repro.kernels import autotune, ops
+from repro.models import moe as M
+
+
+def _pair(rows, name, us_ref, us_krn, derived=""):
+    rows.append((f"kernel/{name}_ref", us_ref, derived))
+    rows.append((f"kernel/{name}_pallas", us_krn,
+                 f"interp x{us_krn / max(us_ref, 1e-9):.1f} vs ref"))
 
 
 def run() -> list:
     rows = []
     key = jax.random.PRNGKey(0)
 
-    e, c, h, d = 8, 256, 512, 512
+    # ---- grouped expert GEMM --------------------------------------------
+    e, c, h, d = 4, 128, 256, 256
     x = jax.random.normal(key, (e, c, h), jnp.float32)
     w = jax.random.normal(key, (e, h, d), jnp.float32)
     us_ref = time_fn(jax.jit(ops.moe_gemm_ref), x, w)
+    us_krn = time_fn(functools.partial(ops.moe_gemm, x, w))
     flops = 2 * e * c * h * d
-    rows.append((f"kernel/moe_gemm_ref/{e}x{c}x{h}x{d}", us_ref,
-                 f"{flops / us_ref / 1e3:.1f}GFLOP/s(cpu)"))
+    _pair(rows, f"moe_gemm/{e}x{c}x{h}x{d}", us_ref, us_krn,
+          f"{flops / us_ref / 1e3:.1f}GFLOP/s(cpu)")
 
-    t, ne, k = 4096, 160, 6
+    # ---- fused router gate ----------------------------------------------
+    t, ne, k = 1024, 64, 4
     logits = jax.random.normal(key, (t, ne), jnp.float32)
-    us = time_fn(jax.jit(lambda l: ops.topk_gate_ref(l, k)), logits)
-    rows.append((f"kernel/topk_gate_ref/{t}x{ne}k{k}", us, ""))
+    us_ref = time_fn(jax.jit(lambda l: ops.topk_gate_ref(l, k)), logits)
+    us_krn = time_fn(functools.partial(ops.topk_gate, logits, k))
+    _pair(rows, f"topk_gate/{t}x{ne}k{k}", us_ref, us_krn)
 
-    b, nq, nkv, hd, s = 8, 32, 8, 128, 4096
+    # ---- flash decode ---------------------------------------------------
+    b, nq, nkv, hd, s = 4, 16, 4, 64, 1024
     q = jax.random.normal(key, (b, nq, hd), jnp.float32)
     kk = jax.random.normal(key, (b, s, nkv, hd), jnp.float32)
     vv = jax.random.normal(key, (b, s, nkv, hd), jnp.float32)
     lens = jnp.full((b,), s, jnp.int32)
-    us = time_fn(jax.jit(ops.flash_decode_ref), q, kk, vv, lens)
+    us_ref = time_fn(jax.jit(ops.flash_decode_ref), q, kk, vv, lens)
+    us_krn = time_fn(functools.partial(ops.flash_decode, q, kk, vv, lens))
     bytes_read = b * s * nkv * hd * 2 * 4
-    rows.append((f"kernel/flash_decode_ref/b{b}s{s}", us,
-                 f"{bytes_read / us / 1e3:.1f}GB/s(cpu)"))
+    _pair(rows, f"flash_decode/b{b}s{s}", us_ref, us_krn,
+          f"{bytes_read / us_ref / 1e3:.1f}GB/s(cpu)")
+
+    # ---- fused token permute / unpermute+combine ------------------------
+    tt, hh, ee, topk, cf = 512, 256, 32, 2, 2.0
+    xx = jax.random.normal(key, (tt, hh), jnp.float32)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (tt, topk), 0, ee)
+    wts = jax.random.uniform(jax.random.PRNGKey(2), (tt, topk), jnp.float32)
+    cap = M.capacity_for(tt, topk, ee, cf)
+
+    def _dispatch(flat_e, pos, keep, w):
+        return M.DispatchInfo(flat_e=flat_e, pos=pos, keep=keep, weights=w,
+                              capacity=cap)
+
+    d0 = M.make_dispatch(idx, wts, ee, cap)
+    args = (d0.flat_e, d0.pos, d0.keep, d0.weights)
+
+    scat_ref = jax.jit(lambda xv, fe, po, kp, w: M.scatter_to_buffers(
+        xv, _dispatch(fe, po, kp, w), ee))
+    scat_krn = jax.jit(lambda xv, fe, po, kp, w: M.scatter_to_buffers(
+        xv, _dispatch(fe, po, kp, w), ee, use_kernel=True))
+    us_ref = time_fn(scat_ref, xx, *args)
+    us_krn = time_fn(scat_krn, xx, *args)
+    _pair(rows, f"permute/{tt}x{hh}e{ee}c{cap}", us_ref, us_krn,
+          "scatter_to_buffers")
+
+    buf = scat_ref(xx, *args)
+    gath_ref = jax.jit(lambda bv, fe, po, kp, w: M.gather_from_buffers(
+        bv, _dispatch(fe, po, kp, w), tt))
+    gath_krn = jax.jit(lambda bv, fe, po, kp, w: M.gather_from_buffers(
+        bv, _dispatch(fe, po, kp, w), tt, use_kernel=True))
+    us_ref = time_fn(gath_ref, buf, *args)
+    us_krn = time_fn(gath_krn, buf, *args)
+    _pair(rows, f"unpermute/{tt}x{hh}e{ee}c{cap}", us_ref, us_krn,
+          "gather_from_buffers")
+
+    rows.append(("kernel/autotune_cache_entries", float(
+        len(autotune.cache_info())), "shape-keyed block selections"))
     return rows
 
 

@@ -2,12 +2,18 @@
 
   python -m benchmarks.run            # all
   python -m benchmarks.run fig10      # one
+  python -m benchmarks.run --quick    # fast smoke gate: kernel micro-bench
+                                      # + the KERNELIZED serve path (fails
+                                      # if the Pallas kernels don't trace)
 
-Output: ``name,value,derived`` CSV rows (value in us unless noted).
+Output: ``name,value,derived`` CSV rows (value in us unless noted), plus a
+``BENCH_<suite>.json`` per completed suite in the CWD (machine-readable
+mirror of the same rows, for the report tooling / CI diffing).
 """
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 import traceback
@@ -24,20 +30,39 @@ SUITES = {
     "fig12": overlap_ablation,   # sync vs fused overlap ablation
     "roofline": roofline,        # dry-run roofline terms (deliverable g)
     "serve": serve_micro,        # measured engine indicators (reduced)
-    "kernels": kernel_bench,     # pallas kernel micro-bench
+    "kernels": kernel_bench,     # pallas kernel micro-bench (ref vs pallas)
+}
+
+# --quick: the smoke gate — kernel pairs + the kernelized engine loop
+QUICK = {
+    "kernels": kernel_bench.run,
+    "serve_quick": serve_micro.run_quick,
 }
 
 
+def _emit_json(name: str, rows: list) -> None:
+    payload = {"suite": name,
+               "rows": [{"name": r, "value_us": v, "derived": d}
+                        for r, v, d in rows]}
+    with open(f"BENCH_{name}.json", "w") as f:
+        json.dump(payload, f, indent=1)
+
+
 def main() -> int:
-    picks = sys.argv[1:] or list(SUITES)
+    argv = sys.argv[1:]
+    quick = "--quick" in argv
+    argv = [a for a in argv if a != "--quick"]
+    runners = ({n: QUICK[n] for n in (argv or QUICK)} if quick
+               else {n: SUITES[n].run for n in (argv or SUITES)})
     failed = []
     print("name,value,derived")
-    for name in picks:
-        mod = SUITES[name]
+    for name, runner in runners.items():
         t0 = time.time()
         try:
-            for row, v, derived in mod.run():
+            rows = list(runner())
+            for row, v, derived in rows:
                 print(f"{row},{v:.1f},{derived}")
+            _emit_json(name, rows)
         except Exception:
             failed.append(name)
             traceback.print_exc()

@@ -25,6 +25,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.core.cost_model import Strategy
+from repro.kernels.policy import NULL_POLICY, KernelPolicy
 
 # Logical axis vocabulary used by the models.
 #   vocab, embed, heads, kv_heads, head_dim, qk (mla latents), ffn, expert,
@@ -46,6 +47,9 @@ class ShardingPlan:
     ep_axes: tuple = ()        # "inter-node" EP group (MoE)
     dp_axes: tuple = ()        # attention DP group (includes pod)
     comm_algo: str = "fused"   # fused | sync | unfused
+    # which Pallas kernels the model layers use (works with mesh=None too —
+    # the local/oracle paths honor it the same way the shard_map bodies do)
+    kernels: KernelPolicy = NULL_POLICY
 
     @property
     def enabled(self) -> bool:
@@ -170,11 +174,17 @@ NULL_PLAN = ShardingPlan()
 
 def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
               comm_algo: str = "fused", *, fsdp: bool = False,
-              sp: bool = True) -> ShardingPlan:
+              sp: bool = True,
+              kernels: Optional[KernelPolicy] = None) -> ShardingPlan:
     """Build the ShardingPlan for a named strategy on a given mesh.
 
     ``strategy`` ∈ {"mixserve", "pure_tp", "pure_ep", "dp_ep"} or a
     ``Strategy`` from the analyzer (mapped onto the closest mesh layout).
+
+    ``kernels`` selects the Pallas kernels the model layers run
+    (KernelPolicy); None = ``KernelPolicy.auto()`` — everything on a TPU
+    backend, nothing elsewhere (the interpret-mode kernels are a
+    correctness tool on CPU, not a fast path).
 
     ``fsdp=True`` (training only): parameter/optimizer tensors shard their
     embed axis over the data axis (ZeRO-3 style), gathered on use.  Lowest
@@ -185,8 +195,11 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
     ("seq_resid"): small-dense models fit without it and save the per-layer
     AG/RS transitions it costs (§Perf pair-3 iteration).
     """
+    if kernels is None:
+        kernels = KernelPolicy.auto()
     if mesh is None:
-        return NULL_PLAN
+        return (NULL_PLAN if not kernels.any_enabled
+                else dataclasses.replace(NULL_PLAN, kernels=kernels))
     names = mesh.axis_names
     pod = ("pod",) if "pod" in names else ()
     data = ("data",)
@@ -213,7 +226,7 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
                 "kv_seq": model, "seq_resid": model if sp else None,
             },
             tp_axes=model, ep_axes=data, dp_axes=pod + data,
-            comm_algo=comm_algo,
+            comm_algo=comm_algo, kernels=kernels,
         )
     if strategy == "pure_tp":
         # vLLM TP[+PP]-style: everything TP over model axis; data/pod = DP.
@@ -229,7 +242,7 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
                 "kv_seq": model, "seq_resid": model if sp else None,
             },
             tp_axes=model, ep_axes=(), dp_axes=pod + data,
-            comm_algo="unfused",
+            comm_algo="unfused", kernels=kernels,
         )
     if strategy in ("pure_ep", "dp_ep"):
         # vLLM DP+EP-style: attention TP over model, experts sharded over
@@ -246,7 +259,7 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
                 "kv_seq": model, "seq_resid": model if sp else None,
             },
             tp_axes=model, ep_axes=data + model, dp_axes=pod + data,
-            comm_algo="unfused",
+            comm_algo="unfused", kernels=kernels,
         )
     raise KeyError(f"unknown strategy {strategy!r}")
 

@@ -1,3 +1,18 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernel suite for the serving hot path.
+
+  moe_gemm      grouped expert GEMM over (E, C, h) capacity buffers
+  topk_gate     fused softmax + top-k router gate
+  flash_decode  single-token decode attention (online softmax over KV tiles)
+  permute       fused token permute / unpermute+weighted-combine (dispatch)
+  autotune      shape-keyed block-size selection shared by the kernels
+  policy        KernelPolicy switches (rides on core.partitioner.ShardingPlan)
+  ops           jit'd public wrappers (interpret on CPU, native on TPU)
+  ref           pure-jnp oracles (the allclose targets)
+
+Only ``policy`` is imported eagerly — it is pulled in by the partitioner on
+every launch path and must not drag the Pallas machinery along.
+"""
+
+from repro.kernels.policy import NULL_POLICY, KernelPolicy
+
+__all__ = ["KernelPolicy", "NULL_POLICY"]

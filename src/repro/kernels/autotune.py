@@ -1,0 +1,173 @@
+"""Block-size selection for the Pallas kernels: shape-keyed cache over
+cost-model-informed defaults.
+
+Every kernel wrapper asks ``select_blocks(op, shape, dtype)`` for its block
+sizes when the caller does not pin them.  Resolution order:
+
+  1. the process-local cache (previous ``select_blocks`` result for the same
+     (op, shape, dtype) key, or an explicit ``register`` from a measured
+     ``tune`` sweep), then
+  2. an analytic default that maximizes MXU-aligned tiles under a VMEM
+     working-set budget (the dominant constraint on real TPUs: x-tile +
+     w-tile + accumulator must co-reside in ~16 MB/core VMEM).
+
+``tune(op, fn, candidates, *args)`` optionally times candidate block dicts
+(interpret mode on CPU, native on TPU) and registers the winner — used by
+``benchmarks/kernel_bench.py``; the serving path only ever pays the cheap
+analytic default plus one dict lookup per (shape, dtype).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+# f32 working-set budget per grid step; conservative half of the ~16 MB/core
+# VMEM so double-buffered pipelining of the next tiles fits alongside.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+_MXU = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelKey:
+    op: str           # "moe_gemm" | "permute" | "unpermute" | "topk_gate" | ...
+    shape: tuple      # the op-defining dims (see each kernel's wrapper)
+    dtype: str
+
+
+_CACHE: dict[KernelKey, dict] = {}
+
+
+def cache_key(op: str, shape: tuple, dtype) -> KernelKey:
+    return KernelKey(op=op, shape=tuple(int(s) for s in shape),
+                     dtype=str(dtype))
+
+
+def register(op: str, shape: tuple, dtype, blocks: dict) -> None:
+    _CACHE[cache_key(op, shape, dtype)] = dict(blocks)
+
+
+def cache_info() -> dict:
+    """Snapshot of the cache (tests / benchmarks introspection)."""
+    return {k: dict(v) for k, v in _CACHE.items()}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def _bytes(dtype: str) -> int:
+    return 2 if "bfloat16" in dtype or "float16" in dtype else 4
+
+
+def _fit(dim: int, cap: int, align: int = _MXU) -> int:
+    """Largest block <= cap covering dim, MXU-aligned once past ``align``."""
+    if dim <= align:
+        return max(1, dim)
+    b = min(cap, dim)
+    return max(align, (b // align) * align)
+
+
+def _default_blocks(op: str, shape: tuple, dtype: str) -> dict:
+    el = _bytes(dtype)
+    if op == "moe_gemm":
+        _, c, h, d = shape
+        bc, bh, bd = _fit(c, 512), _fit(h, 512), _fit(d, 512)
+        # shrink the largest tile until x(bc,bh) + w(bh,bd) + acc(bc,bd) fits
+        while (bc * bh * el + bh * bd * el + bc * bd * 4) > VMEM_BUDGET_BYTES:
+            m = max(bc, bh, bd)
+            if m <= _MXU:
+                break
+            if bc == m:
+                bc = max(_MXU, bc // 2)
+            elif bh == m:
+                bh = max(_MXU, bh // 2)
+            else:
+                bd = max(_MXU, bd // 2)
+        return {"bc": bc, "bd": bd, "bh": bh}
+    if op in ("permute", "unpermute"):
+        # n output rows per grid step; the gather source stays VMEM-resident,
+        # so the block only covers the output tile + index/weight columns.
+        n, h = shape[0], shape[1]
+        bn = 8
+        while bn * 2 <= n and bn * 2 * h * el <= VMEM_BUDGET_BYTES // 8:
+            bn *= 2
+        return {"bn": min(bn, 512)}
+    if op == "topk_gate":
+        t, e = shape
+        bt = 8
+        while bt * 2 <= t and bt * 2 * e * 4 <= VMEM_BUDGET_BYTES // 8:
+            bt *= 2
+        return {"bt": min(bt, 1024)}
+    if op == "flash_decode":
+        s = shape[1]          # key is k.shape = (B, S, nkv, hd)
+        bs = 128
+        while bs * 2 <= s and bs <= 1024:
+            bs *= 2
+        return {"bs": min(bs, 2048)}
+    raise KeyError(op)
+
+
+def select_blocks(op: str, shape: tuple, dtype) -> dict:
+    """Block sizes for ``op`` on ``shape``/``dtype`` (cached per key)."""
+    key = cache_key(op, shape, dtype)
+    hit = _CACHE.get(key)
+    if hit is None:
+        hit = _CACHE[key] = _default_blocks(op, key.shape, key.dtype)
+    return dict(hit)
+
+
+def _key_shape(op: str, args: tuple) -> tuple:
+    """The cache-key shape for ``op`` given the kernel's positional args —
+    MUST mirror how the ops.py wrappers build their select_blocks keys."""
+    if op == "moe_gemm":                  # (x, w) -> (E, C, H, D)
+        return tuple(args[0].shape) + (args[1].shape[-1],)
+    if op in ("permute", "unpermute"):    # (x|buf, idx, ...) -> (N|T, h)
+        return (args[1].shape[0], args[0].shape[-1])
+    if op == "flash_decode":              # (q, k, v, lens) -> k.shape
+        return tuple(args[1].shape)
+    return tuple(args[0].shape)           # topk_gate: logits.shape
+
+
+def tune(op: str, fn: Callable, candidates: list[dict], *args,
+         shape: Optional[tuple] = None, dtype=None,
+         warmup: int = 1, iters: int = 3) -> dict:
+    """Time ``fn(*args, **blocks)`` per candidate, register + return the best.
+
+    ``shape``/``dtype`` default to the key the ops.py wrapper for ``op``
+    would build from the same arguments, so a tuned registration is
+    guaranteed to be the one the serving path looks up.  Measured walltime
+    only means something on the backend it ran on; the cache is
+    process-local on purpose.
+    """
+    import time as _time
+
+    import jax
+
+    if shape is None:
+        shape = _key_shape(op, args)
+    if dtype is None:
+        dtype = args[0].dtype
+    best, best_t = None, float("inf")
+    for blocks in candidates:
+        try:
+            for _ in range(warmup):
+                jax.block_until_ready(fn(*args, **blocks))
+            ts = []
+            for _ in range(iters):
+                t0 = _time.perf_counter()
+                jax.block_until_ready(fn(*args, **blocks))
+                ts.append(_time.perf_counter() - t0)
+            t = sorted(ts)[len(ts) // 2]
+        except Exception:
+            continue
+        if t < best_t:
+            best, best_t = blocks, t
+    if best is None:
+        best = _default_blocks(op, tuple(shape), str(dtype))
+    register(op, shape, dtype, best)
+    return dict(best)
+
+
+__all__ = ["select_blocks", "register", "tune", "cache_info", "clear_cache",
+           "cache_key", "KernelKey", "VMEM_BUDGET_BYTES"]

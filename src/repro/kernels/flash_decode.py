@@ -34,7 +34,7 @@ def _flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 
     q = q_ref[0, 0].astype(jnp.float32) * scale          # (g, hd)
     k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, hd)
-    v = v_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (bs, hdv)
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (g, bs)
     pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
@@ -56,12 +56,22 @@ def _flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
                        jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
-def flash_decode(q, k, v, lengths, *, bs: int = 512, interpret: bool = False):
-    """q (B, nq, hd); k/v (B, S, nkv, hd); lengths (B,) -> (B, nq, hd)."""
+@functools.partial(jax.jit, static_argnames=("bs", "scale", "interpret"))
+def flash_decode(q, k, v, lengths, *, bs: int = 512, scale: float = None,
+                 interpret: bool = False):
+    """q (B, nq, hd); k (B, S, nkv, hd); v (B, S, nkv, hdv); lengths (B,)
+    -> (B, nq, hdv).
+
+    ``hdv`` may differ from ``hd`` (MLA absorbed decode: latent keys carry
+    the decoupled-rope dims, values are the bare latent); ``scale`` defaults
+    to hd**-0.5.
+    """
     b, nq, hd = q.shape
     skv, nkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
     g = nq // nkv
+    if scale is None:
+        scale = hd ** -0.5
     bs = min(bs, skv)
     ps = (-skv) % bs
     if ps:
@@ -73,23 +83,23 @@ def flash_decode(q, k, v, lengths, *, bs: int = 512, interpret: bool = False):
     # (B, S, nkv, hd) -> (B, nkv, S, hd) handled via BlockSpec index map on
     # the padded arrays directly (avoids a transpose copy in HBM).
     out = pl.pallas_call(
-        functools.partial(_flash_decode_kernel, bs=bs, scale=hd ** -0.5),
+        functools.partial(_flash_decode_kernel, bs=bs, scale=scale),
         grid=(b, nkv, sp // bs),
         in_specs=[
             pl.BlockSpec((1,), lambda bi, hi, ji: (bi,)),
             pl.BlockSpec((1, 1, g, hd), lambda bi, hi, ji: (bi, hi, 0, 0)),
             pl.BlockSpec((1, bs, 1, hd), lambda bi, hi, ji: (bi, ji, hi, 0)),
-            pl.BlockSpec((1, bs, 1, hd), lambda bi, hi, ji: (bi, ji, hi, 0)),
+            pl.BlockSpec((1, bs, 1, hdv), lambda bi, hi, ji: (bi, ji, hi, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, hd),
+        out_specs=pl.BlockSpec((1, 1, g, hdv),
                                lambda bi, hi, ji: (bi, hi, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, nkv, g, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, hdv), q.dtype),
         scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
                         pltpu.VMEM((g, 1), jnp.float32),
-                        pltpu.VMEM((g, hd), jnp.float32)],
+                        pltpu.VMEM((g, hdv), jnp.float32)],
         interpret=interpret,
     )(lengths, qg, k, v)
-    return out.reshape(b, nq, hd)
+    return out.reshape(b, nq, hdv)
 
 
 __all__ = ["flash_decode"]

@@ -3,16 +3,34 @@
 On a TPU backend the kernels lower natively; elsewhere (this CPU container)
 they execute in interpret mode, which runs the kernel body in Python and is
 what the allclose sweep tests validate against ``ref.py``.
+
+Block sizes default to the autotune layer's shape-keyed selection
+(``kernels.autotune``); callers can still pin them explicitly.
+
+``counters`` tallies wrapper invocations at trace time — inside ``jax.jit``
+each entry counts traced call sites (once per compilation), which is exactly
+what the integration tests assert: the jitted serving graph *contains* the
+kernel, not merely could reach it.
 """
 
 from __future__ import annotations
 
+import collections
+
 import jax
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.moe_gemm import moe_gemm as _moe_gemm
+from repro.kernels.permute import permute_tokens as _permute_tokens
+from repro.kernels.permute import unpermute_tokens as _unpermute_tokens
 from repro.kernels.topk_gate import topk_gate as _topk_gate
+
+counters: collections.Counter = collections.Counter()
+
+
+def reset_counters() -> None:
+    counters.clear()
 
 
 def _interpret() -> bool:
@@ -20,24 +38,60 @@ def _interpret() -> bool:
 
 
 def moe_gemm(x, w, **kw):
+    counters["moe_gemm"] += 1
     kw.setdefault("interpret", _interpret())
+    if not {"bc", "bd", "bh"} & kw.keys():
+        e, c, h = x.shape
+        blocks = autotune.select_blocks(
+            "moe_gemm", (e, c, h, w.shape[-1]), x.dtype)
+        kw.update(blocks)
     return _moe_gemm(x, w, **kw)
 
 
 def topk_gate(logits, k: int, **kw):
+    counters["topk_gate"] += 1
     kw.setdefault("interpret", _interpret())
+    if "bt" not in kw:
+        kw.update(autotune.select_blocks("topk_gate", logits.shape,
+                                         logits.dtype))
     return _topk_gate(logits, k, **kw)
 
 
 def flash_decode(q, k, v, lengths, **kw):
+    counters["flash_decode"] += 1
     kw.setdefault("interpret", _interpret())
+    if "bs" not in kw:
+        kw.update(autotune.select_blocks("flash_decode", k.shape, k.dtype))
     return _flash_decode(q, k, v, lengths, **kw)
+
+
+def permute_tokens(x, src_tok, **kw):
+    counters["permute_tokens"] += 1
+    kw.setdefault("interpret", _interpret())
+    if "bn" not in kw:
+        kw.update(autotune.select_blocks(
+            "permute", (src_tok.shape[0], x.shape[-1]), x.dtype))
+    return _permute_tokens(x, src_tok, **kw)
+
+
+def unpermute_tokens(buf, src_slot, weights, **kw):
+    counters["unpermute_tokens"] += 1
+    kw.setdefault("interpret", _interpret())
+    if "bn" not in kw:
+        kw.update(autotune.select_blocks(
+            "unpermute", (src_slot.shape[0], buf.shape[-1]), buf.dtype))
+    return _unpermute_tokens(buf, src_slot, weights, **kw)
 
 
 # oracles re-exported for benches/tests
 moe_gemm_ref = ref.moe_gemm_ref
 topk_gate_ref = ref.topk_gate_ref
 flash_decode_ref = ref.flash_decode_ref
+permute_tokens_ref = ref.permute_tokens_ref
+unpermute_tokens_ref = ref.unpermute_tokens_ref
 
 __all__ = ["moe_gemm", "topk_gate", "flash_decode",
-           "moe_gemm_ref", "topk_gate_ref", "flash_decode_ref"]
+           "permute_tokens", "unpermute_tokens",
+           "moe_gemm_ref", "topk_gate_ref", "flash_decode_ref",
+           "permute_tokens_ref", "unpermute_tokens_ref",
+           "counters", "reset_counters"]

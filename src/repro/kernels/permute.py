@@ -1,0 +1,127 @@
+"""Fused token permute / unpermute+combine for MoE dispatch (Pallas TPU).
+
+The jnp dispatch path materializes a zero (E, C, h) buffer, ``jnp.repeat``s
+every token k times and scatter-adds the copies in HBM; the combine path
+gathers (T*k, h) rows and reduces.  Both round-trip the full activation set
+through HBM twice.  These kernels collapse each direction into a single
+gather pass driven by precomputed int32 index vectors (Megatron-Core's
+"fused token permutation/unpermutation" under TPU constraints):
+
+  permute_tokens     out[i] = x[src_tok[i]]            (src_tok < 0 -> 0 row)
+  unpermute_tokens   out[t] = sum_j buf[src_slot[t,j]] * w[t,j]
+
+The index vectors are tiny (ints, not h-wide rows): the inverse map costs
+one int32 scatter over E*C elements instead of a (T*k, h) float scatter-add.
+The gather source (x / flattened buffers) stays VMEM-resident per grid step,
+which bounds T*h (decode/prefill tiles) to the VMEM budget — the autotune
+layer picks the output-rows block; source tiling is future work.
+
+``models.moe.scatter_to_buffers`` / ``gather_from_buffers`` build the index
+vectors from their DispatchInfo and call these via ``kernels.ops`` when the
+KernelPolicy enables ``fused_permute``; ``kernels.ref`` holds the jnp
+oracles the interpret-mode sweeps assert against.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import autotune
+
+
+def _permute_kernel(idx_ref, x_ref, o_ref, *, bn: int):
+    def body(i, _):
+        tok = idx_ref[i]
+        row = x_ref[pl.ds(jnp.maximum(tok, 0), 1), :]
+        o_ref[pl.ds(i, 1), :] = jnp.where(tok >= 0, row,
+                                          jnp.zeros_like(row))
+        return 0
+
+    jax.lax.fori_loop(0, bn, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def permute_tokens(x, src_tok, *, bn: int = None, interpret: bool = False):
+    """x (T, h), src_tok (N,) int32 -> (N, h); src_tok[i] < 0 yields a 0 row.
+
+    One gather pass: row i of the output is token ``src_tok[i]``.  With
+    ``src_tok`` the inverse of the (expert, position) assignment this IS the
+    dispatch scatter, without the zeros+repeat+scatter-add HBM traffic.
+    """
+    t, h = x.shape
+    n = src_tok.shape[0]
+    if bn is None:
+        bn = autotune.select_blocks("permute", (n, h), x.dtype)["bn"]
+    bn = min(bn, n)
+    pn = (-n) % bn
+    if pn:
+        src_tok = jnp.pad(src_tok, (0, pn), constant_values=-1)
+    np_ = n + pn
+
+    out = pl.pallas_call(
+        functools.partial(_permute_kernel, bn=bn),
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((t, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, h), x.dtype),
+        interpret=interpret,
+    )(src_tok.astype(jnp.int32), x)
+    return out[:n]
+
+
+def _unpermute_kernel(slot_ref, w_ref, buf_ref, o_ref, *, bn: int, k: int):
+    def body(i, _):
+        acc = jnp.zeros((1, buf_ref.shape[-1]), jnp.float32)
+        for j in range(k):             # k is 2..8 — unrolled slot walk
+            s = slot_ref[i, j]
+            row = buf_ref[pl.ds(jnp.maximum(s, 0), 1), :].astype(jnp.float32)
+            acc = acc + row * jnp.where(s >= 0, w_ref[i, j], 0.0)
+        o_ref[pl.ds(i, 1), :] = acc.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, bn, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def unpermute_tokens(buf, src_slot, weights, *, bn: int = None,
+                     interpret: bool = False):
+    """buf (M, h), src_slot (T, k) int32, weights (T, k) -> (T, h).
+
+    Weighted combine fused with the inverse permutation: token t's output is
+    the f32-accumulated sum of its k expert rows, each scaled by its routing
+    weight (dropped slots carry src_slot < 0 and contribute 0).
+    """
+    m, h = buf.shape
+    t, k = src_slot.shape
+    if bn is None:
+        bn = autotune.select_blocks("unpermute", (t, h), buf.dtype)["bn"]
+    bn = min(bn, t)
+    pt = (-t) % bn
+    if pt:
+        src_slot = jnp.pad(src_slot, ((0, pt), (0, 0)), constant_values=-1)
+        weights = jnp.pad(weights, ((0, pt), (0, 0)))
+    tp = t + pt
+
+    out = pl.pallas_call(
+        functools.partial(_unpermute_kernel, bn=bn, k=k),
+        grid=(tp // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i: (i, 0)),
+            pl.BlockSpec((m, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, h), buf.dtype),
+        interpret=interpret,
+    )(src_slot.astype(jnp.int32), weights.astype(jnp.float32), buf)
+    return out[:t]
+
+
+__all__ = ["permute_tokens", "unpermute_tokens"]

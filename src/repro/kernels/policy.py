@@ -1,0 +1,51 @@
+"""KernelPolicy — which Pallas kernels the serving hot path uses.
+
+The policy rides on the ``ShardingPlan`` (core.partitioner) so it reaches
+every layer the plan already reaches: ``model.forward`` ->
+``layers.decode_attention`` (flash_decode) and ``moe_block`` /
+``_moe_shard_fn`` (topk_gate, moe_gemm, fused permute/unpermute) — on both
+the local and the distributed (shard_map) execution paths.
+
+``KernelPolicy.auto()`` enables everything on a TPU backend (kernels lower
+natively) and disables everything elsewhere, where the interpret-mode
+kernels are a correctness tool, not a fast path.  Tests and benchmarks force
+``KernelPolicy.all_on()`` to exercise the kernelized graph on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """Per-kernel opt-in switches for the serving hot path."""
+
+    flash_decode: bool = False    # single-token decode attention
+    topk_gate: bool = False       # fused softmax+top-k router gate
+    moe_gemm: bool = False        # grouped expert GEMM on capacity buffers
+    fused_permute: bool = False   # fused token permute / unpermute+combine
+
+    @property
+    def any_enabled(self) -> bool:
+        return (self.flash_decode or self.topk_gate or self.moe_gemm
+                or self.fused_permute)
+
+    @classmethod
+    def all_on(cls) -> "KernelPolicy":
+        return cls(flash_decode=True, topk_gate=True, moe_gemm=True,
+                   fused_permute=True)
+
+    @classmethod
+    def off(cls) -> "KernelPolicy":
+        return cls()
+
+    @classmethod
+    def auto(cls) -> "KernelPolicy":
+        import jax
+        return cls.all_on() if jax.default_backend() == "tpu" else cls.off()
+
+
+NULL_POLICY = KernelPolicy()
+
+__all__ = ["KernelPolicy", "NULL_POLICY"]

@@ -24,22 +24,44 @@ def topk_gate_ref(logits, k: int, renorm: bool = True):
     return top_p, top_i.astype(jnp.int32)
 
 
-def flash_decode_ref(q, k, v, lengths):
-    """Decode attention.  q (B, nq, hd); k/v (B, S, nkv, hd); lengths (B,).
+def flash_decode_ref(q, k, v, lengths, scale=None):
+    """Decode attention.  q (B, nq, hd); k (B, S, nkv, hd); v (B, S, nkv, hdv);
+    lengths (B,).
 
-    Returns (B, nq, hd).  Causal is implied by the length mask (the query is
+    Returns (B, nq, hdv).  Causal is implied by the length mask (the query is
     the token at position lengths-1, so exactly `lengths` slots are visible).
     """
     b, nq, hd = q.shape
     skv, nkv = k.shape[1], k.shape[2]
     g = nq // nkv
-    qg = q.reshape(b, nkv, g, hd).astype(jnp.float32) * hd ** -0.5
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(b, nkv, g, hd).astype(jnp.float32) * scale
     s = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32))
     mask = jnp.arange(skv)[None] < lengths[:, None]          # (b, s)
     s = jnp.where(mask[:, None, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
-    return o.reshape(b, nq, hd).astype(q.dtype)
+    return o.reshape(b, nq, v.shape[-1]).astype(q.dtype)
 
 
-__all__ = ["moe_gemm_ref", "topk_gate_ref", "flash_decode_ref"]
+def permute_tokens_ref(x, src_tok):
+    """x (T, h), src_tok (N,) int32 -> (N, h); src_tok[i] < 0 yields a 0 row."""
+    rows = jnp.take(x, jnp.maximum(src_tok, 0), axis=0)
+    return jnp.where(src_tok[:, None] >= 0, rows, jnp.zeros_like(rows))
+
+
+def unpermute_tokens_ref(buf, src_slot, weights):
+    """buf (M, h), src_slot (T, k) int32, weights (T, k) -> (T, h).
+
+    f32-accumulated weighted combine; dropped slots (src_slot < 0) add 0.
+    """
+    rows = jnp.take(buf, jnp.maximum(src_slot, 0).reshape(-1),
+                    axis=0).astype(jnp.float32)
+    w = jnp.where(src_slot >= 0, weights.astype(jnp.float32), 0.0)
+    t, k = src_slot.shape
+    out = (rows.reshape(t, k, -1) * w[:, :, None]).sum(1)
+    return out.astype(buf.dtype)
+
+
+__all__ = ["moe_gemm_ref", "topk_gate_ref", "flash_decode_ref",
+           "permute_tokens_ref", "unpermute_tokens_ref"]

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import repro.configs as C
 from repro.core import analyzer
 from repro.core.topology import CLUSTERS
+from repro.kernels.policy import KernelPolicy
 from repro.models.model import init_params
 from repro.serving.engine import Engine
 from repro.serving.scheduler import Scheduler, synthetic_workload
@@ -35,8 +36,14 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--cluster", default="v5e-pod-256",
                     choices=list(CLUSTERS))
+    ap.add_argument("--kernels", default="auto", choices=("auto", "on", "off"),
+                    help="Pallas kernel policy for the jitted serve graph: "
+                         "auto = on for TPU backends, off elsewhere; on "
+                         "forces the kernelized path (interpret mode on CPU)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    policy = {"auto": KernelPolicy.auto(), "on": KernelPolicy.all_on(),
+              "off": KernelPolicy.off()}[args.kernels]
 
     cfg_full = C.get(args.arch)
     cluster = CLUSTERS[args.cluster]
@@ -58,7 +65,7 @@ def main():
         embeds_fn = lambda b: {"frames": jnp.full(
             (b, e.n_frames, e.d_model), 0.01, jnp.float32)}
     eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
-                 embeds_fn=embeds_fn)
+                 embeds_fn=embeds_fn, kernel_policy=policy)
     sched = Scheduler(eng)
     for r in synthetic_workload(args.requests, prompt_len=args.prompt_len,
                                 max_new_tokens=args.max_new,

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.partitioner import NULL_PLAN, ShardingPlan
+from repro.kernels.policy import KernelPolicy
 from repro.models.param import P
 
 NEG_INF = -1e30
@@ -197,7 +198,8 @@ def write_cache(buf, new, idx):
 
 def decode_attention(q, k, v, *, kv_len=None, q_positions=None, window: int = 0,
                      k_positions: Optional[jax.Array] = None,
-                     scale: Optional[float] = None):
+                     scale: Optional[float] = None,
+                     policy: Optional[KernelPolicy] = None):
     """One-step attention: q (b, sq<=2, nq, hd) vs cache k/v (b, S, nkv, hd[v]).
 
     No chunk scan — the score tensor (b, nkv, g, sq, S) is materialized so
@@ -209,11 +211,24 @@ def decode_attention(q, k, v, *, kv_len=None, q_positions=None, window: int = 0,
     (b, S)) gives explicit absolute positions for ring-buffer caches
     (negative = invalid) and replaces the slot index in causal/window tests.
     ``q_positions``: (sq,) or (b, sq) absolute positions of the queries.
+
+    ``policy.flash_decode`` routes the standard decode case (sq == 1, no
+    window, slot-indexed cache) through the Pallas online-softmax kernel
+    (repro.kernels.flash_decode), whose length mask assumes the decode
+    invariant q_position == kv_len - 1 — exactly what the model/engine pass
+    here.  Other cases (ring buffers, windows, sq == 2) keep the jnp body.
     """
     b, sq, nq, hd = q.shape
     skv, nkv = k.shape[1], k.shape[2]
     g = nq // nkv
     scale = scale if scale is not None else hd ** -0.5
+
+    if (policy is not None and policy.flash_decode and sq == 1
+            and window == 0 and k_positions is None and kv_len is not None):
+        from repro.kernels import ops as _kops
+        lens = jnp.broadcast_to(jnp.atleast_1d(kv_len), (b,)).astype(jnp.int32)
+        return _kops.flash_decode(q[:, 0], k, v, lens,
+                                  scale=float(scale))[:, None]
     if q_positions is None:
         q_positions = jnp.zeros((sq,), jnp.int32)
     q_pos = jnp.broadcast_to(jnp.atleast_2d(q_positions), (b, sq))
@@ -312,7 +327,7 @@ def gqa_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
         if s == 1:
             out = decode_attention(q, kc, vc, kv_len=idx + s,
                                    q_positions=positions_from(idx, s),
-                                   window=window)
+                                   window=window, policy=plan.kernels)
         else:  # prefill into the buffer (uniform batch, scalar idx)
             out = chunked_attention(q, kc, vc, q_offset=idx, kv_len=idx + s,
                                     causal=True, window=window,
@@ -436,7 +451,8 @@ def mla_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
             o_lat = decode_attention(
                 q_full, k_lat, cc[:, :, None, :], kv_len=kv_len,
                 q_positions=positions_from(off, s),
-                scale=(hd + cfg.rope_head_dim) ** -0.5)          # (b,s,nh,r)
+                scale=(hd + cfg.rope_head_dim) ** -0.5,
+                policy=plan.kernels)                             # (b,s,nh,r)
         else:
             o_lat = chunked_attention(
                 q_full, k_lat, cc[:, :, None, :], q_offset=off, kv_len=kv_len,

@@ -22,6 +22,11 @@ Three execution modes share one ``forward``:
 Decode KV caches are sharded along the *sequence* axis over the TP ("model")
 mesh axis — the universal scheme that works for MQA (kv=1), GQA (any head
 count) and MLA (headless latent), keeping per-chip cache bytes ~1/d_TP.
+
+The plan's ``KernelPolicy`` (``plan.kernels``) rides through every layer
+call here: single-token decode runs the Pallas ``flash_decode`` kernel and
+the MoE block runs the ``topk_gate``/fused-permute/``moe_gemm`` pipeline
+when enabled (see repro.kernels.policy).
 """
 
 from __future__ import annotations

@@ -15,6 +15,17 @@ Four execution paths, selected by the ShardingPlan (see partitioner.make_plan):
 All paths share routing/dispatch/combine numerics, so with ample capacity they
 are numerically equivalent — tests/test_moe.py asserts this on a CPU mesh.
 
+Kernelization: the ShardingPlan carries a ``KernelPolicy``
+(repro.kernels.policy) selecting which Pallas kernels replace the jnp
+bodies on BOTH the local and the distributed (shard_map) paths:
+  topk_gate      fused softmax+top-k router gate   (route_topk)
+  fused_permute  single-gather token permute / unpermute+weighted-combine
+                 (scatter_to_buffers / gather_from_buffers) instead of the
+                 repeat + zeros + scatter-add / gather + reduce HBM traffic
+  moe_gemm       MXU-tiled grouped expert GEMM     (expert_ffn)
+The jnp bodies remain the oracles; tests/test_kernel_integration.py asserts
+policy-on == policy-off to allclose, locally and on a CPU mesh.
+
 TPU adaptation note (DESIGN.md §2): the paper's async isend/irecv rounds
 become XLA async collectives; what we encode is the *communication structure*
 (volume and axis placement), which is the dominant term of Eq. 13.
@@ -33,8 +44,16 @@ from jax.sharding import PartitionSpec
 
 from repro.configs.base import ModelConfig
 from repro.core.partitioner import NULL_PLAN, ShardingPlan
+from repro.kernels.policy import NULL_POLICY, KernelPolicy
 from repro.models.layers import activate, rms_norm
 from repro.models.param import P
+
+try:                                   # jax >= 0.6: public API
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+except AttributeError:                 # jax 0.4.x: experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_rep": False}
 
 
 # ---------------------------------------------------------------------------
@@ -138,17 +157,59 @@ def make_dispatch(idx, weights, n_experts: int, capacity: int) -> DispatchInfo:
                         capacity=capacity)
 
 
-def scatter_to_buffers(x, d: DispatchInfo, n_experts: int):
-    """x: (T, h) -> (E, C, h) capacity buffers (dropped slots contribute 0)."""
+def dispatch_src_tok(d: DispatchInfo, n_experts: int, t: int):
+    """Inverse slot map for the fused permute kernel: (E*C,) int32 whose
+    entry for flat buffer slot (e, c) is the source TOKEN id, or -1.
+
+    Kept (token, k) slots occupy distinct (expert, position) cells, so a
+    plain int32 scatter builds the inverse exactly — E*C ints instead of the
+    (T*k, h) float repeat + scatter-add the jnp dispatch pays."""
+    k = d.flat_e.shape[0] // t
+    cells = d.flat_e * d.capacity + d.pos
+    cells = jnp.where(d.keep, cells, n_experts * d.capacity)   # park drops
+    inv = jnp.full((n_experts * d.capacity + 1,), -1, jnp.int32)
+    tok_of_slot = (jnp.arange(d.flat_e.shape[0], dtype=jnp.int32) // k)
+    return inv.at[cells].set(tok_of_slot)[:-1]
+
+
+def dispatch_src_slot(d: DispatchInfo, t: int):
+    """(T, k) int32 flat buffer cells per token for the fused combine
+    (negative = dropped), plus the matching (T, k) weights."""
+    k = d.flat_e.shape[0] // t
+    cell = d.flat_e * d.capacity + d.pos
+    cell = jnp.where(d.keep, cell, -1).reshape(t, k).astype(jnp.int32)
+    return cell, d.weights.reshape(t, k)
+
+
+def scatter_to_buffers(x, d: DispatchInfo, n_experts: int,
+                       use_kernel: bool = False):
+    """x: (T, h) -> (E, C, h) capacity buffers (dropped slots contribute 0).
+
+    ``use_kernel=True`` routes through the fused Pallas permute kernel: one
+    gather pass over an int32 inverse map, no (T*k, h) repeat + zero-buffer
+    scatter-add HBM round trip."""
     t, h = x.shape
+    if use_kernel:
+        from repro.kernels import ops as _kops
+        src = dispatch_src_tok(d, n_experts, t)
+        return _kops.permute_tokens(x, src).reshape(n_experts, d.capacity, h)
     k = d.flat_e.shape[0] // t
     vals = jnp.repeat(x, k, axis=0) * d.keep[:, None].astype(x.dtype)
     buf = jnp.zeros((n_experts, d.capacity, h), x.dtype)
     return buf.at[d.flat_e, d.pos].add(vals)
 
 
-def gather_from_buffers(buf, d: DispatchInfo, t: int):
-    """buf: (E, C, h) -> (T, h) weighted combine."""
+def gather_from_buffers(buf, d: DispatchInfo, t: int,
+                        use_kernel: bool = False):
+    """buf: (E, C, h) -> (T, h) weighted combine.
+
+    ``use_kernel=True`` fuses the gather and the weighted k-way reduce into
+    the Pallas unpermute kernel (single pass, f32 accumulation)."""
+    if use_kernel:
+        from repro.kernels import ops as _kops
+        slot, w = dispatch_src_slot(d, t)
+        return _kops.unpermute_tokens(
+            buf.reshape(-1, buf.shape[-1]), slot, w).astype(buf.dtype)
     vals = buf[d.flat_e, d.pos]
     vals = vals * (d.weights * d.keep.astype(d.weights.dtype))[:, None]
     k = d.flat_e.shape[0] // t
@@ -199,22 +260,30 @@ def shared_expert_ffn(p, x, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def moe_local(p, x, cfg: ModelConfig, cf: Optional[float] = None,
-              use_kernels: bool = False):
+              use_kernels: bool = False,
+              policy: Optional[KernelPolicy] = None):
     """x: (b, s, h).  Returns (out, aux_loss).
 
-    ``use_kernels=True`` runs the router gate and the expert GEMMs through
-    the Pallas kernels (interpret mode on CPU; native on TPU)."""
+    ``policy`` selects the Pallas kernels per stage (interpret mode on CPU;
+    native on TPU); ``use_kernels=True`` is the legacy shorthand for
+    ``KernelPolicy.all_on()``."""
+    if policy is None:
+        policy = KernelPolicy.all_on() if use_kernels else NULL_POLICY
     b, s, h = x.shape
     xn = rms_norm(x, p["norm"], cfg.norm_eps)
     tok = xn.reshape(-1, h)
     t = tok.shape[0]
     idx, w, aux = route_topk(tok @ p["router"], cfg.top_k,
-                             use_kernel=use_kernels)
-    cap = capacity_for(t, cfg.top_k, cfg.n_experts, cf or cfg.capacity_factor)
+                             use_kernel=policy.topk_gate)
+    if cf is None:
+        cf = cfg.capacity_factor
+    cap = capacity_for(t, cfg.top_k, cfg.n_experts, cf)
     d = make_dispatch(idx, w, cfg.n_experts, cap)
-    buf = scatter_to_buffers(tok, d, cfg.n_experts)
-    out_buf = expert_ffn(p, buf, cfg, use_kernel=use_kernels)
-    out = gather_from_buffers(out_buf, d, t)
+    buf = scatter_to_buffers(tok, d, cfg.n_experts,
+                             use_kernel=policy.fused_permute)
+    out_buf = expert_ffn(p, buf, cfg, use_kernel=policy.moe_gemm)
+    out = gather_from_buffers(out_buf, d, t,
+                              use_kernel=policy.fused_permute)
     if cfg.n_shared_experts:
         out = out + shared_expert_ffn(p, tok, cfg)
     return out.reshape(b, s, h).astype(x.dtype), aux
@@ -224,27 +293,37 @@ def moe_local(p, x, cfg: ModelConfig, cf: Optional[float] = None,
 # Distributed paths (shard_map)
 # ---------------------------------------------------------------------------
 
+def _axis_sz(a):
+    try:
+        return jax.lax.axis_size(a)
+    except AttributeError:       # jax 0.4.x: psum of a literal folds to size
+        return jax.lax.psum(1, a)
+
+
 def _axis_index(axes: tuple):
     if not axes:
         return 0
     idx = jax.lax.axis_index(axes[0])
     for a in axes[1:]:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * _axis_sz(a) + jax.lax.axis_index(a)
     return idx
 
 
 def _axis_size(axes: tuple):
     s = 1
     for a in axes:
-        s *= jax.lax.axis_size(a)
+        s *= _axis_sz(a)
     return s
 
 
 def _moe_shard_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes, comm_algo,
-                  token_sliced: bool, cf: float, mesh_axes: tuple = ()):
+                  token_sliced: bool, cf: float, mesh_axes: tuple = (),
+                  policy: KernelPolicy = NULL_POLICY):
     """Per-device body.  x: (b_loc, s, h) — replicated across tp_axes.
 
     Returns (out (b_loc, s, h), aux scalar) — out replicated across tp_axes.
+    ``policy`` kernelizes the per-device compute (gate, permute, expert
+    GEMMs); the collectives between them are untouched.
     """
     b, s, h = x.shape
     tp = _axis_size(tp_axes) if tp_axes else 1
@@ -271,7 +350,8 @@ def _moe_shard_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes, comm_algo,
         tok = tok_full
     t = tok.shape[0]
 
-    idx, w, aux = route_topk(tok @ p["router"], cfg.top_k)
+    idx, w, aux = route_topk(tok @ p["router"], cfg.top_k,
+                             use_kernel=policy.topk_gate)
     cap = capacity_for(t, cfg.top_k, e_global, cf)
     d = make_dispatch(idx, w, e_global, cap)
 
@@ -286,9 +366,11 @@ def _moe_shard_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes, comm_algo,
         hs = h // tp
         tok_shard = jax.lax.dynamic_slice_in_dim(
             tok, _axis_index(tp_axes) * hs, hs, axis=1)
-        buf = scatter_to_buffers(tok_shard, d, e_global)      # (E, C, h/tp)
+        buf = scatter_to_buffers(tok_shard, d, e_global,
+                                 use_kernel=policy.fused_permute)  # (E,C,h/tp)
     else:
-        buf = scatter_to_buffers(tok, d, e_global)            # (E, C, h)
+        buf = scatter_to_buffers(tok, d, e_global,
+                                 use_kernel=policy.fused_permute)  # (E,C,h)
 
     if ep > 1:
         buf = buf.reshape(ep, e_local, cap, buf.shape[-1])
@@ -310,7 +392,8 @@ def _moe_shard_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes, comm_algo,
         comp = buf.transpose(1, 0, 2, 3).reshape(e_local, ep * cap, h)
     else:
         comp = buf.reshape(e_global, cap, h)
-    out_buf = expert_ffn(p, comp, cfg)     # partial over tp when sharded
+    out_buf = expert_ffn(p, comp, cfg,     # partial over tp when sharded
+                         use_kernel=policy.moe_gemm)
 
     # ---------------- combine ----------------
     if ep > 1:
@@ -334,7 +417,8 @@ def _moe_shard_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes, comm_algo,
         ax = ep_axes if len(ep_axes) > 1 else ep_axes[0]
         out_buf = jax.lax.all_to_all(out_buf, ax, split_axis=0, concat_axis=0)
         out_buf = out_buf.reshape(e_global, cap, h // tp)
-        out_tok = gather_from_buffers(out_buf, d, t)          # (T, h/tp)
+        out_tok = gather_from_buffers(out_buf, d, t,          # (T, h/tp)
+                                      use_kernel=policy.fused_permute)
         if shared_partial is not None:
             # fold the shared-expert partial into the same epilogue: RS it to
             # 1/tp width and add before the single AG (beyond-paper fusion).
@@ -351,7 +435,8 @@ def _moe_shard_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes, comm_algo,
             out_buf = out_buf.reshape(e_global, cap, h)
         else:
             out_buf = out_buf.reshape(e_global, cap, h)
-        out_tok = gather_from_buffers(out_buf, d, t)
+        out_tok = gather_from_buffers(out_buf, d, t,
+                                      use_kernel=policy.fused_permute)
         if token_sliced and tp > 1:
             # undo the token slice: gather the TP group's token shards back
             out_tok = jax.lax.all_gather(out_tok, tp_axes, axis=0, tiled=True)
@@ -369,10 +454,15 @@ def _moe_shard_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes, comm_algo,
 
 def moe_block(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
               cf: Optional[float] = None):
-    """The MoE block.  x: (b, s, h) -> (out, aux_loss)."""
-    cf = cf or cfg.capacity_factor
+    """The MoE block.  x: (b, s, h) -> (out, aux_loss).
+
+    ``plan.kernels`` (a KernelPolicy) decides which stages run as Pallas
+    kernels; cf=0.0 is a legal (degenerate) capacity factor, so only None
+    falls back to the config default."""
+    if cf is None:
+        cf = cfg.capacity_factor
     if not plan.enabled:
-        return moe_local(p, x, cfg, cf)
+        return moe_local(p, x, cfg, cf, policy=plan.kernels)
 
     mesh = plan.mesh
     # dp_ep plan: ep_axes overlaps tp_axes (experts span data x model) ->
@@ -399,13 +489,13 @@ def moe_block(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
     fn = functools.partial(
         _moe_shard_fn, cfg=cfg, tp_axes=plan.tp_axes, ep_axes=plan.ep_axes,
         comm_algo=comm_algo, token_sliced=token_sliced, cf=cf,
-        mesh_axes=tuple(mesh.axis_names))
+        mesh_axes=tuple(mesh.axis_names), policy=plan.kernels)
 
-    out, aux = jax.shard_map(
+    out, aux = _shard_map(
         fn, mesh=mesh,
         in_specs=(p_specs, x_spec),
         out_specs=(x_spec, PartitionSpec()),
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )(p, x)
     return out, aux
 
@@ -414,4 +504,5 @@ __all__ = [
     "moe_spec", "moe_block", "moe_local", "route_topk", "make_dispatch",
     "scatter_to_buffers", "gather_from_buffers", "expert_ffn",
     "capacity_for", "positions_in_expert", "DispatchInfo",
+    "dispatch_src_tok", "dispatch_src_slot",
 ]

@@ -12,6 +12,14 @@ position ever becomes visible to a future occupant.
 
 This is the "online stage" host of MixServe: the ShardingPlan injected here
 is the one the automatic analyzer selected offline.
+
+Kernelization: ``kernel_policy`` (repro.kernels.KernelPolicy; default
+``auto()`` = Pallas kernels on TPU backends, jnp elsewhere) is attached to
+the plan, so the jitted decode step runs ``flash_decode`` attention and —
+for MoE archs — the ``topk_gate`` / fused-permute / ``moe_gemm`` dispatch
+pipeline.  The decode loop keeps ``cur_tokens`` on device (the host copy of
+each step's tokens is read once, for request bookkeeping only), so steps
+chain device-to-device.
 """
 
 from __future__ import annotations
@@ -26,6 +34,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.partitioner import NULL_PLAN, ShardingPlan
+from repro.kernels.policy import KernelPolicy
 from repro.models.model import forward, init_cache
 from repro.serving.kv_cache import insert_slot, with_lengths
 
@@ -69,7 +78,15 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, plan: ShardingPlan = NULL_PLAN,
                  *, max_batch: int = 8, max_len: int = 512,
                  dtype=jnp.float32, temperature: float = 0.0, seed: int = 0,
-                 embeds_fn: Optional[Callable] = None):
+                 embeds_fn: Optional[Callable] = None,
+                 kernel_policy: Optional[KernelPolicy] = None):
+        if kernel_policy is None:
+            # respect a policy the caller already put on the plan (make_plan
+            # kernels=...); only a plan with everything off falls to auto()
+            kernel_policy = (plan.kernels if plan.kernels.any_enabled
+                             else KernelPolicy.auto())
+        if kernel_policy != plan.kernels:
+            plan = dataclasses.replace(plan, kernels=kernel_policy)
         self.cfg, self.params, self.plan = cfg, params, plan
         self.max_batch, self.max_len = max_batch, max_len
         self.temperature = temperature
@@ -152,6 +169,9 @@ class Engine:
         self.key, sub = jax.random.split(self.key)
         nxt, self.cache = self._decode(self.params, self.cur_tokens,
                                        self.cache, active, sub)
+        # next step's inputs stay on device; the host reads the tokens once,
+        # purely for request bookkeeping (no device->host->device round trip)
+        self.cur_tokens = nxt[:, None]
         now = time.perf_counter()
         finished = []
         nxt_host = np.asarray(nxt)
@@ -163,7 +183,6 @@ class Engine:
             if r.done:
                 finished.append(r)
                 self.slots[i] = None
-        self.cur_tokens = jnp.asarray(nxt_host[:, None])
         return finished
 
     @property

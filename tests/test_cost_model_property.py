@@ -1,5 +1,8 @@
 """Property-based tests (hypothesis) on the cost model's invariants."""
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't die at collection
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,10 +1,18 @@
-"""Pallas kernels integrated into the MoE block: kernel path == jnp path."""
+"""Pallas kernels integrated into the MoE block: kernel path == jnp path,
+locally (in-process) and on a CPU mesh (subprocess, fake devices)."""
+
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.kernels.policy import KernelPolicy
 from repro.models import moe as M
 from repro.models.param import init_tree
 
@@ -12,7 +20,11 @@ CFG = ModelConfig(name="k-moe", family="moe", n_layers=1, d_model=64,
                   n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
                   n_experts=4, top_k=2, d_expert=96, n_shared_experts=1)
 
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
 
+
+@pytest.mark.kernels
 def test_moe_local_kernel_path_matches_jnp():
     params = init_tree(jax.random.PRNGKey(0), M.moe_spec(CFG), jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64), jnp.float32)
@@ -23,6 +35,68 @@ def test_moe_local_kernel_path_matches_jnp():
     assert abs(float(aux_krn) - float(aux_jnp)) < 1e-5
 
 
+@pytest.mark.kernels
+def test_moe_local_policy_traces_all_kernels():
+    """KernelPolicy.all_on() must actually put every hot-path kernel into the
+    jitted MoE graph (trace-time counters), and match jnp to allclose."""
+    params = init_tree(jax.random.PRNGKey(0), M.moe_spec(CFG), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64), jnp.float32)
+    fn_off = jax.jit(lambda p, xx: M.moe_local(p, xx, CFG, cf=8.0))
+    fn_on = jax.jit(lambda p, xx: M.moe_local(
+        p, xx, CFG, cf=8.0, policy=KernelPolicy.all_on()))
+    out_off, _ = fn_off(params, x)
+    ops.reset_counters()
+    out_on, _ = fn_on(params, x)
+    for k in ("topk_gate", "moe_gemm", "permute_tokens", "unpermute_tokens"):
+        assert ops.counters[k] > 0, (k, dict(ops.counters))
+    np.testing.assert_allclose(np.asarray(out_on), np.asarray(out_off),
+                               atol=2e-5)
+
+
+@pytest.mark.kernels
+def test_moe_capacity_factor_zero_not_silently_replaced():
+    """cf=0.0 is a real (degenerate) capacity factor: capacity clamps to 1
+    and must NOT fall back to cfg.capacity_factor (the old `cf or ...` bug)."""
+    params = init_tree(jax.random.PRNGKey(0), M.moe_spec(CFG), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64), jnp.float32)
+    out_zero, _ = M.moe_local(params, x, CFG, cf=0.0)
+    out_eps, _ = M.moe_local(params, x, CFG, cf=1e-9)   # same capacity (1)
+    out_default, _ = M.moe_local(params, x, CFG)        # cfg.capacity_factor
+    np.testing.assert_allclose(np.asarray(out_zero), np.asarray(out_eps),
+                               atol=1e-6)
+    assert float(jnp.max(jnp.abs(out_zero - out_default))) > 1e-4
+
+
+@pytest.mark.parametrize("via_block", [False, True])
+def test_moe_block_cf_zero(via_block):
+    params = init_tree(jax.random.PRNGKey(0), M.moe_spec(CFG), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64), jnp.float32)
+    if via_block:
+        out, _ = M.moe_block(params, x, CFG, cf=0.0)
+    else:
+        out, _ = M.moe_local(params, x, CFG, cf=0.0)
+    ref, _ = M.moe_local(params, x, CFG, cf=1e-9)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+def test_moe_block_distributed_kernel_equivalence():
+    """moe_block on a CPU mesh: KernelPolicy on vs off allclose across the
+    mixserve/dp_ep/pure_tp plans, with the kernels asserted traced.  Runs in
+    a subprocess with its own fake-device count (dry-run isolation rule)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable,
+         os.path.join(HERE, "sharded", "run_moe_kernel_equivalence.py")],
+        capture_output=True, text=True, timeout=1200, env=env)
+    if r.returncode != 0:
+        pytest.fail(f"run_moe_kernel_equivalence.py failed:\n"
+                    f"{r.stdout[-2000:]}\n{r.stderr[-3000:]}")
+    assert "MOE_KERNEL_EQUIVALENCE_OK" in r.stdout
+
+
+@pytest.mark.kernels
 def test_route_topk_kernel_matches_jnp():
     logits = jax.random.normal(jax.random.PRNGKey(2), (64, 8), jnp.float32)
     i1, w1, a1 = M.route_topk(logits, 3, use_kernel=False)
@@ -32,6 +106,7 @@ def test_route_topk_kernel_matches_jnp():
     assert abs(float(a1) - float(a2)) < 1e-6
 
 
+@pytest.mark.kernels
 def test_expert_ffn_kernel_matches_jnp():
     params = init_tree(jax.random.PRNGKey(0), M.moe_spec(CFG), jnp.float32)
     buf = jax.random.normal(jax.random.PRNGKey(3), (4, 24, 64), jnp.float32)

@@ -9,7 +9,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops
+from repro.kernels import autotune, ops
+
+pytestmark = pytest.mark.kernels
 
 KEY = jax.random.PRNGKey(0)
 
@@ -75,6 +77,112 @@ def test_flash_decode_matches_model_decode_attention():
     krn_out = ops.flash_decode(q[:, 0], k, v, lens)
     np.testing.assert_allclose(np.asarray(jnp_out[:, 0]),
                                np.asarray(krn_out), atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,h,n,frac", [
+    (16, 32, 40, 0.5), (100, 64, 256, 0.9), (7, 48, 7, 1.0),
+    (256, 128, 300, 0.0),
+])
+def test_permute_tokens_sweep(t, h, n, frac, dtype):
+    """Fused permute == gather oracle across fill fractions (frac = share of
+    output rows that carry a token; the rest are -1 -> zero rows)."""
+    x = jax.random.normal(KEY, (t, h), dtype)
+    rng = np.random.default_rng(0)
+    src = np.full((n,), -1, np.int32)
+    fill = rng.choice(n, size=int(n * frac), replace=False)
+    src[fill] = rng.integers(0, t, size=fill.size)
+    got = ops.permute_tokens(x, jnp.asarray(src))
+    want = ops.permute_tokens_ref(x, jnp.asarray(src))
+    assert got.shape == (n, h) and got.dtype == dtype
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,k,h,m", [
+    (16, 2, 32, 64), (100, 6, 64, 320), (7, 3, 48, 21), (256, 8, 128, 512),
+])
+def test_unpermute_tokens_sweep(t, k, h, m, dtype):
+    buf = jax.random.normal(KEY, (m, h), dtype)
+    slot = jax.random.randint(jax.random.PRNGKey(1), (t, k), -1, m)
+    w = jax.random.uniform(jax.random.PRNGKey(2), (t, k), jnp.float32)
+    got = ops.unpermute_tokens(buf, slot, w)
+    want = ops.unpermute_tokens_ref(buf, slot, w)
+    assert got.shape == (t, h) and got.dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_fused_permute_matches_moe_dispatch():
+    """Kernel round trip == the jnp scatter/gather dispatch path, including
+    capacity-dropped slots (cf tight enough to drop with random routing)."""
+    from repro.models import moe as M
+    t, h, e, k = 64, 32, 8, 2
+    x = jax.random.normal(KEY, (t, h), jnp.float32)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (t, k), 0, e)
+    w = jax.random.uniform(jax.random.PRNGKey(2), (t, k), jnp.float32)
+    cap = M.capacity_for(t, k, e, 1.0)
+    d = M.make_dispatch(idx, w, e, cap)
+    assert not bool(d.keep.all()), "want dropped slots in this scenario"
+
+    buf_jnp = M.scatter_to_buffers(x, d, e)
+    buf_krn = M.scatter_to_buffers(x, d, e, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(buf_krn), np.asarray(buf_jnp))
+
+    out_jnp = M.gather_from_buffers(buf_jnp, d, t)
+    out_krn = M.gather_from_buffers(buf_jnp, d, t, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(out_krn), np.asarray(out_jnp),
+                               atol=1e-5)
+
+
+def test_autotune_selection_cached_and_divisible():
+    autotune.clear_cache()
+    blocks = autotune.select_blocks("moe_gemm", (4, 300, 512, 640),
+                                    jnp.float32)
+    assert set(blocks) == {"bc", "bd", "bh"}
+    # VMEM working set respects the budget
+    assert (blocks["bc"] * blocks["bh"] * 4 + blocks["bh"] * blocks["bd"] * 4
+            + blocks["bc"] * blocks["bd"] * 4) <= autotune.VMEM_BUDGET_BYTES
+    # cached: same key -> identical selection, one entry
+    again = autotune.select_blocks("moe_gemm", (4, 300, 512, 640),
+                                   jnp.float32)
+    assert again == blocks and len(autotune.cache_info()) == 1
+    # registered overrides (a measured tune result) win over the default
+    autotune.register("moe_gemm", (4, 300, 512, 640), jnp.float32,
+                      {"bc": 64, "bd": 64, "bh": 64})
+    assert autotune.select_blocks("moe_gemm", (4, 300, 512, 640),
+                                  jnp.float32) == {"bc": 64, "bd": 64,
+                                                   "bh": 64}
+    autotune.clear_cache()
+
+
+def test_autotune_tune_measures_and_registers():
+    """tune() without an explicit shape must register under the SAME key the
+    ops wrapper builds, so the measured override is actually reachable."""
+    autotune.clear_cache()
+    x = jax.random.normal(KEY, (2, 64, 64), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64), jnp.float32)
+    cands = [{"bc": 32, "bd": 32, "bh": 32}, {"bc": 64, "bd": 64, "bh": 64}]
+    best = autotune.tune("moe_gemm", ops.moe_gemm, cands, x, w)
+    assert best in cands
+    assert autotune.select_blocks("moe_gemm", (2, 64, 64, 64),
+                                  x.dtype) == best
+    autotune.clear_cache()
+
+
+def test_autotune_flash_decode_bs_tracks_kv_len():
+    """The flash tile grows with the cache length S (k.shape[1]), not with
+    the head dim."""
+    autotune.clear_cache()
+    short = autotune.select_blocks("flash_decode", (4, 256, 8, 64),
+                                   jnp.float32)
+    long = autotune.select_blocks("flash_decode", (4, 4096, 8, 64),
+                                  jnp.float32)
+    assert short["bs"] == 256 and long["bs"] == 2048
+    autotune.clear_cache()
 
 
 def test_moe_gemm_grad_matches_ref():
