@@ -40,6 +40,23 @@ def run() -> list:
     _pair(rows, f"moe_gemm/{e}x{c}x{h}x{d}", us_ref, us_krn,
           f"{flops / us_ref / 1e3:.1f}GFLOP/s(cpu)")
 
+    # ---- dropless segment GEMM (ragged, group-offset grid) --------------
+    # same FLOP volume as the capacity pair above (N = E*C rows) so the two
+    # grouped-GEMM schemes diff directly; offsets from a skewed multinomial
+    # routing draw, so segment boundaries straddle row tiles.
+    n = e * c
+    xs = jax.random.normal(key, (n, h), jnp.float32)
+    wg = jax.random.normal(key, (e, h, d), jnp.float32)
+    probs = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(3), (e,)))
+    counts = jnp.floor(probs * n).astype(jnp.int32)
+    counts = counts.at[0].add(n - counts.sum())          # exact total
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(counts).astype(jnp.int32)])
+    us_ref = time_fn(jax.jit(ops.grouped_gemm_ref), xs, wg, offs)
+    us_krn = time_fn(functools.partial(ops.grouped_gemm, xs, wg, offs))
+    _pair(rows, f"grouped_gemm/{n}x{h}x{d}e{e}", us_ref, us_krn,
+          f"{2 * n * h * d / us_ref / 1e3:.1f}GFLOP/s(cpu)")
+
     # ---- fused router gate ----------------------------------------------
     t, ne, k = 1024, 64, 4
     logits = jax.random.normal(key, (t, ne), jnp.float32)
@@ -91,6 +108,19 @@ def run() -> list:
     us_krn = time_fn(gath_krn, buf, *args)
     _pair(rows, f"unpermute/{tt}x{hh}e{ee}c{cap}", us_ref, us_krn,
           "gather_from_buffers")
+
+    # ---- segment-aware ragged permute (dropless EP exchange shape) ------
+    # worst-case-sized exchange buffer, 1/8 populated: the ragged kernel
+    # skips the empty tail tiles that the plain gather still walks.
+    nbuf, fill = 4096, 512
+    src = jnp.where(jnp.arange(nbuf) < fill,
+                    jax.random.randint(jax.random.PRNGKey(4), (nbuf,), 0, tt),
+                    -1).astype(jnp.int32)
+    us_ref = time_fn(jax.jit(ops.permute_tokens_ref), xx, src)
+    us_krn = time_fn(functools.partial(ops.permute_tokens_ragged, xx, src,
+                                       fill))
+    _pair(rows, f"permute_ragged/{nbuf}x{hh}fill{fill}", us_ref, us_krn,
+          "dropless EP exchange gather")
 
     rows.append(("kernel/autotune_cache_entries", float(
         len(autotune.cache_info())), "shape-keyed block selections"))

@@ -22,33 +22,41 @@ def run_quick() -> list:
 
     Forces ``KernelPolicy.all_on()`` through a tiny MoE engine run and FAILS
     unless the jitted prefill/decode graphs actually traced every hot-path
-    kernel: flash_decode, topk_gate, moe_gemm and the fused
-    permute/unpermute pair."""
+    kernel — under the default (dropless) dispatch that is flash_decode,
+    topk_gate, the grouped segment GEMM and the fused permute/unpermute
+    pair; a second engine run pins capacity mode and checks its moe_gemm
+    path still traces too."""
     from repro.kernels import ops
     from repro.kernels.policy import KernelPolicy
 
     cfg = C.get_reduced("phi3.5-moe-42b")
     params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
-    ops.reset_counters()
-    eng = Engine(cfg, params, max_batch=2, max_len=64,
-                 kernel_policy=KernelPolicy.all_on())
-    sched = Scheduler(eng)
-    for r in synthetic_workload(3, prompt_len=8, max_new_tokens=4,
-                                vocab=cfg.vocab_size, arrival_rate=16.0):
-        sched.submit(r)
-    done = sched.run()
-    assert len(done) == 3, f"quick serve gate: {len(done)}/3 completed"
-    required = {"flash_decode", "topk_gate", "moe_gemm",
-                "permute_tokens", "unpermute_tokens"}
-    missing = required - {k for k, v in ops.counters.items() if v > 0}
-    if missing:
-        raise RuntimeError(
-            f"kernelized serve path did not trace {sorted(missing)} "
-            f"(counters: {dict(ops.counters)})")
-    m = sched.metrics()
-    return [(f"serve_quick/{cfg.name}/kernels",
-             float(sum(ops.counters[k] for k in required)),
-             f"traced={sorted(required)} thr={m.throughput_tok_s:.1f}tok/s")]
+    rows = []
+    for dispatch, gemm in (("dropless", "grouped_gemm"),
+                           ("capacity", "moe_gemm")):
+        ops.reset_counters()
+        eng = Engine(cfg, params, max_batch=2, max_len=64,
+                     kernel_policy=KernelPolicy.all_on(),
+                     dispatch_mode=dispatch)
+        sched = Scheduler(eng)
+        for r in synthetic_workload(3, prompt_len=8, max_new_tokens=4,
+                                    vocab=cfg.vocab_size, arrival_rate=16.0):
+            sched.submit(r)
+        done = sched.run()
+        assert len(done) == 3, f"quick serve gate: {len(done)}/3 completed"
+        required = {"flash_decode", "topk_gate", gemm,
+                    "permute_tokens", "unpermute_tokens"}
+        missing = required - {k for k, v in ops.counters.items() if v > 0}
+        if missing:
+            raise RuntimeError(
+                f"kernelized serve path ({dispatch}) did not trace "
+                f"{sorted(missing)} (counters: {dict(ops.counters)})")
+        m = sched.metrics()
+        rows.append((f"serve_quick/{cfg.name}/{dispatch}/kernels",
+                     float(sum(ops.counters[k] for k in required)),
+                     f"traced={sorted(required)} "
+                     f"thr={m.throughput_tok_s:.1f}tok/s"))
+    return rows
 
 
 def run() -> list:

@@ -50,6 +50,11 @@ class ShardingPlan:
     # which Pallas kernels the model layers use (works with mesh=None too —
     # the local/oracle paths honor it the same way the shard_map bodies do)
     kernels: KernelPolicy = NULL_POLICY
+    # MoE dispatch buffers: "auto" (-> dropless for inference) | "capacity"
+    # (fixed (E, C, h), training's load-balancing contract) | "dropless"
+    # (ragged sorted-by-expert buffers, count-independent numerics).
+    # Like ``kernels``, honored with mesh=None too (models.moe.moe_block).
+    dispatch_mode: str = "auto"
 
     @property
     def enabled(self) -> bool:
@@ -175,7 +180,8 @@ NULL_PLAN = ShardingPlan()
 def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
               comm_algo: str = "fused", *, fsdp: bool = False,
               sp: bool = True,
-              kernels: Optional[KernelPolicy] = None) -> ShardingPlan:
+              kernels: Optional[KernelPolicy] = None,
+              dispatch: str = "auto") -> ShardingPlan:
     """Build the ShardingPlan for a named strategy on a given mesh.
 
     ``strategy`` ∈ {"mixserve", "pure_tp", "pure_ep", "dp_ep"} or a
@@ -185,6 +191,11 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
     (KernelPolicy); None = ``KernelPolicy.auto()`` — everything on a TPU
     backend, nothing elsewhere (the interpret-mode kernels are a
     correctness tool on CPU, not a fast path).
+
+    ``dispatch`` selects the MoE dispatch buffers: "auto" (the default;
+    resolves to dropless — count-independent ragged inference dispatch),
+    "dropless", or "capacity" (training keeps this: train_step.loss_fn pins
+    it regardless of the plan).
 
     ``fsdp=True`` (training only): parameter/optimizer tensors shard their
     embed axis over the data axis (ZeRO-3 style), gathered on use.  Lowest
@@ -198,8 +209,12 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
     if kernels is None:
         kernels = KernelPolicy.auto()
     if mesh is None:
-        return (NULL_PLAN if not kernels.any_enabled
-                else dataclasses.replace(NULL_PLAN, kernels=kernels))
+        plan = NULL_PLAN
+        if kernels.any_enabled:
+            plan = dataclasses.replace(plan, kernels=kernels)
+        if dispatch != NULL_PLAN.dispatch_mode:
+            plan = dataclasses.replace(plan, dispatch_mode=dispatch)
+        return plan
     names = mesh.axis_names
     pod = ("pod",) if "pod" in names else ()
     data = ("data",)
@@ -227,6 +242,7 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
             },
             tp_axes=model, ep_axes=data, dp_axes=pod + data,
             comm_algo=comm_algo, kernels=kernels,
+            dispatch_mode=dispatch,
         )
     if strategy == "pure_tp":
         # vLLM TP[+PP]-style: everything TP over model axis; data/pod = DP.
@@ -243,6 +259,7 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
             },
             tp_axes=model, ep_axes=(), dp_axes=pod + data,
             comm_algo="unfused", kernels=kernels,
+            dispatch_mode=dispatch,
         )
     if strategy in ("pure_ep", "dp_ep"):
         # vLLM DP+EP-style: attention TP over model, experts sharded over
@@ -260,6 +277,7 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
             },
             tp_axes=model, ep_axes=data + model, dp_axes=pod + data,
             comm_algo="unfused", kernels=kernels,
+            dispatch_mode=dispatch,
         )
     raise KeyError(f"unknown strategy {strategy!r}")
 

@@ -15,12 +15,26 @@ sizes when the caller does not pin them.  Resolution order:
 (interpret mode on CPU, native on TPU) and registers the winner — used by
 ``benchmarks/kernel_bench.py``; the serving path only ever pays the cheap
 analytic default plus one dict lookup per (shape, dtype).
+
+Persistence: measured registrations (``register`` / ``tune``) are written
+through to a versioned JSON under ``~/.cache/repro/autotune.json``
+(override with ``REPRO_AUTOTUNE_CACHE``; set it to an empty string to
+disable).  ``select_blocks`` loads the file lazily on the first in-memory
+miss, so a ``tune`` sweep in one process benefits every later process.  A
+version mismatch (the block-dict schema changed) silently invalidates the
+whole file — stale overrides are worse than the analytic default.
+Analytic defaults are never persisted (they are free to recompute).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import tempfile
 from typing import Callable, Optional
+
+import numpy as _np
 
 # f32 working-set budget per grid step; conservative half of the ~16 MB/core
 # VMEM so double-buffered pipelining of the next tiles fits alongside.
@@ -37,14 +51,104 @@ class KernelKey:
 
 _CACHE: dict[KernelKey, dict] = {}
 
+# ---------------------------------------------------------------------------
+# Cross-process persistence (measured registrations only)
+# ---------------------------------------------------------------------------
+
+CACHE_VERSION = 1
+_persist_loaded = False
+
+
+def cache_path() -> Optional[str]:
+    """Resolved persistent-cache path, or None when disabled."""
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env is not None:
+        return env or None            # "" disables persistence
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "autotune.json")
+
+
+def _key_str(key: KernelKey) -> str:
+    return f"{key.op}|{','.join(map(str, key.shape))}|{key.dtype}"
+
+
+def _key_from_str(s: str) -> Optional[KernelKey]:
+    try:
+        op, shape, dtype = s.split("|")
+        return KernelKey(op=op,
+                         shape=tuple(int(x) for x in shape.split(",") if x),
+                         dtype=dtype)
+    except ValueError:
+        return None
+
+
+def _read_persistent() -> dict:
+    """{key_str: blocks} from disk; {} on any problem or version skew."""
+    path = cache_path()
+    if not path or not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+    if payload.get("version") != CACHE_VERSION:
+        return {}                     # stale schema: ignore wholesale
+    entries = payload.get("entries")
+    return entries if isinstance(entries, dict) else {}
+
+
+def load_persistent() -> int:
+    """Merge the on-disk registrations into the in-memory cache (in-memory
+    entries win).  Idempotent per process; returns entries adopted."""
+    global _persist_loaded
+    _persist_loaded = True
+    adopted = 0
+    for ks, blocks in _read_persistent().items():
+        key = _key_from_str(ks)
+        if key is None or key in _CACHE or not isinstance(blocks, dict):
+            continue
+        _CACHE[key] = {k: int(v) for k, v in blocks.items()}
+        adopted += 1
+    return adopted
+
+
+def _write_persistent(key: KernelKey, blocks: dict) -> None:
+    path = cache_path()
+    if not path:
+        return
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        entries = _read_persistent()
+        entries[_key_str(key)] = {k: int(v) for k, v in blocks.items()}
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                   suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump({"version": CACHE_VERSION, "entries": entries}, f,
+                      indent=1)
+        os.replace(tmp, path)         # atomic vs concurrent writers
+    except OSError:
+        pass                          # persistence is best-effort
+
 
 def cache_key(op: str, shape: tuple, dtype) -> KernelKey:
+    # normalize through np.dtype so jnp.float32 (a type), an np.dtype and
+    # the string "float32" all land on the same key — a register() with
+    # the type object must be found by the serving path's x.dtype lookup
+    try:
+        dtype = _np.dtype(dtype)
+    except TypeError:
+        pass
     return KernelKey(op=op, shape=tuple(int(s) for s in shape),
                      dtype=str(dtype))
 
 
-def register(op: str, shape: tuple, dtype, blocks: dict) -> None:
-    _CACHE[cache_key(op, shape, dtype)] = dict(blocks)
+def register(op: str, shape: tuple, dtype, blocks: dict, *,
+             persist: bool = True) -> None:
+    key = cache_key(op, shape, dtype)
+    _CACHE[key] = dict(blocks)
+    if persist:
+        _write_persistent(key, blocks)
 
 
 def cache_info() -> dict:
@@ -52,8 +156,14 @@ def cache_info() -> dict:
     return {k: dict(v) for k, v in _CACHE.items()}
 
 
-def clear_cache() -> None:
+def clear_cache(*, persistent: bool = False) -> None:
+    global _persist_loaded
     _CACHE.clear()
+    _persist_loaded = False           # allow a fresh lazy load
+    if persistent:
+        path = cache_path()
+        if path and os.path.exists(path):
+            os.remove(path)
 
 
 def _bytes(dtype: str) -> int:
@@ -85,6 +195,23 @@ def _default_blocks(op: str, shape: tuple, dtype: str) -> dict:
             else:
                 bd = max(_MXU, bd // 2)
         return {"bc": bc, "bd": bd, "bh": bh}
+    if op == "grouped_gemm":
+        n, h, d, _e = shape
+        bn, bh, bd = _fit(n, 512), _fit(h, 512), _fit(d, 512)
+        # same working-set shrink as moe_gemm: x(bn,bh)+w(bh,bd)+acc(bn,bd);
+        # smaller bn also means fewer masked rows per boundary-straddling
+        # tile visit, so don't grow bn past the ragged row count.
+        while (bn * bh * el + bh * bd * el + bn * bd * 4) > VMEM_BUDGET_BYTES:
+            m = max(bn, bh, bd)
+            if m <= _MXU:
+                break
+            if bn == m:
+                bn = max(_MXU, bn // 2)
+            elif bh == m:
+                bh = max(_MXU, bh // 2)
+            else:
+                bd = max(_MXU, bd // 2)
+        return {"bn": bn, "bd": bd, "bh": bh}
     if op in ("permute", "unpermute"):
         # n output rows per grid step; the gather source stays VMEM-resident,
         # so the block only covers the output tile + index/weight columns.
@@ -109,9 +236,15 @@ def _default_blocks(op: str, shape: tuple, dtype: str) -> dict:
 
 
 def select_blocks(op: str, shape: tuple, dtype) -> dict:
-    """Block sizes for ``op`` on ``shape``/``dtype`` (cached per key)."""
+    """Block sizes for ``op`` on ``shape``/``dtype`` (cached per key).
+
+    Resolution: in-memory cache -> persisted registrations (lazily loaded
+    once per process) -> analytic default."""
     key = cache_key(op, shape, dtype)
     hit = _CACHE.get(key)
+    if hit is None and not _persist_loaded:
+        load_persistent()
+        hit = _CACHE.get(key)
     if hit is None:
         hit = _CACHE[key] = _default_blocks(op, key.shape, key.dtype)
     return dict(hit)
@@ -122,6 +255,8 @@ def _key_shape(op: str, args: tuple) -> tuple:
     MUST mirror how the ops.py wrappers build their select_blocks keys."""
     if op == "moe_gemm":                  # (x, w) -> (E, C, H, D)
         return tuple(args[0].shape) + (args[1].shape[-1],)
+    if op == "grouped_gemm":              # (x, w, offsets) -> (N, H, D, E)
+        return tuple(args[0].shape) + (args[1].shape[-1], args[1].shape[0])
     if op in ("permute", "unpermute"):    # (x|buf, idx, ...) -> (N|T, h)
         return (args[1].shape[0], args[0].shape[-1])
     if op == "flash_decode":              # (q, k, v, lens) -> k.shape
@@ -137,8 +272,10 @@ def tune(op: str, fn: Callable, candidates: list[dict], *args,
     ``shape``/``dtype`` default to the key the ops.py wrapper for ``op``
     would build from the same arguments, so a tuned registration is
     guaranteed to be the one the serving path looks up.  Measured walltime
-    only means something on the backend it ran on; the cache is
-    process-local on purpose.
+    only means something on the backend it ran on — and the winner IS
+    persisted (via ``register``) for later processes on this machine, so
+    don't ship a cache file tuned in interpret mode to a TPU host; set
+    ``REPRO_AUTOTUNE_CACHE=""`` to keep a tuning run process-local.
     """
     import time as _time
 
@@ -170,4 +307,5 @@ def tune(op: str, fn: Callable, candidates: list[dict], *args,
 
 
 __all__ = ["select_blocks", "register", "tune", "cache_info", "clear_cache",
-           "cache_key", "KernelKey", "VMEM_BUDGET_BYTES"]
+           "cache_key", "cache_path", "load_persistent", "CACHE_VERSION",
+           "KernelKey", "VMEM_BUDGET_BYTES"]

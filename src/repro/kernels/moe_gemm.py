@@ -1,14 +1,26 @@
-"""Grouped expert GEMM — the MoE hot-spot — as a Pallas TPU kernel.
+"""Grouped expert GEMMs — the MoE hot-spot — as Pallas TPU kernels.
 
-One (expert, C-tile, D-tile) output block per grid cell, accumulating over
-the contraction (H) dimension in a VMEM f32 scratch.  Block shapes default to
-MXU-aligned 128x128 tiles; the innermost grid dimension walks H so the
-accumulator lives across sequential grid steps (standard TPU matmul-pipeline
-structure: HBM->VMEM streaming of x/w tiles, MXU dot per step).
+Two variants share the same MXU-tiled matmul-pipeline structure (innermost
+grid dimension walks H so the f32 VMEM accumulator lives across sequential
+grid steps; HBM->VMEM streaming of x/w tiles, MXU dot per step):
+
+  moe_gemm      capacity-mode batched GEMM on dense (E, C, H) dispatch
+                buffers — one (expert, C-tile, D-tile) output block per grid
+                cell.  Compute volume is E*C rows regardless of load.
+
+  grouped_gemm  dropless-mode segment GEMM on a ragged (N, H) buffer sorted
+                by expert, with an ``group_offsets`` (E+1,) prefix-sum
+                delimiting each expert's rows.  The grid walks *tile visits*:
+                each row tile is visited once per expert segment overlapping
+                it (megablocks/Megatron "grouped GEMM" under TPU
+                constraints), so compute volume is sum(counts) = N = T*k rows
+                — independent of E and of the capacity factor.  Segment
+                boundaries are dynamic *values* (static shapes), delivered to
+                the index maps through scalar prefetch.
 
 TPU adaptation (DESIGN.md §2): the paper's NPU/GPU expert GEMMs become one
-MXU-tiled grouped GEMM over the (E, capacity, H) dispatch buffers that the
-fused AR-A2A communication delivers.
+MXU-tiled grouped GEMM over the dispatch buffers that the fused AR-A2A
+communication delivers.
 """
 
 from __future__ import annotations
@@ -65,4 +77,121 @@ def moe_gemm(x, w, *, bc: int = 128, bd: int = 128, bh: int = 128,
     return out[:, :c, :d]
 
 
-__all__ = ["moe_gemm"]
+# ---------------------------------------------------------------------------
+# Dropless segment GEMM (group-offset grid)
+# ---------------------------------------------------------------------------
+
+def _group_metadata(group_offsets, n: int, bn: int, e: int,
+                    num_tiles: int, n_visits: int):
+    """Per-visit schedule for the segment GEMM — all static shapes.
+
+    A *visit* is one (row-tile, expert) pair with a non-empty intersection;
+    a row tile that straddles a segment boundary is visited once per
+    overlapping expert, with out-of-segment rows masked in the kernel.
+    Returns (5, n_visits) int32: [tile_id, group_id, row_start, row_end,
+    first_visit_of_tile].
+
+    Every tile gets exactly one first_visit=1 write: row tiles past the
+    ragged extent (offsets[-1]) receive one all-masked visit each, so their
+    output blocks are written with exact zeros — never left uninitialized
+    (interpret mode would leave NaN; native TPU, undefined VMEM).  Visits
+    beyond that land on the last tile with first_visit=0 and an empty row
+    range, accumulating an exact zero into defined data.
+    """
+    counts = group_offsets[1:] - group_offsets[:-1]              # (E,)
+    first_tile = group_offsets[:-1] // bn
+    last_tile = jnp.maximum(group_offsets[1:] - 1, 0) // bn
+    tiles_touched = jnp.where(counts > 0, last_tile - first_tile + 1, 0)
+    cs = jnp.cumsum(tiles_touched)                               # (E,)
+    total = cs[-1]
+    v = jnp.arange(n_visits, dtype=jnp.int32)
+    g = jnp.searchsorted(cs, v, side="right").astype(jnp.int32)
+    g = jnp.minimum(g, e - 1)
+    visit_start = cs[g] - tiles_touched[g]
+    tile = first_tile[g] + (v - visit_start)
+    valid = v < total
+    # trailing tiles not covered by any segment: one zero-writing visit each
+    lt = jnp.where(total > 0,
+                   (jnp.maximum(group_offsets[-1], 1) - 1) // bn, -1)
+    pad_tile = lt + 1 + (v - total)                   # for v in [total, ...)
+    pad = (~valid) & (pad_tile <= num_tiles - 1)
+    tile_ids = jnp.where(valid, tile,
+                         jnp.where(pad, pad_tile,
+                                   num_tiles - 1)).astype(jnp.int32)
+    group_ids = jnp.where(valid, g, 0).astype(jnp.int32)
+    row_start = jnp.where(valid, group_offsets[g], 0).astype(jnp.int32)
+    row_end = jnp.where(valid, group_offsets[g + 1], 0).astype(jnp.int32)
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), tile_ids[:-1]])
+    first = ((valid | pad) & (tile_ids != prev)).astype(jnp.int32)
+    return jnp.stack([tile_ids, group_ids, row_start, row_end, first])
+
+
+def _grouped_gemm_kernel(meta_ref, x_ref, w_ref, o_ref, acc_ref, *, bn: int):
+    vi = pl.program_id(1)
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows = (meta_ref[0, vi] * bn
+            + jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0))
+    mask = (rows >= meta_ref[2, vi]) & (rows < meta_ref[3, vi])
+    xt = jnp.where(mask, x_ref[...], jnp.zeros_like(x_ref[...]))
+    acc_ref[...] += jnp.dot(xt, w_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        acc = acc_ref[...].astype(o_ref.dtype)
+        # revisited tiles (segment boundary inside the tile) accumulate into
+        # the still-VMEM-resident output block; the first visit overwrites it
+        o_ref[...] = jnp.where(meta_ref[4, vi] == 1, acc, o_ref[...] + acc)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bd", "bh", "interpret"))
+def grouped_gemm(x, w, group_offsets, *, bn: int = 128, bd: int = 128,
+                 bh: int = 128, interpret: bool = False):
+    """x (N, H) sorted by expert @ w (E, H, D) -> (N, D), per-segment.
+
+    ``group_offsets`` (E+1,) int32 ascending prefix-sum: expert e owns rows
+    [offsets[e], offsets[e+1]).  Rows at/after ``offsets[-1]`` belong to no
+    segment; their output is exact zeros (the ragged EP exchange pads with
+    zero rows that callers never read, but the kernel still writes every
+    block — no uninitialized output memory).
+    """
+    n, h = x.shape
+    e, _, d = w.shape
+    bn, bh, bd = min(bn, n), min(bh, h), min(bd, d)
+    pn, ph, pd = (-n) % bn, (-h) % bh, (-d) % bd
+    if pn or ph:
+        x = jnp.pad(x, ((0, pn), (0, ph)))
+    if ph or pd:
+        w = jnp.pad(w, ((0, 0), (0, ph), (0, pd)))
+    np_, hp, dp = n + pn, h + ph, d + pd
+    num_tiles = np_ // bn
+    # static visit bound: every tile once + one extra visit per boundary
+    n_visits = num_tiles + min(e, max(n, 1))
+    meta = _group_metadata(group_offsets.astype(jnp.int32), n, bn, e,
+                           num_tiles, n_visits)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(dp // bd, n_visits, hp // bh),
+        in_specs=[
+            pl.BlockSpec((bn, bh), lambda di, vi, hi, m: (m[0, vi], hi)),
+            pl.BlockSpec((1, bh, bd),
+                         lambda di, vi, hi, m: (m[1, vi], hi, di)),
+        ],
+        out_specs=pl.BlockSpec((bn, bd),
+                               lambda di, vi, hi, m: (m[0, vi], di)),
+        scratch_shapes=[pltpu.VMEM((bn, bd), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_grouped_gemm_kernel, bn=bn),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((np_, dp), x.dtype),
+        interpret=interpret,
+    )(meta, x, w)
+    return out[:n, :d]
+
+
+__all__ = ["moe_gemm", "grouped_gemm"]

@@ -21,8 +21,11 @@ import jax
 
 from repro.kernels import autotune, ref
 from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.moe_gemm import grouped_gemm as _grouped_gemm
 from repro.kernels.moe_gemm import moe_gemm as _moe_gemm
 from repro.kernels.permute import permute_tokens as _permute_tokens
+from repro.kernels.permute import (permute_tokens_ragged
+                                   as _permute_tokens_ragged)
 from repro.kernels.permute import unpermute_tokens as _unpermute_tokens
 from repro.kernels.topk_gate import topk_gate as _topk_gate
 
@@ -46,6 +49,16 @@ def moe_gemm(x, w, **kw):
             "moe_gemm", (e, c, h, w.shape[-1]), x.dtype)
         kw.update(blocks)
     return _moe_gemm(x, w, **kw)
+
+
+def grouped_gemm(x, w, group_offsets, **kw):
+    counters["grouped_gemm"] += 1
+    kw.setdefault("interpret", _interpret())
+    if not {"bn", "bd", "bh"} & kw.keys():
+        n, h = x.shape
+        kw.update(autotune.select_blocks(
+            "grouped_gemm", (n, h, w.shape[-1], w.shape[0]), x.dtype))
+    return _grouped_gemm(x, w, group_offsets, **kw)
 
 
 def topk_gate(logits, k: int, **kw):
@@ -74,6 +87,15 @@ def permute_tokens(x, src_tok, **kw):
     return _permute_tokens(x, src_tok, **kw)
 
 
+def permute_tokens_ragged(x, src_tok, total, **kw):
+    counters["permute_tokens_ragged"] += 1
+    kw.setdefault("interpret", _interpret())
+    if "bn" not in kw:
+        kw.update(autotune.select_blocks(
+            "permute", (src_tok.shape[0], x.shape[-1]), x.dtype))
+    return _permute_tokens_ragged(x, src_tok, total, **kw)
+
+
 def unpermute_tokens(buf, src_slot, weights, **kw):
     counters["unpermute_tokens"] += 1
     kw.setdefault("interpret", _interpret())
@@ -85,13 +107,14 @@ def unpermute_tokens(buf, src_slot, weights, **kw):
 
 # oracles re-exported for benches/tests
 moe_gemm_ref = ref.moe_gemm_ref
+grouped_gemm_ref = ref.grouped_gemm_ref
 topk_gate_ref = ref.topk_gate_ref
 flash_decode_ref = ref.flash_decode_ref
 permute_tokens_ref = ref.permute_tokens_ref
 unpermute_tokens_ref = ref.unpermute_tokens_ref
 
-__all__ = ["moe_gemm", "topk_gate", "flash_decode",
-           "permute_tokens", "unpermute_tokens",
-           "moe_gemm_ref", "topk_gate_ref", "flash_decode_ref",
-           "permute_tokens_ref", "unpermute_tokens_ref",
+__all__ = ["moe_gemm", "grouped_gemm", "topk_gate", "flash_decode",
+           "permute_tokens", "permute_tokens_ragged", "unpermute_tokens",
+           "moe_gemm_ref", "grouped_gemm_ref", "topk_gate_ref",
+           "flash_decode_ref", "permute_tokens_ref", "unpermute_tokens_ref",
            "counters", "reset_counters"]

@@ -7,8 +7,13 @@ through HBM twice.  These kernels collapse each direction into a single
 gather pass driven by precomputed int32 index vectors (Megatron-Core's
 "fused token permutation/unpermutation" under TPU constraints):
 
-  permute_tokens     out[i] = x[src_tok[i]]            (src_tok < 0 -> 0 row)
-  unpermute_tokens   out[t] = sum_j buf[src_slot[t,j]] * w[t,j]
+  permute_tokens         out[i] = x[src_tok[i]]        (src_tok < 0 -> 0 row)
+  permute_tokens_ragged  same, plus a dynamic row count so tiles past the
+                         ragged extent skip the gather loop (dropless EP
+                         exchange buffers are worst-case sized)
+  unpermute_tokens       out[t] = sum_j buf[src_slot[t,j]] * w[t,j]
+                         (already segment-agnostic: it reads ragged buffers
+                         through the same index vectors)
 
 The index vectors are tiny (ints, not h-wide rows): the inverse map costs
 one int32 scatter over E*C elements instead of a (T*k, h) float scatter-add.
@@ -29,6 +34,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import autotune
 
@@ -73,6 +79,84 @@ def permute_tokens(x, src_tok, *, bn: int = None, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((np_, h), x.dtype),
         interpret=interpret,
     )(src_tok.astype(jnp.int32), x)
+    return out[:n]
+
+
+def _permute_ragged_kernel(cnt_ref, idx_ref, x_ref, o_ref, *, bn: int,
+                           seg_stride: int, n_seg: int):
+    base = pl.program_id(0) * bn
+    # a tile fully inside one segment whose local offset is past that
+    # segment's populated prefix holds no data; straddling tiles always
+    # gather (conservative — their -1 entries yield zero rows anyway)
+    r0 = jnp.minimum(base // seg_stride, n_seg - 1)
+    r1 = jnp.minimum((base + bn - 1) // seg_stride, n_seg - 1)
+    empty = (r0 == r1) & ((base - r0 * seg_stride) >= cnt_ref[r0])
+
+    @pl.when(empty)
+    def _skip():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(~empty)
+    def _gather():
+        def body(i, _):
+            tok = idx_ref[i]
+            row = x_ref[pl.ds(jnp.maximum(tok, 0), 1), :]
+            o_ref[pl.ds(i, 1), :] = jnp.where(tok >= 0, row,
+                                              jnp.zeros_like(row))
+            return 0
+
+        jax.lax.fori_loop(0, bn, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("seg_stride", "bn", "interpret"))
+def permute_tokens_ragged(x, src_tok, total, *, seg_stride: int = None,
+                          bn: int = None, interpret: bool = False):
+    """Segment-aware ``permute_tokens``: the output is a sequence of
+    fixed-stride segments each populated only in a leading prefix, and
+    tiles that lie entirely in a segment's empty tail skip the serial
+    gather loop and just zero their block.
+
+    ``total`` is either a () scalar — one segment spanning the whole
+    buffer with ``total`` valid leading rows — or a (n_seg,) int32 vector
+    of per-segment prefix counts with segments at ``seg_stride`` row
+    intervals (the dropless EP send layout: destination rank r's rows
+    live at [r*seg_stride, r*seg_stride + counts[r])).  Rows outside the
+    prefixes must carry ``src_tok == -1`` (they come back as zero rows
+    either way).  The buffers are sized for the worst-case skew, so at
+    low load most tiles are empty."""
+    t, h = x.shape
+    n = src_tok.shape[0]
+    totals = jnp.asarray(total, jnp.int32).reshape(-1)    # () -> (1,)
+    n_seg = totals.shape[0]
+    if seg_stride is None:
+        seg_stride = n
+    if n_seg * seg_stride < n:
+        raise ValueError(f"segments ({n_seg} x {seg_stride}) do not cover "
+                         f"the {n}-row buffer")
+    if bn is None:
+        bn = autotune.select_blocks("permute", (n, h), x.dtype)["bn"]
+    bn = min(bn, n)
+    pn = (-n) % bn
+    if pn:
+        src_tok = jnp.pad(src_tok, (0, pn), constant_values=-1)
+    np_ = n + pn
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i, tot: (i,)),
+            pl.BlockSpec((t, h), lambda i, tot: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, h), lambda i, tot: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_permute_ragged_kernel, bn=bn,
+                          seg_stride=seg_stride, n_seg=n_seg),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((np_, h), x.dtype),
+        interpret=interpret,
+    )(totals, src_tok.astype(jnp.int32), x)
     return out[:n]
 
 
@@ -124,4 +208,4 @@ def unpermute_tokens(buf, src_slot, weights, *, bn: int = None,
     return out[:t]
 
 
-__all__ = ["permute_tokens", "unpermute_tokens"]
+__all__ = ["permute_tokens", "permute_tokens_ragged", "unpermute_tokens"]

@@ -12,6 +12,19 @@ def moe_gemm_ref(x, w):
                       preferred_element_type=jnp.float32).astype(x.dtype)
 
 
+def grouped_gemm_ref(x, w, group_offsets):
+    """Dropless segment GEMM.  x (N, H) sorted by expert, w (E, H, D),
+    group_offsets (E+1,) prefix-sum -> (N, D): row i uses the weights of the
+    expert whose [offsets[e], offsets[e+1]) segment contains i.
+
+    Rows at/after offsets[-1] are unspecified (XLA's ragged_dot computes
+    them with the trailing group) — callers never read them.
+    """
+    sizes = (group_offsets[1:] - group_offsets[:-1]).astype(jnp.int32)
+    return jax.lax.ragged_dot(
+        x, w, sizes, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
 def topk_gate_ref(logits, k: int, renorm: bool = True):
     """Fused softmax + top-k router gate.
 
@@ -63,5 +76,5 @@ def unpermute_tokens_ref(buf, src_slot, weights):
     return out.astype(buf.dtype)
 
 
-__all__ = ["moe_gemm_ref", "topk_gate_ref", "flash_decode_ref",
-           "permute_tokens_ref", "unpermute_tokens_ref"]
+__all__ = ["moe_gemm_ref", "grouped_gemm_ref", "topk_gate_ref",
+           "flash_decode_ref", "permute_tokens_ref", "unpermute_tokens_ref"]

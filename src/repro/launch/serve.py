@@ -40,6 +40,12 @@ def main():
                     help="Pallas kernel policy for the jitted serve graph: "
                          "auto = on for TPU backends, off elsewhere; on "
                          "forces the kernelized path (interpret mode on CPU)")
+    ap.add_argument("--dispatch", default="auto",
+                    choices=("auto", "dropless", "capacity"),
+                    help="MoE dispatch buffers: auto (-> dropless, the "
+                         "count-independent ragged inference dispatch) or "
+                         "capacity (fixed (E, C, h) buffers; training's "
+                         "scheme, kept for A/B comparison)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     policy = {"auto": KernelPolicy.auto(), "on": KernelPolicy.all_on(),
@@ -65,7 +71,8 @@ def main():
         embeds_fn = lambda b: {"frames": jnp.full(
             (b, e.n_frames, e.d_model), 0.01, jnp.float32)}
     eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
-                 embeds_fn=embeds_fn, kernel_policy=policy)
+                 embeds_fn=embeds_fn, kernel_policy=policy,
+                 dispatch_mode=args.dispatch)
     sched = Scheduler(eng)
     for r in synthetic_workload(args.requests, prompt_len=args.prompt_len,
                                 max_new_tokens=args.max_new,

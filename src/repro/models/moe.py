@@ -15,6 +15,28 @@ Four execution paths, selected by the ShardingPlan (see partitioner.make_plan):
 All paths share routing/dispatch/combine numerics, so with ample capacity they
 are numerically equivalent — tests/test_moe.py asserts this on a CPU mesh.
 
+Dispatch modes (``ShardingPlan.dispatch_mode`` / the ``dispatch`` argument):
+
+  capacity   classic fixed (E, C, h) buffers, C = capacity_for(T, ...).
+             C depends on the TOTAL token count, so a token's MoE output can
+             change with batch composition (different slots get dropped) —
+             the bucketed-prefill-vs-full-forward divergence.  Kept for
+             training, where the capacity bound is the load-balancing
+             contract.
+  dropless   sort the (token, k) slots by expert into a ragged (T*k, h)
+             buffer with an ``expert_offsets`` (E+1,) prefix-sum and run the
+             expert FFN as a grouped GEMM over segments (kernels.moe_gemm.
+             grouped_gemm).  No capacity, no drops, no zero padding: every
+             slot's result depends only on (token row, expert), so MoE
+             outputs are count-independent — prefill buckets, decode steps
+             and the full forward agree exactly.  Expert compute volume is
+             T*k rows instead of E*C.  Under EP the ranks first exchange
+             per-rank counts (a small int32 A2A), then the ragged token A2A
+             runs on worst-case-sized but mostly-empty buffers; the fused
+             RS-A2A-AG collective order is preserved verbatim.
+  auto       the default everywhere: resolves to dropless for inference
+             plans; training (train_step.loss_fn) pins capacity.
+
 Kernelization: the ShardingPlan carries a ``KernelPolicy``
 (repro.kernels.policy) selecting which Pallas kernels replace the jnp
 bodies on BOTH the local and the distributed (shard_map) paths:
@@ -217,6 +239,90 @@ def gather_from_buffers(buf, d: DispatchInfo, t: int,
 
 
 # ---------------------------------------------------------------------------
+# Dropless (ragged, count-independent) dispatch
+# ---------------------------------------------------------------------------
+
+def resolve_dispatch(mode: Optional[str]) -> str:
+    """"auto"/None -> "dropless" (the inference default); validates others."""
+    if mode in (None, "auto"):
+        return "dropless"
+    if mode not in ("capacity", "dropless"):
+        raise ValueError(f"unknown dispatch mode {mode!r} "
+                         "(want 'auto' | 'capacity' | 'dropless')")
+    return mode
+
+
+@dataclasses.dataclass
+class DroplessInfo:
+    """Sorted-slot dispatch: all shapes static, values dynamic."""
+    order: jax.Array      # (T*k,) slot id of sorted row i (by expert, stable)
+    inv: jax.Array        # (T*k,) sorted row of slot f (inverse of order)
+    counts: jax.Array     # (E,) tokens routed to each expert
+    offsets: jax.Array    # (E+1,) prefix-sum: expert e owns rows [e, e+1)
+    weights: jax.Array    # (T*k,) routing weights per slot
+
+
+def make_dropless(idx, weights, n_experts: int) -> DroplessInfo:
+    flat_e = idx.reshape(-1)
+    n = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True).astype(jnp.int32)
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat_e].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts).astype(jnp.int32)])
+    inv = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    return DroplessInfo(order=order, inv=inv, counts=counts,
+                        offsets=offsets, weights=weights.reshape(-1))
+
+
+def gather_rows(x, src, use_kernel: bool = False, total=None,
+                seg_stride: Optional[int] = None):
+    """x (M, h), src (N,) int32 -> (N, h); src < 0 yields a 0 row.
+
+    ``total`` (dynamic): valid-prefix row count(s) — a scalar for one
+    prefix over the whole buffer, or a per-segment vector with segments at
+    ``seg_stride`` intervals (the EP send layout).  Routes to the
+    segment-aware ragged permute kernel that skips empty tiles; validity
+    layout is metadata only — ``src`` must already be -1 outside it."""
+    if use_kernel:
+        from repro.kernels import ops as _kops
+        if total is not None:
+            return _kops.permute_tokens_ragged(x, src, total,
+                                               seg_stride=seg_stride)
+        return _kops.permute_tokens(x, src)
+    from repro.kernels import ref as _kref
+    return _kref.permute_tokens_ref(x, src)
+
+
+def combine_rows(buf, src_slot, weights, use_kernel: bool = False):
+    """buf (M, h), src_slot (T, k), weights (T, k) -> (T, h) weighted sum."""
+    if use_kernel:
+        from repro.kernels import ops as _kops
+        return _kops.unpermute_tokens(buf, src_slot, weights)
+    from repro.kernels import ref as _kref
+    return _kref.unpermute_tokens_ref(buf, src_slot, weights)
+
+
+def grouped_ffn(p, xs, offsets, cfg: ModelConfig, use_kernel: bool = False):
+    """Expert FFN over a ragged buffer.  xs (N, h) sorted by expert,
+    offsets (E_local+1,) -> (N, h).  Rows at/after offsets[-1] are
+    unspecified (never read).  Partial sum over TP shards when de' < de,
+    exactly like ``expert_ffn``."""
+    if use_kernel:
+        from repro.kernels import ops as _kops
+        gg = _kops.grouped_gemm
+    else:
+        from repro.kernels import ref as _kref
+        gg = _kref.grouped_gemm_ref
+    up = gg(xs, p["w_in"], offsets)
+    if "w_gate" in p:
+        mid = activate(gg(xs, p["w_gate"], offsets), up, cfg.activation)
+    else:
+        mid = activate(up, up, cfg.activation)
+    return gg(mid, p["w_out"], offsets)
+
+
+# ---------------------------------------------------------------------------
 # Expert FFN on capacity buffers
 # ---------------------------------------------------------------------------
 
@@ -261,29 +367,41 @@ def shared_expert_ffn(p, x, cfg: ModelConfig):
 
 def moe_local(p, x, cfg: ModelConfig, cf: Optional[float] = None,
               use_kernels: bool = False,
-              policy: Optional[KernelPolicy] = None):
+              policy: Optional[KernelPolicy] = None,
+              dispatch: Optional[str] = None):
     """x: (b, s, h).  Returns (out, aux_loss).
 
     ``policy`` selects the Pallas kernels per stage (interpret mode on CPU;
     native on TPU); ``use_kernels=True`` is the legacy shorthand for
-    ``KernelPolicy.all_on()``."""
+    ``KernelPolicy.all_on()``.  ``dispatch`` ("auto" -> dropless) picks the
+    buffer scheme; ``cf`` only applies to capacity mode."""
     if policy is None:
         policy = KernelPolicy.all_on() if use_kernels else NULL_POLICY
+    dispatch = resolve_dispatch(dispatch)
     b, s, h = x.shape
     xn = rms_norm(x, p["norm"], cfg.norm_eps)
     tok = xn.reshape(-1, h)
     t = tok.shape[0]
-    idx, w, aux = route_topk(tok @ p["router"], cfg.top_k,
+    k = cfg.top_k
+    idx, w, aux = route_topk(tok @ p["router"], k,
                              use_kernel=policy.topk_gate)
-    if cf is None:
-        cf = cfg.capacity_factor
-    cap = capacity_for(t, cfg.top_k, cfg.n_experts, cf)
-    d = make_dispatch(idx, w, cfg.n_experts, cap)
-    buf = scatter_to_buffers(tok, d, cfg.n_experts,
-                             use_kernel=policy.fused_permute)
-    out_buf = expert_ffn(p, buf, cfg, use_kernel=policy.moe_gemm)
-    out = gather_from_buffers(out_buf, d, t,
-                              use_kernel=policy.fused_permute)
+    if dispatch == "dropless":
+        dl = make_dropless(idx, w, cfg.n_experts)
+        xs = gather_rows(tok, dl.order // k,               # (T*k, h) sorted
+                         use_kernel=policy.fused_permute)
+        ys = grouped_ffn(p, xs, dl.offsets, cfg, use_kernel=policy.moe_gemm)
+        out = combine_rows(ys, dl.inv.reshape(t, k), w.reshape(t, k),
+                           use_kernel=policy.fused_permute)
+    else:
+        if cf is None:
+            cf = cfg.capacity_factor
+        cap = capacity_for(t, k, cfg.n_experts, cf)
+        d = make_dispatch(idx, w, cfg.n_experts, cap)
+        buf = scatter_to_buffers(tok, d, cfg.n_experts,
+                                 use_kernel=policy.fused_permute)
+        out_buf = expert_ffn(p, buf, cfg, use_kernel=policy.moe_gemm)
+        out = gather_from_buffers(out_buf, d, t,
+                                  use_kernel=policy.fused_permute)
     if cfg.n_shared_experts:
         out = out + shared_expert_ffn(p, tok, cfg)
     return out.reshape(b, s, h).astype(x.dtype), aux
@@ -452,17 +570,205 @@ def _moe_shard_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes, comm_algo,
     return out, aux
 
 
+def _moe_shard_dropless_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes,
+                           comm_algo, token_sliced: bool,
+                           mesh_axes: tuple = (),
+                           policy: KernelPolicy = NULL_POLICY):
+    """Per-device dropless body.  x: (b_loc, s, h) — replicated across
+    tp_axes.  Returns (out (b_loc, s, h), aux scalar).
+
+    EP exchange without capacity padding: ranks first A2A their per-expert
+    slot counts (an (ep, e_local) int32 — bytes, not activations), then A2A
+    ragged token buffers whose static per-destination extent is the
+    worst-case N_local = T_local*k but whose *populated* prefix is exactly
+    the routed count — the segment-aware permute kernel skips the empty
+    tail tiles, and the grouped GEMM's compute volume is sum(counts).  The
+    fused RS-A2A-AG path keeps the paper's collective order: the dispatch
+    A2A rides on 1/tp-sharded hidden states, an AG restores full width
+    before the expert GEMMs, and the combine reduces-scatters back to 1/tp
+    before the return A2A and a single epilogue AG (Alg. 1-2)."""
+    b, s, h = x.shape
+    tp = _axis_size(tp_axes) if tp_axes else 1
+    ep = _axis_size(ep_axes) if ep_axes else 1
+    e_global = cfg.n_experts
+    e_local = e_global // max(ep, 1)
+    k = cfg.top_k
+
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    tok_full = xn.reshape(-1, h)
+
+    t_real = tok_full.shape[0]
+    if token_sliced and tp > 1:
+        pad = (-t_real) % tp
+        if pad:
+            tok_full = jnp.pad(tok_full, ((0, pad), (0, 0)))
+        t_loc = tok_full.shape[0] // tp
+        tok = jax.lax.dynamic_slice_in_dim(
+            tok_full, _axis_index(tp_axes) * t_loc, t_loc, axis=0)
+    else:
+        tok = tok_full
+    t = tok.shape[0]
+    n = t * k
+
+    idx, w, aux = route_topk(tok @ p["router"], k,
+                             use_kernel=policy.topk_gate)
+    dl = make_dropless(idx, w, e_global)
+
+    fused = (comm_algo in ("fused", "sync")) and tp > 1 and ep > 1 \
+        and not token_sliced
+
+    if ep == 1:
+        # no EP exchange: the local dropless pipeline, with the usual TP
+        # partial-sum reduction over the expert_ffn shards.
+        xs = gather_rows(tok, dl.order // k,
+                         use_kernel=policy.fused_permute)
+        ys = grouped_ffn(p, xs, dl.offsets, cfg, use_kernel=policy.moe_gemm)
+        if tp > 1 and not token_sliced:
+            ys = jax.lax.psum(ys, tp_axes)
+        out_tok = combine_rows(ys, dl.inv.reshape(t, k), w.reshape(t, k),
+                               use_kernel=policy.fused_permute)
+        if token_sliced and tp > 1:
+            out_tok = jax.lax.all_gather(out_tok, tp_axes, axis=0,
+                                         tiled=True)[:t_real]
+        if cfg.n_shared_experts:
+            sp = shared_expert_ffn(p, tok_full if token_sliced else tok, cfg)
+            if tp > 1:          # shared FFN weights are TP-sharded partials
+                sp = jax.lax.psum(sp, tp_axes)
+            out_tok = out_tok + sp[:out_tok.shape[0]]
+        out = out_tok.reshape(b, s, h).astype(x.dtype)
+        if mesh_axes:
+            aux = jax.lax.pmean(aux, mesh_axes)
+        return out, aux
+
+    ax = ep_axes if len(ep_axes) > 1 else ep_axes[0]
+    # sorted-by-expert order is sorted-by-destination-rank order: the rows
+    # bound for rank r are the contiguous sorted segment
+    # [offsets[r*e_local], offsets[(r+1)*e_local]).
+    rank_off = dl.offsets[::e_local]                      # (ep+1,)
+    rank_cnt = rank_off[1:] - rank_off[:-1]               # (ep,)
+    i_in = jnp.arange(n, dtype=jnp.int32)[None, :]        # (1, S); S = n
+    p_sorted = rank_off[:-1, None] + i_in                 # (ep, S)
+    valid_send = i_in < rank_cnt[:, None]
+    src_tok_send = jnp.where(
+        valid_send, dl.order[jnp.minimum(p_sorted, n - 1)] // k, -1)
+
+    # ---- counts A2A (int32 metadata, before any activation traffic) ----
+    recv_counts = jax.lax.all_to_all(
+        dl.counts.reshape(ep, e_local), ax, split_axis=0, concat_axis=0,
+        tiled=False)                                      # (ep, e_local)
+
+    # ---------------- dispatch ----------------
+    if fused:
+        hs = h // tp
+        tok_payload = jax.lax.dynamic_slice_in_dim(
+            tok, _axis_index(tp_axes) * hs, hs, axis=1)   # (t, h/tp)
+    else:
+        tok_payload = tok
+    # per-destination-rank prefixes, NOT one contiguous prefix: rank r's
+    # rows live at [r*S, r*S + rank_cnt[r]), so the elision metadata is the
+    # (ep,) count vector with stride S
+    send = gather_rows(tok_payload, src_tok_send.reshape(-1),
+                       use_kernel=policy.fused_permute,
+                       total=rank_cnt, seg_stride=n)      # (ep*S, h')
+    send = send.reshape(ep, n, -1)
+    recv = jax.lax.all_to_all(send, ax, split_axis=0, concat_axis=0,
+                              tiled=False)                # (ep, S, h')
+    recv = recv.reshape(ep, n, send.shape[-1])
+    if fused:
+        recv = jax.lax.all_gather(recv, tp_axes, axis=-1, tiled=True)
+
+    # ---- regroup received rows by local expert (sources stay ordered) ----
+    # The permutation has a closed form from the count prefix-sums — no sort:
+    # comb row of recv row (s, i) = expert base (off_local[le]) + rows for le
+    # from earlier sources + rank of i within source s's le segment.
+    csum = jnp.cumsum(recv_counts, axis=1)                # (ep, e_local)
+    tot_src = csum[:, -1]                                 # (ep,)
+    le = (csum[:, :, None] <= i_in[None, :, :]).sum(1)    # (ep, S) local eid
+    le = le.astype(jnp.int32)
+    valid_2d = i_in < tot_src[:, None]                    # (ep, S)
+    counts_le = recv_counts.sum(0)                        # (e_local,)
+    off_local = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                 jnp.cumsum(counts_le).astype(jnp.int32)])
+    le_c = jnp.minimum(le, e_local - 1)
+    start_in_src = jnp.take_along_axis(csum - recv_counts, le_c, axis=1)
+    from_earlier = jnp.take_along_axis(
+        jnp.cumsum(recv_counts, axis=0) - recv_counts, le_c, axis=1)
+    pos = off_local[le_c] + from_earlier + (i_in - start_in_src)  # (ep, S)
+    valid_recv = valid_2d.reshape(-1)                     # (ep*S,)
+    comb_inv = jnp.where(valid_recv, pos.reshape(-1), 0).astype(jnp.int32)
+    park = jnp.where(valid_recv, comb_inv, ep * n)
+    comb_src = jnp.full((ep * n + 1,), -1, jnp.int32).at[park].set(
+        jnp.arange(ep * n, dtype=jnp.int32))[:-1]
+    m_real = tot_src.sum()
+    comb = gather_rows(recv.reshape(ep * n, -1), comb_src,
+                       use_kernel=policy.fused_permute, total=m_real)
+
+    # ---------------- expert compute ----------------
+    ys = grouped_ffn(p, comb, off_local, cfg,             # partial over tp
+                     use_kernel=policy.moe_gemm)
+
+    # ---------------- combine ----------------
+    shared_partial = None
+    if cfg.n_shared_experts:
+        shared_partial = shared_expert_ffn(
+            p, tok_full if token_sliced else tok, cfg)
+
+    if fused:
+        ys = jax.lax.psum_scatter(ys, tp_axes, scatter_dimension=1,
+                                  tiled=True)             # (M, h/tp)
+    elif tp > 1 and not token_sliced:
+        ys = jax.lax.psum(ys, tp_axes)
+
+    out_recv = gather_rows(ys, jnp.where(valid_recv, comb_inv, -1),
+                           use_kernel=policy.fused_permute)
+    out_send = jax.lax.all_to_all(
+        out_recv.reshape(ep, n, -1), ax, split_axis=0, concat_axis=0)
+    out_send = out_send.reshape(ep * n, -1)
+
+    # slot f sits at sorted position p = inv[f]; its rank r is the segment
+    # containing p, its exchange row r*S + (p - rank_off[r]).
+    p_pos = dl.inv
+    r_of = (jnp.searchsorted(rank_off, p_pos, side="right") - 1).astype(
+        jnp.int32)
+    row = r_of * n + (p_pos - rank_off[r_of])
+    out_tok = combine_rows(out_send, row.reshape(t, k), w.reshape(t, k),
+                           use_kernel=policy.fused_permute)
+
+    if fused:
+        if shared_partial is not None:
+            out_tok = out_tok + jax.lax.psum_scatter(
+                shared_partial, tp_axes, scatter_dimension=1, tiled=True)
+        out_tok = jax.lax.all_gather(out_tok, tp_axes, axis=-1, tiled=True)
+    else:
+        if token_sliced and tp > 1:
+            out_tok = jax.lax.all_gather(out_tok, tp_axes, axis=0,
+                                         tiled=True)[:t_real]
+        if shared_partial is not None:
+            if tp > 1:          # shared FFN weights are TP-sharded partials
+                shared_partial = jax.lax.psum(shared_partial, tp_axes)
+            out_tok = out_tok + shared_partial[:out_tok.shape[0]]
+
+    out = out_tok.reshape(b, s, h).astype(x.dtype)
+    if mesh_axes:
+        aux = jax.lax.pmean(aux, mesh_axes)
+    return out, aux
+
+
 def moe_block(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
-              cf: Optional[float] = None):
+              cf: Optional[float] = None, dispatch: Optional[str] = None):
     """The MoE block.  x: (b, s, h) -> (out, aux_loss).
 
     ``plan.kernels`` (a KernelPolicy) decides which stages run as Pallas
-    kernels; cf=0.0 is a legal (degenerate) capacity factor, so only None
+    kernels.  ``dispatch`` overrides ``plan.dispatch_mode`` ("auto" resolves
+    to dropless — see the module docstring); ``cf`` only applies to capacity
+    mode, where cf=0.0 is a legal (degenerate) capacity factor, so only None
     falls back to the config default."""
+    mode = resolve_dispatch(dispatch if dispatch is not None
+                            else getattr(plan, "dispatch_mode", None))
     if cf is None:
         cf = cfg.capacity_factor
     if not plan.enabled:
-        return moe_local(p, x, cfg, cf, policy=plan.kernels)
+        return moe_local(p, x, cfg, cf, policy=plan.kernels, dispatch=mode)
 
     mesh = plan.mesh
     # dp_ep plan: ep_axes overlaps tp_axes (experts span data x model) ->
@@ -486,10 +792,18 @@ def moe_block(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
             f"{cfg.name}: n_experts={cfg.n_experts} not divisible by "
             f"EP degree {ep} — pick a different plan (analyzer enforces this)")
 
-    fn = functools.partial(
-        _moe_shard_fn, cfg=cfg, tp_axes=plan.tp_axes, ep_axes=plan.ep_axes,
-        comm_algo=comm_algo, token_sliced=token_sliced, cf=cf,
-        mesh_axes=tuple(mesh.axis_names), policy=plan.kernels)
+    if mode == "dropless":
+        fn = functools.partial(
+            _moe_shard_dropless_fn, cfg=cfg, tp_axes=plan.tp_axes,
+            ep_axes=plan.ep_axes, comm_algo=comm_algo,
+            token_sliced=token_sliced, mesh_axes=tuple(mesh.axis_names),
+            policy=plan.kernels)
+    else:
+        fn = functools.partial(
+            _moe_shard_fn, cfg=cfg, tp_axes=plan.tp_axes,
+            ep_axes=plan.ep_axes, comm_algo=comm_algo,
+            token_sliced=token_sliced, cf=cf,
+            mesh_axes=tuple(mesh.axis_names), policy=plan.kernels)
 
     out, aux = _shard_map(
         fn, mesh=mesh,
@@ -505,4 +819,6 @@ __all__ = [
     "scatter_to_buffers", "gather_from_buffers", "expert_ffn",
     "capacity_for", "positions_in_expert", "DispatchInfo",
     "dispatch_src_tok", "dispatch_src_slot",
+    "resolve_dispatch", "DroplessInfo", "make_dropless", "gather_rows",
+    "combine_rows", "grouped_ffn",
 ]

@@ -16,10 +16,16 @@ is the one the automatic analyzer selected offline.
 Kernelization: ``kernel_policy`` (repro.kernels.KernelPolicy; default
 ``auto()`` = Pallas kernels on TPU backends, jnp elsewhere) is attached to
 the plan, so the jitted decode step runs ``flash_decode`` attention and —
-for MoE archs — the ``topk_gate`` / fused-permute / ``moe_gemm`` dispatch
+for MoE archs — the ``topk_gate`` / fused-permute / grouped-GEMM dispatch
 pipeline.  The decode loop keeps ``cur_tokens`` on device (the host copy of
 each step's tokens is read once, for request bookkeeping only), so steps
 chain device-to-device.
+
+MoE dispatch: ``dispatch_mode`` (default: the plan's, which defaults to
+"auto" -> dropless) selects capacity vs dropless buffers.  Serving wants
+dropless — bucketed prefill and single-token decode then produce logits
+that are count-independent, and decode-sized batches pay T*k rows of
+expert compute instead of E*C (see docs/dispatch.md).
 """
 
 from __future__ import annotations
@@ -79,7 +85,8 @@ class Engine:
                  *, max_batch: int = 8, max_len: int = 512,
                  dtype=jnp.float32, temperature: float = 0.0, seed: int = 0,
                  embeds_fn: Optional[Callable] = None,
-                 kernel_policy: Optional[KernelPolicy] = None):
+                 kernel_policy: Optional[KernelPolicy] = None,
+                 dispatch_mode: Optional[str] = None):
         if kernel_policy is None:
             # respect a policy the caller already put on the plan (make_plan
             # kernels=...); only a plan with everything off falls to auto()
@@ -87,6 +94,10 @@ class Engine:
                              else KernelPolicy.auto())
         if kernel_policy != plan.kernels:
             plan = dataclasses.replace(plan, kernels=kernel_policy)
+        if dispatch_mode is not None and dispatch_mode != plan.dispatch_mode:
+            # explicit argument wins over the plan; the plan default ("auto")
+            # already resolves to the dropless inference dispatch
+            plan = dataclasses.replace(plan, dispatch_mode=dispatch_mode)
         self.cfg, self.params, self.plan = cfg, params, plan
         self.max_batch, self.max_len = max_batch, max_len
         self.temperature = temperature

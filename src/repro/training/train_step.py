@@ -43,7 +43,16 @@ def cross_entropy(logits, labels, mask=None):
 
 def loss_fn(params, batch, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN,
             *, remat: bool = True):
-    """batch: {tokens, labels[, mask, embeds, frames]}."""
+    """batch: {tokens, labels[, mask, embeds, frames]}.
+
+    Training pins the MoE *capacity* dispatch: the fixed (E, C, h) buffers
+    are the load-balancing contract (dropped slots are what the router aux
+    loss pushes against, and per-expert compute stays bounded).  A plan
+    that explicitly says "dropless" is honored; the "auto" default — which
+    resolves to dropless for inference — is not."""
+    import dataclasses as _dc
+    if plan.dispatch_mode == "auto":
+        plan = _dc.replace(plan, dispatch_mode="capacity")
     out = forward(params, cfg, plan,
                   tokens=batch["tokens"],
                   embeds=batch.get("embeds"),

@@ -1,0 +1,7 @@
+"""Test-suite isolation: never read or write the developer's real autotune
+persistence file (~/.cache/repro/autotune.json).  Tests that exercise the
+persistent cache monkeypatch REPRO_AUTOTUNE_CACHE to a tmp path."""
+
+import os
+
+os.environ.setdefault("REPRO_AUTOTUNE_CACHE", "")   # "" disables persistence

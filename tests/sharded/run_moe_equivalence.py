@@ -1,5 +1,10 @@
 """Subprocess script: MoE block numerical equivalence across all plans/algos
-on a 4-device CPU mesh (fused RS-A2A-AG must be exact, not approximate)."""
+AND both dispatch modes on CPU meshes (fused RS-A2A-AG must be exact, not
+approximate).
+
+capacity runs with cf=8.0 (ample — no drops — so the distributed and local
+paths see identical slot sets); dropless has no capacity to trip over and
+must match the local oracle under every layout by construction."""
 
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -20,7 +25,6 @@ def main():
     key = jax.random.PRNGKey(0)
     params = init_tree(key, M.moe_spec(cfg), jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 64), jnp.float32)
-    out_local, _ = M.moe_local(params, x, cfg, cf=8.0)
 
     meshes = {
         "2x2": jax.make_mesh((2, 2), ("data", "model")),
@@ -31,14 +35,18 @@ def main():
     cases = [("mixserve", "fused"), ("mixserve", "sync"),
              ("mixserve", "unfused"), ("dp_ep", "unfused"),
              ("pure_tp", "unfused")]
-    for mesh_name, mesh in meshes.items():
-        for strat, algo in cases:
-            plan = make_plan(strat, mesh, comm_algo=algo)
-            out, _ = jax.jit(
-                lambda p, xx: M.moe_block(p, xx, cfg, plan, cf=8.0))(params, x)
-            err = float(jnp.max(jnp.abs(out - out_local)))
-            print(f"{mesh_name:9s} {strat:9s} {algo:8s} err={err:.2e}")
-            assert err < 1e-4, (mesh_name, strat, algo, err)
+    for mode in ("capacity", "dropless"):
+        out_local, _ = M.moe_local(params, x, cfg, cf=8.0, dispatch=mode)
+        for mesh_name, mesh in meshes.items():
+            for strat, algo in cases:
+                plan = make_plan(strat, mesh, comm_algo=algo, dispatch=mode)
+                out, _ = jax.jit(
+                    lambda p, xx: M.moe_block(p, xx, cfg, plan, cf=8.0))(
+                        params, x)
+                err = float(jnp.max(jnp.abs(out - out_local)))
+                print(f"{mode:8s} {mesh_name:9s} {strat:9s} {algo:8s} "
+                      f"err={err:.2e}")
+                assert err < 1e-4, (mode, mesh_name, strat, algo, err)
     print("MOE_EQUIVALENCE_OK")
 
 

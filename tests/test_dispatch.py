@@ -1,0 +1,181 @@
+"""Dispatch-mode semantics: dropless MoE outputs are count-independent —
+a token's output depends only on (token, routing), never on how many other
+tokens share the batch.  Capacity mode provably violates this (drops depend
+on the total count through capacity_for), which is exactly the bucketed
+prefill (T=32) vs full forward (T=40) divergence the dropless default fixes
+(ROADMAP "known seed failure" #1)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.partitioner import NULL_PLAN, make_plan
+from repro.kernels.policy import KernelPolicy
+from repro.models import model as MM
+from repro.models import moe as M
+from repro.models.param import init_tree
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**kw):
+    from repro.configs.base import ModelConfig
+    base = dict(name="d-moe", family="moe", n_layers=1, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                n_experts=8, top_k=2, d_expert=96, n_shared_experts=1,
+                capacity_factor=1.0)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("t_sub", [1, 5, 16])
+@pytest.mark.parametrize("use_kernels", [False, True])
+def test_dropless_moe_is_count_independent(t_sub, use_kernels):
+    """moe_local under dropless: the outputs for a token subset equal the
+    corresponding rows of the full batch — exactly (same-path float ops)."""
+    cfg = _cfg()
+    params = init_tree(KEY, M.moe_spec(cfg), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model),
+                          jnp.float32)
+    policy = KernelPolicy.all_on() if use_kernels else KernelPolicy.off()
+    full, _ = M.moe_local(params, x, cfg, policy=policy, dispatch="dropless")
+    sub, _ = M.moe_local(params, x[:, :t_sub], cfg, policy=policy,
+                         dispatch="dropless")
+    err = float(jnp.max(jnp.abs(sub - full[:, :t_sub])))
+    assert err < 1e-6, (t_sub, use_kernels, err)
+
+
+def test_capacity_moe_violates_count_independence():
+    """The property the dropless default exists to restore: with a tight
+    capacity factor, shrinking the batch changes which slots are dropped, so
+    the shared prefix's outputs change."""
+    cfg = _cfg(top_k=2, n_experts=8)
+    params = init_tree(KEY, M.moe_spec(cfg), jnp.float32)
+    # degenerate router (uniform logits): every token ties onto experts 0,1,
+    # so per-expert load is T while capacity_for gives T*k/E = T/4 — the
+    # drop cliff sits at a different slot for every batch size.
+    params = {**params, "router": jnp.zeros_like(params["router"])}
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 80, cfg.d_model),
+                          jnp.float32)
+    full, _ = M.moe_local(params, x, cfg, dispatch="capacity")
+    sub, _ = M.moe_local(params, x[:, :16], cfg, dispatch="capacity")
+    err = float(jnp.max(jnp.abs(sub - full[:, :16])))
+    assert err > 1e-4, f"expected capacity drops to differ, err={err}"
+    # and the same routing under dropless is subset-invariant
+    fd, _ = M.moe_local(params, x, cfg, dispatch="dropless")
+    sd, _ = M.moe_local(params, x[:, :16], cfg, dispatch="dropless")
+    assert float(jnp.max(jnp.abs(sd - fd[:, :16]))) < 1e-6
+
+
+def test_dropless_matches_capacity_with_ample_headroom():
+    """With cf high enough that nothing drops, the two dispatch schemes are
+    the same mathematical function (different summation trees: allclose)."""
+    cfg = _cfg()
+    params = init_tree(KEY, M.moe_spec(cfg), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    drop, _ = M.moe_local(params, x, cfg, dispatch="dropless")
+    cap, _ = M.moe_local(params, x, cfg, cf=8.0, dispatch="capacity")
+    np.testing.assert_allclose(np.asarray(drop), np.asarray(cap), atol=2e-5)
+
+
+def test_moe_block_default_is_dropless():
+    """NULL_PLAN carries dispatch_mode="auto" which must resolve to dropless
+    for inference — the moe_block default equals the explicit dropless call
+    and ignores cf."""
+    cfg = _cfg()
+    params = init_tree(KEY, M.moe_spec(cfg), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    assert NULL_PLAN.dispatch_mode == "auto"
+    assert M.resolve_dispatch("auto") == "dropless"
+    default, _ = M.moe_block(params, x, cfg)
+    explicit, _ = M.moe_block(params, x, cfg, dispatch="dropless")
+    np.testing.assert_array_equal(np.asarray(default), np.asarray(explicit))
+    tight, _ = M.moe_block(params, x, cfg, cf=0.0)      # cf inert: no drops
+    np.testing.assert_array_equal(np.asarray(default), np.asarray(tight))
+    with pytest.raises(ValueError):
+        M.resolve_dispatch("bogus")
+
+
+def test_training_loss_pins_capacity_dispatch():
+    """train_step.loss_fn maps the "auto" default to capacity (the training
+    load-balancing contract) but honors an explicit dropless plan."""
+    from repro.training.train_step import loss_fn
+
+    cfg = C.get_reduced("phi3.5-moe-42b")
+    # tight capacity so the capacity path genuinely drops slots
+    cfg = dataclasses.replace(cfg, capacity_factor=0.25)
+    params = MM.init_params(KEY, cfg, jnp.float32)
+    toks = jax.random.randint(KEY, (2, 12), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    l_auto, _ = loss_fn(params, batch, cfg, NULL_PLAN, remat=False)
+    l_cap, _ = loss_fn(
+        params, batch, cfg,
+        dataclasses.replace(NULL_PLAN, dispatch_mode="capacity"),
+        remat=False)
+    l_drop, _ = loss_fn(
+        params, batch, cfg,
+        dataclasses.replace(NULL_PLAN, dispatch_mode="dropless"),
+        remat=False)
+    assert float(l_auto) == float(l_cap)
+    # the reduced config routes with collisions at its default cf, so the
+    # dropless loss is genuinely different from the capacity loss
+    assert abs(float(l_drop) - float(l_cap)) > 1e-7
+
+
+def test_dropless_grads_flow():
+    """An explicit dropless plan is trainable: finite grads through the
+    sort/gather/segment-GEMM pipeline."""
+    cfg = _cfg()
+    params = init_tree(KEY, M.moe_spec(cfg), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model),
+                          jnp.float32)
+
+    def loss(p):
+        out, aux = M.moe_local(p, x, cfg, dispatch="dropless")
+        return (out ** 2).mean() + 0.01 * aux
+
+    grads = jax.grad(loss)(params)
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat)
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in flat)
+
+
+def test_engine_dispatch_mode_plumbs_to_plan():
+    from repro.serving.engine import Engine
+
+    cfg = C.get_reduced("smollm-360m")
+    params = MM.init_params(KEY, cfg, jnp.float32)
+    eng = Engine(cfg, params, max_batch=1, max_len=32)
+    assert eng.plan.dispatch_mode == "auto"      # -> dropless in moe_block
+    eng2 = Engine(cfg, params, max_batch=1, max_len=32,
+                  dispatch_mode="capacity")
+    assert eng2.plan.dispatch_mode == "capacity"
+
+
+def test_make_plan_carries_dispatch():
+    import jax as _jax
+    mesh = _jax.sharding.Mesh(np.array(_jax.devices()[:1]).reshape(1, 1),
+                              ("data", "model"))
+    for d in ("auto", "capacity", "dropless"):
+        assert make_plan("mixserve", mesh, dispatch=d).dispatch_mode == d
+        assert make_plan("mixserve", None, dispatch=d).dispatch_mode == d
+
+
+def test_prefill_bucket_vs_full_forward_phi35():
+    """The ROADMAP seed failure, as a focused regression: bucketed prefill
+    logits equal the full forward's prefix for the MoE arch under the
+    default (dropless) plan."""
+    cfg = C.get_reduced("phi3.5-moe-42b")
+    params = MM.init_params(KEY, cfg, jnp.float32)
+    toks = jax.random.randint(KEY, (2, 20), 0, cfg.vocab_size)
+    full = MM.forward(params, cfg, tokens=toks)
+    cache = MM.init_cache(cfg, 2, 64, jnp.float32)
+    pre = MM.forward(params, cfg, tokens=toks[:, :16], cache=cache)
+    err = float(jnp.max(jnp.abs(pre.logits - full.logits[:, :16])))
+    assert err < 2e-4, err

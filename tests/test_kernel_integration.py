@@ -25,29 +25,39 @@ SRC = os.path.join(HERE, "..", "src")
 
 
 @pytest.mark.kernels
-def test_moe_local_kernel_path_matches_jnp():
+@pytest.mark.parametrize("dispatch", ["capacity", "dropless"])
+def test_moe_local_kernel_path_matches_jnp(dispatch):
     params = init_tree(jax.random.PRNGKey(0), M.moe_spec(CFG), jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64), jnp.float32)
-    out_jnp, aux_jnp = M.moe_local(params, x, CFG, cf=8.0, use_kernels=False)
-    out_krn, aux_krn = M.moe_local(params, x, CFG, cf=8.0, use_kernels=True)
+    out_jnp, aux_jnp = M.moe_local(params, x, CFG, cf=8.0, use_kernels=False,
+                                   dispatch=dispatch)
+    out_krn, aux_krn = M.moe_local(params, x, CFG, cf=8.0, use_kernels=True,
+                                   dispatch=dispatch)
     np.testing.assert_allclose(np.asarray(out_krn), np.asarray(out_jnp),
                                atol=2e-5)
     assert abs(float(aux_krn) - float(aux_jnp)) < 1e-5
 
 
 @pytest.mark.kernels
-def test_moe_local_policy_traces_all_kernels():
+@pytest.mark.parametrize("dispatch,required", [
+    ("capacity", ("topk_gate", "moe_gemm", "permute_tokens",
+                  "unpermute_tokens")),
+    ("dropless", ("topk_gate", "grouped_gemm", "permute_tokens",
+                  "unpermute_tokens")),
+])
+def test_moe_local_policy_traces_all_kernels(dispatch, required):
     """KernelPolicy.all_on() must actually put every hot-path kernel into the
     jitted MoE graph (trace-time counters), and match jnp to allclose."""
     params = init_tree(jax.random.PRNGKey(0), M.moe_spec(CFG), jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64), jnp.float32)
-    fn_off = jax.jit(lambda p, xx: M.moe_local(p, xx, CFG, cf=8.0))
+    fn_off = jax.jit(lambda p, xx: M.moe_local(p, xx, CFG, cf=8.0,
+                                               dispatch=dispatch))
     fn_on = jax.jit(lambda p, xx: M.moe_local(
-        p, xx, CFG, cf=8.0, policy=KernelPolicy.all_on()))
+        p, xx, CFG, cf=8.0, policy=KernelPolicy.all_on(), dispatch=dispatch))
     out_off, _ = fn_off(params, x)
     ops.reset_counters()
     out_on, _ = fn_on(params, x)
-    for k in ("topk_gate", "moe_gemm", "permute_tokens", "unpermute_tokens"):
+    for k in required:
         assert ops.counters[k] > 0, (k, dict(ops.counters))
     np.testing.assert_allclose(np.asarray(out_on), np.asarray(out_off),
                                atol=2e-5)
@@ -56,12 +66,15 @@ def test_moe_local_policy_traces_all_kernels():
 @pytest.mark.kernels
 def test_moe_capacity_factor_zero_not_silently_replaced():
     """cf=0.0 is a real (degenerate) capacity factor: capacity clamps to 1
-    and must NOT fall back to cfg.capacity_factor (the old `cf or ...` bug)."""
+    and must NOT fall back to cfg.capacity_factor (the old `cf or ...` bug).
+    Capacity dispatch is pinned — the dropless default has no capacity."""
     params = init_tree(jax.random.PRNGKey(0), M.moe_spec(CFG), jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64), jnp.float32)
-    out_zero, _ = M.moe_local(params, x, CFG, cf=0.0)
-    out_eps, _ = M.moe_local(params, x, CFG, cf=1e-9)   # same capacity (1)
-    out_default, _ = M.moe_local(params, x, CFG)        # cfg.capacity_factor
+    out_zero, _ = M.moe_local(params, x, CFG, cf=0.0, dispatch="capacity")
+    out_eps, _ = M.moe_local(params, x, CFG, cf=1e-9,  # same capacity (1)
+                             dispatch="capacity")
+    out_default, _ = M.moe_local(params, x, CFG,       # cfg.capacity_factor
+                                 dispatch="capacity")
     np.testing.assert_allclose(np.asarray(out_zero), np.asarray(out_eps),
                                atol=1e-6)
     assert float(jnp.max(jnp.abs(out_zero - out_default))) > 1e-4
@@ -72,10 +85,10 @@ def test_moe_block_cf_zero(via_block):
     params = init_tree(jax.random.PRNGKey(0), M.moe_spec(CFG), jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64), jnp.float32)
     if via_block:
-        out, _ = M.moe_block(params, x, CFG, cf=0.0)
+        out, _ = M.moe_block(params, x, CFG, cf=0.0, dispatch="capacity")
     else:
-        out, _ = M.moe_local(params, x, CFG, cf=0.0)
-    ref, _ = M.moe_local(params, x, CFG, cf=1e-9)
+        out, _ = M.moe_local(params, x, CFG, cf=0.0, dispatch="capacity")
+    ref, _ = M.moe_local(params, x, CFG, cf=1e-9, dispatch="capacity")
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
 
 

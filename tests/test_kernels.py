@@ -116,6 +116,94 @@ def test_unpermute_tokens_sweep(t, k, h, m, dtype):
                                atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,h,d,e,skew", [
+    (64, 64, 64, 4, "uniform"), (100, 96, 200, 8, "uniform"),
+    (128, 64, 96, 16, "one_expert"),      # full skew: every row one expert
+    (96, 48, 64, 6, "empty_experts"),     # half the experts get nothing
+    (33, 40, 56, 5, "uniform"),           # ragged, nothing tile-aligned
+])
+def test_grouped_gemm_sweep(n, h, d, e, skew, dtype):
+    """Dropless segment GEMM == ragged_dot oracle across skews, including
+    empty experts and segment boundaries inside row tiles."""
+    rng = np.random.default_rng(0)
+    if skew == "one_expert":
+        counts = np.zeros(e, np.int64)
+        counts[e // 2] = n
+    elif skew == "empty_experts":
+        counts = rng.multinomial(n, [2 / e if i % 2 else 0.0
+                                     for i in range(e)])
+    else:
+        counts = rng.multinomial(n, np.ones(e) / e)
+    offs = jnp.asarray(np.concatenate([[0], np.cumsum(counts)]), jnp.int32)
+    x = jax.random.normal(KEY, (n, h), dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (e, h, d), jnp.float32)
+         / np.sqrt(h)).astype(dtype)
+    got = ops.grouped_gemm(x, w, offs, bn=16, bd=32, bh=32)
+    want = ops.grouped_gemm_ref(x, w, offs)
+    assert got.shape == (n, d) and got.dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_grouped_gemm_partial_buffer_zero_tail():
+    """Rows at/after offsets[-1] (the unused tail of a worst-case-sized EP
+    exchange buffer) come back as exact zeros — never uninitialized."""
+    n, h, d, e, m_real = 96, 32, 48, 4, 21
+    rng = np.random.default_rng(1)
+    counts = rng.multinomial(m_real, np.ones(e) / e)
+    offs = jnp.asarray(np.concatenate([[0], np.cumsum(counts)]), jnp.int32)
+    x = np.zeros((n, h), np.float32)
+    x[:m_real] = rng.standard_normal((m_real, h))
+    w = jnp.asarray(rng.standard_normal((e, h, d)) / np.sqrt(h), jnp.float32)
+    got = ops.grouped_gemm(jnp.asarray(x), w, offs, bn=8, bd=16, bh=16)
+    want = ops.grouped_gemm_ref(jnp.asarray(x), w, offs)
+    np.testing.assert_allclose(np.asarray(got[:m_real]),
+                               np.asarray(want[:m_real]), atol=1e-5)
+    assert float(jnp.max(jnp.abs(got[m_real:]))) == 0.0
+    assert not bool(jnp.isnan(got).any())
+
+
+@pytest.mark.parametrize("t,h,n,fill", [
+    (16, 32, 64, 0), (32, 64, 256, 100), (20, 48, 48, 48), (8, 16, 128, 3),
+])
+def test_permute_tokens_ragged_sweep(t, h, n, fill):
+    """Segment-aware ragged permute == gather oracle: rows past the dynamic
+    ``total`` are -1 (zero rows) and whole empty tiles are skipped."""
+    rng = np.random.default_rng(0)
+    x = jax.random.normal(KEY, (t, h), jnp.float32)
+    src = np.full((n,), -1, np.int32)
+    src[:fill] = rng.integers(0, t, size=fill)
+    got = ops.permute_tokens_ragged(x, jnp.asarray(src), fill, bn=8)
+    want = ops.permute_tokens_ref(x, jnp.asarray(src))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n_seg,stride,bn", [
+    (4, 32, 8), (8, 16, 8), (3, 40, 16), (2, 64, 128),
+])
+def test_permute_tokens_ragged_per_segment(n_seg, stride, bn):
+    """The EP send layout: per-destination-rank prefixes at fixed stride,
+    NOT one contiguous prefix.  Valid rows of every segment — including
+    the last ranks' — must survive tile elision."""
+    rng = np.random.default_rng(1)
+    t, h = 24, 32
+    x = jax.random.normal(KEY, (t, h), jnp.float32)
+    n = n_seg * stride
+    counts = rng.integers(0, stride + 1, n_seg).astype(np.int32)
+    src = np.full((n,), -1, np.int32)
+    for s in range(n_seg):
+        src[s * stride:s * stride + counts[s]] = rng.integers(
+            0, t, size=counts[s])
+    got = ops.permute_tokens_ragged(x, jnp.asarray(src),
+                                    jnp.asarray(counts),
+                                    seg_stride=stride, bn=bn)
+    want = ops.permute_tokens_ref(x, jnp.asarray(src))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_fused_permute_matches_moe_dispatch():
     """Kernel round trip == the jnp scatter/gather dispatch path, including
     capacity-dropped slots (cf tight enough to drop with random routing)."""
@@ -182,6 +270,66 @@ def test_autotune_flash_decode_bs_tracks_kv_len():
     long = autotune.select_blocks("flash_decode", (4, 4096, 8, 64),
                                   jnp.float32)
     assert short["bs"] == 256 and long["bs"] == 2048
+    autotune.clear_cache()
+
+
+def test_autotune_persistent_roundtrip(tmp_path, monkeypatch):
+    """register() writes through to the JSON cache; a fresh process (simulated
+    by clearing the in-memory cache) lazily adopts it in select_blocks."""
+    import json
+
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_cache()
+    # a measured override no analytic default would produce
+    autotune.register("moe_gemm", (4, 300, 512, 640), jnp.float32,
+                      {"bc": 32, "bd": 16, "bh": 8})
+    payload = json.loads(path.read_text())
+    assert payload["version"] == autotune.CACHE_VERSION
+    assert len(payload["entries"]) == 1
+
+    autotune.clear_cache()              # "new process": in-memory gone
+    assert autotune.cache_info() == {}
+    got = autotune.select_blocks("moe_gemm", (4, 300, 512, 640), jnp.float32)
+    assert got == {"bc": 32, "bd": 16, "bh": 8}    # adopted from disk
+    # a key NOT on disk still falls through to the analytic default
+    other = autotune.select_blocks("moe_gemm", (2, 64, 64, 64), jnp.float32)
+    assert other != got
+    autotune.clear_cache(persistent=True)
+    assert not path.exists()
+
+
+def test_autotune_persistent_stale_version_ignored(tmp_path, monkeypatch):
+    """A version-skewed cache file is invalidated wholesale: stale block
+    schemas must not leak into selection."""
+    import json
+
+    path = tmp_path / "autotune.json"
+    key = autotune.cache_key("moe_gemm", (4, 300, 512, 640), jnp.float32)
+    path.write_text(json.dumps({
+        "version": autotune.CACHE_VERSION + 999,
+        "entries": {f"moe_gemm|4,300,512,640|{key.dtype}":
+                    {"bc": 8, "bd": 8, "bh": 8}},
+    }))
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_cache()
+    got = autotune.select_blocks("moe_gemm", (4, 300, 512, 640), jnp.float32)
+    assert got != {"bc": 8, "bd": 8, "bh": 8}      # analytic default instead
+    # a corrupt file is equally ignored (best-effort persistence)
+    path.write_text("{not json")
+    autotune.clear_cache()
+    assert autotune.select_blocks("moe_gemm", (4, 300, 512, 640),
+                                  jnp.float32) == got
+    autotune.clear_cache()
+
+
+def test_autotune_persistence_disabled_by_empty_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", "")
+    autotune.clear_cache()
+    assert autotune.cache_path() is None
+    autotune.register("moe_gemm", (2, 64, 64, 64), jnp.float32,
+                      {"bc": 32, "bd": 32, "bh": 32})   # no crash, no file
+    assert list(tmp_path.iterdir()) == []
     autotune.clear_cache()
 
 
