@@ -33,10 +33,13 @@ SUITES = {
     "kernels": kernel_bench,     # pallas kernel micro-bench (ref vs pallas)
 }
 
-# --quick: the smoke gate — kernel pairs + the kernelized engine loop
+# --quick: the smoke gate — kernel pairs + the kernelized engine loop + the
+# blocking-prefill vs unified-step mixed-workload comparison (the BENCH
+# artifact that tracks the TTFT/ITL trajectory across PRs)
 QUICK = {
     "kernels": kernel_bench.run,
     "serve_quick": serve_micro.run_quick,
+    "serve_mixed": serve_micro.run_mixed_quick,
 }
 
 

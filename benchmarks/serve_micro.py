@@ -4,6 +4,14 @@ Complements the theoretical Fig. 10 reproduction with REAL engine numbers:
 continuous-batching TTFT/ITL/throughput for a MoE and a dense arch.  CPU
 walltimes are not TPU predictions — the point is exercising the production
 engine loop end-to-end under load and reporting the same indicators.
+
+Two engine paths are compared head-to-head:
+  unified   the default one-program token-budget mixed step (chunked
+            prefill co-scheduled with decode)
+  legacy    the pre-unified blocking-prefill engine (escape hatch)
+``run_mixed`` is the scenario the unified step exists for: long prompts
+landing mid-decode, where blocking prefill spikes every queued TTFT and
+active ITL.
 """
 
 from __future__ import annotations
@@ -14,49 +22,111 @@ import jax.numpy as jnp
 import repro.configs as C
 from repro.models.model import init_params
 from repro.serving.engine import Engine
-from repro.serving.scheduler import Scheduler, synthetic_workload
+from repro.serving.scheduler import (Scheduler, mixed_workload,
+                                     synthetic_workload)
 
 
 def run_quick() -> list:
     """Smoke gate for the kernelized serve path (``benchmarks.run --quick``).
 
-    Forces ``KernelPolicy.all_on()`` through a tiny MoE engine run and FAILS
-    unless the jitted prefill/decode graphs actually traced every hot-path
-    kernel — under the default (dropless) dispatch that is flash_decode,
-    topk_gate, the grouped segment GEMM and the fused permute/unpermute
-    pair; a second engine run pins capacity mode and checks its moe_gemm
-    path still traces too."""
+    Forces ``KernelPolicy.all_on()`` through a tiny MoE engine and FAILS
+    unless the jitted graphs actually traced every hot-path kernel.  Three
+    runs:
+      unified/dropless + unified/capacity — the ONE-program mixed step must
+        trace topk_gate, the expert GEMM (grouped under dropless, batched
+        under capacity) and the fused permute/unpermute pair (attention in
+        the mixed chunk runs the masked chunked-softmax body — flash_decode
+        is a chunk==1 specialization);
+      legacy/dropless — the escape-hatch decode program must still trace
+        flash_decode (regression bisect path).
+    """
     from repro.kernels import ops
     from repro.kernels.policy import KernelPolicy
 
     cfg = C.get_reduced("phi3.5-moe-42b")
     params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
     rows = []
-    for dispatch, gemm in (("dropless", "grouped_gemm"),
-                           ("capacity", "moe_gemm")):
+    cases = [("unified", "dropless", "grouped_gemm", None),
+             ("unified", "capacity", "moe_gemm", None),
+             ("legacy", "dropless", "grouped_gemm", "flash_decode")]
+    for mode, dispatch, gemm, extra in cases:
         ops.reset_counters()
         eng = Engine(cfg, params, max_batch=2, max_len=64,
                      kernel_policy=KernelPolicy.all_on(),
-                     dispatch_mode=dispatch)
+                     dispatch_mode=dispatch, chunk=4,
+                     legacy=(mode == "legacy"))
         sched = Scheduler(eng)
         for r in synthetic_workload(3, prompt_len=8, max_new_tokens=4,
                                     vocab=cfg.vocab_size, arrival_rate=16.0):
             sched.submit(r)
         done = sched.run()
         assert len(done) == 3, f"quick serve gate: {len(done)}/3 completed"
-        required = {"flash_decode", "topk_gate", gemm,
-                    "permute_tokens", "unpermute_tokens"}
+        required = {"topk_gate", gemm, "permute_tokens", "unpermute_tokens"}
+        if extra:
+            required.add(extra)
         missing = required - {k for k, v in ops.counters.items() if v > 0}
         if missing:
             raise RuntimeError(
-                f"kernelized serve path ({dispatch}) did not trace "
+                f"kernelized serve path ({mode}/{dispatch}) did not trace "
                 f"{sorted(missing)} (counters: {dict(ops.counters)})")
         m = sched.metrics()
-        rows.append((f"serve_quick/{cfg.name}/{dispatch}/kernels",
+        rows.append((f"serve_quick/{cfg.name}/{mode}-{dispatch}/kernels",
                      float(sum(ops.counters[k] for k in required)),
                      f"traced={sorted(required)} "
                      f"thr={m.throughput_tok_s:.1f}tok/s"))
     return rows
+
+
+def _run_one(cfg, params, reqs, *, legacy: bool, max_batch=4, max_len=192,
+             chunk=16):
+    eng = Engine(cfg, params, max_batch=max_batch, max_len=max_len,
+                 chunk=chunk, legacy=legacy)
+    sched = Scheduler(eng)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    return sched.metrics()
+
+
+def run_mixed(quick: bool = False) -> list:
+    """Mixed workload: long prompts arriving mid-decode, blocking-prefill vs
+    unified-step.  TTFT p99 is the headline (queued shorts wait behind the
+    long blocking prefill; the unified step streams it in chunks); the
+    decode-only scenario guards ITL against regression."""
+    rows = []
+    arch = "smollm-360m"
+    cfg = C.get_reduced(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    n_short, long_len = (5, 64) if quick else (10, 96)
+    scenarios = {
+        "mixed": lambda: mixed_workload(
+            n_short, short_len=12, n_long=2, long_len=long_len,
+            max_new_tokens=6 if quick else 8, vocab=cfg.vocab_size,
+            arrival_rate=24.0, seed=0),
+        "decode": lambda: synthetic_workload(
+            4 if quick else 8, prompt_len=8,
+            max_new_tokens=8 if quick else 16, vocab=cfg.vocab_size,
+            arrival_rate=64.0, seed=0),
+    }
+    for scen, mk in scenarios.items():
+        ms = {}
+        for mode in ("legacy", "unified"):
+            ms[mode] = _run_one(cfg, params, list(mk()),
+                                legacy=(mode == "legacy"),
+                                chunk=8 if quick else 16)
+        for mode, m in ms.items():
+            other = ms["unified" if mode == "legacy" else "legacy"]
+            rows.append((
+                f"serve_mixed/{arch}/{scen}/{mode}/ttft_p99",
+                m.ttft_p99 * 1e6,
+                f"itl_p99={m.itl_p99*1e3:.2f}ms "
+                f"ttft_p99_vs_other={m.ttft_p99/max(other.ttft_p99,1e-9):.2f}x "
+                f"n={m.n_requests} incomplete={m.n_incomplete}"))
+    return rows
+
+
+def run_mixed_quick() -> list:
+    return run_mixed(quick=True)
 
 
 def run() -> list:
@@ -74,6 +144,7 @@ def run() -> list:
         rows.append((f"serve/{arch}/itl", m.itl_mean * 1e6,
                      f"ttft={m.ttft_mean*1e3:.1f}ms "
                      f"thr={m.throughput_tok_s:.1f}tok/s n={m.n_requests}"))
+    rows.extend(run_mixed())
     return rows
 
 

@@ -6,6 +6,11 @@
 Offline stage first (automatic analyzer on the target cluster), then the
 engine + scheduler replay a Poisson workload and report measured TTFT / ITL /
 throughput next to the analyzer's theoretical estimates (Eqs. 9-11).
+
+The engine is the unified token-budget mixed prefill/decode step
+(docs/serving.md): one jitted program, prefill chunks co-scheduled with
+decode tokens under ``--chunk`` / ``--token-budget``; ``--legacy-engine``
+selects the pre-unified blocking-prefill path for A/B comparison.
 """
 
 from __future__ import annotations
@@ -20,7 +25,7 @@ from repro.core import analyzer
 from repro.core.topology import CLUSTERS
 from repro.kernels.policy import KernelPolicy
 from repro.models.model import init_params
-from repro.serving.engine import Engine
+from repro.serving.engine import Engine, unified_supported
 from repro.serving.scheduler import Scheduler, synthetic_workload
 
 
@@ -46,6 +51,20 @@ def main():
                          "count-independent ragged inference dispatch) or "
                          "capacity (fixed (E, C, h) buffers; training's "
                          "scheme, kept for A/B comparison)")
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="prefill chunk size of the unified mixed step: each "
+                         "prefilling slot contributes at most this many "
+                         "prompt tokens per iteration (decode slots always "
+                         "contribute 1); also the static width of the "
+                         "(B, chunk) token buffer")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="total tokens per unified iteration across all "
+                         "slots (0 -> max_batch * chunk); decode tokens are "
+                         "scheduled first, prefill chunks fill the rest")
+    ap.add_argument("--legacy-engine", action="store_true",
+                    help="escape hatch: the pre-unified engine (blocking "
+                         "bucket-padded prefill in admit + a separate decode "
+                         "program); also via env REPRO_LEGACY_ENGINE=1")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     policy = {"auto": KernelPolicy.auto(), "on": KernelPolicy.all_on(),
@@ -72,8 +91,12 @@ def main():
             (b, e.n_frames, e.d_model), 0.01, jnp.float32)}
     eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
                  embeds_fn=embeds_fn, kernel_policy=policy,
-                 dispatch_mode=args.dispatch)
-    sched = Scheduler(eng)
+                 dispatch_mode=args.dispatch, chunk=args.chunk,
+                 legacy=True if args.legacy_engine else None)
+    if eng.legacy and not args.legacy_engine and not unified_supported(cfg):
+        print(f"[engine] {cfg.name}: family {cfg.family!r} falls back to "
+              "the legacy blocking-prefill path")
+    sched = Scheduler(eng, token_budget=args.token_budget or None)
     for r in synthetic_workload(args.requests, prompt_len=args.prompt_len,
                                 max_new_tokens=args.max_new,
                                 vocab=cfg.vocab_size,

@@ -117,9 +117,14 @@ def chunked_attention(q, k, v, *, q_offset=0, kv_len: Optional[jax.Array] = None
     fit.  Each step materializes one (b, nkv, g, qb, skv) f32 score block,
     with qb auto-sized to a fixed VMEM/HBM budget (or forced via chunk_size).
 
-    ``kv_len`` masks the cache tail, ``window`` applies a sliding-window
-    mask, ``k_positions`` (skv,) gives explicit absolute KV positions for
-    ring-buffer caches (negative = invalid).
+    ``q_offset`` and ``kv_len`` may be scalars (uniform batch — train /
+    single-request prefill) or (b,) vectors (the unified mixed
+    prefill/decode serving step, where every slot sits at its own cache
+    offset).  A slot whose queries are all masked (a ragged tail / idle
+    slot) yields finite garbage rows — callers discard them.  ``kv_len``
+    masks the cache tail, ``window`` applies a sliding-window mask,
+    ``k_positions`` ((skv,) or (b, skv)) gives explicit absolute KV
+    positions for ring-buffer caches (negative = invalid).
     """
     b, sq, nq, hd = q.shape
     skv, nkv = k.shape[1], k.shape[2]
@@ -135,25 +140,28 @@ def chunked_attention(q, k, v, *, q_offset=0, kv_len: Optional[jax.Array] = None
         qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
     qc = qg.reshape(b, n_blocks, qb, nkv, groups, hd).transpose(1, 0, 2, 3, 4, 5)
 
+    # (b_, 1) per-slot query offsets; b_ is 1 (scalar, broadcasts) or b
+    q_off = jnp.atleast_1d(jnp.asarray(q_offset, jnp.int32))[:, None]
     if k_positions is None:
-        k_pos = jnp.arange(skv)
-        base_mask = (jnp.ones((skv,), bool) if kv_len is None
-                     else k_pos < jnp.asarray(kv_len))
+        k_pos = jnp.arange(skv)[None]                      # (1, skv)
+        base_mask = (jnp.ones((1, skv), bool) if kv_len is None
+                     else k_pos < jnp.atleast_1d(jnp.asarray(kv_len))[:, None])
     else:
-        k_pos = k_positions
+        k_pos = jnp.atleast_2d(k_positions)                # (1|b, skv)
         base_mask = k_pos >= 0
 
     def step(_, inp):
         idx, q_blk = inp                       # q_blk: (b, qb, nkv, g, hd)
-        q_pos = q_offset + idx * qb + jnp.arange(qb)
+        q_pos = q_off + idx * qb + jnp.arange(qb)          # (b_, qb)
         s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k,
                        preferred_element_type=jnp.float32)
-        mask = jnp.broadcast_to(base_mask[None, :], (qb, skv))
+        mask = jnp.broadcast_to(base_mask[:, None, :],
+                                (base_mask.shape[0], qb, skv))
         if causal:
-            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            mask = mask & (k_pos[:, None, :] <= q_pos[..., None])
         if window > 0:
-            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+            mask = mask & (k_pos[:, None, :] > q_pos[..., None] - window)
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
         m = s.max(axis=-1, keepdims=True)
         p = jnp.exp(s - m)
         l = p.sum(axis=-1)
@@ -181,19 +189,30 @@ def positions_from(idx, s: int):
     return jnp.arange(s) + idx
 
 
-def write_cache(buf, new, idx):
+def write_cache(buf, new, idx, valid_len=None):
     """Write ``new`` (b, s, ...) into ``buf`` (b, S, ...) at offset ``idx``.
 
     scalar idx  -> dynamic_update_slice (uniform batch — train/prefill)
-    (b,) idx    -> per-slot masked write (continuous batching decode, s == 1)
+    (b,) idx    -> per-slot write at per-slot offsets (continuous batching);
+                   ``valid_len`` (b,) keeps only the first valid_len[i] rows
+                   of slot i — the ragged-tail mask of the unified mixed
+                   prefill/decode step (rows past it are dropped, so an idle
+                   or short-chunk slot never touches its cache)
     """
     if jnp.ndim(idx) == 0:
         return jax.lax.dynamic_update_slice_in_dim(buf, new, idx, axis=1)
-    assert new.shape[1] == 1, "per-slot cache writes are decode-only (s=1)"
     b, skv = buf.shape[:2]
-    m = jnp.arange(skv)[None] == idx[:, None]              # (b, S)
-    m = m.reshape(b, skv, *([1] * (buf.ndim - 2)))
-    return jnp.where(m, new.astype(buf.dtype), buf)
+    s = new.shape[1]
+    if s == 1 and valid_len is None:   # classic decode: one masked write
+        m = jnp.arange(skv)[None] == idx[:, None]          # (b, S)
+        m = m.reshape(b, skv, *([1] * (buf.ndim - 2)))
+        return jnp.where(m, new.astype(buf.dtype), buf)
+    rows = idx[:, None] + jnp.arange(s, dtype=jnp.int32)[None]   # (b, s)
+    if valid_len is not None:
+        rows = jnp.where(jnp.arange(s)[None] < valid_len[:, None], rows, skv)
+    bi = jnp.arange(b)[:, None]
+    # invalid rows were parked at skv (out of bounds) -> dropped by scatter
+    return buf.at[bi, rows].set(new.astype(buf.dtype), mode="drop")
 
 
 def decode_attention(q, k, v, *, kv_len=None, q_positions=None, window: int = 0,
@@ -227,7 +246,10 @@ def decode_attention(q, k, v, *, kv_len=None, q_positions=None, window: int = 0,
             and window == 0 and k_positions is None and kv_len is not None):
         from repro.kernels import ops as _kops
         lens = jnp.broadcast_to(jnp.atleast_1d(kv_len), (b,)).astype(jnp.int32)
-        return _kops.flash_decode(q[:, 0], k, v, lens,
+        # kv_len == 0 only happens for idle slots of a unified mixed step,
+        # whose output rows are discarded; floor to 1 so the kernel's
+        # softmax never normalizes over an empty key set.
+        return _kops.flash_decode(q[:, 0], k, v, jnp.maximum(lens, 1),
                                   scale=float(scale))[:, None]
     if q_positions is None:
         q_positions = jnp.zeros((sq,), jnp.int32)
@@ -287,14 +309,20 @@ class KVView:
 
 def gqa_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
                   positions=None, cache: Optional[KVView] = None,
-                  window: int = 0, chunk_size: int = 1024):
+                  window: int = 0, chunk_size: int = 1024, q_lens=None):
     """Returns (out, new_cache_kv).  x: (b, s, h).
 
-    Three modes:
+    Four modes:
       cache is None                 train / stateless prefill (fresh K/V)
       cache given, s > 1            prefill INTO a preallocated cache buffer
       cache given, s == 1           decode — single token vs the cache, via
                                     ``decode_attention`` (seq-sharded friendly)
+      cache given, q_lens (b,)      unified mixed step — slot i contributes
+                                    the first q_lens[i] of its s rows
+                                    (prefill chunk, single decode token, or
+                                    0 = idle); cache.length is the per-slot
+                                    offset vector and ragged tails are
+                                    masked out of both writes and scores
     """
     b, s, h = x.shape
     xn = rms_norm(x, p["norm"], cfg.norm_eps)
@@ -320,11 +348,20 @@ def gqa_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
                                 chunk_size=chunk_size)
         new_kv = (k, v)
     else:
-        kc = write_cache(cache.k, k, idx)
-        vc = write_cache(cache.v, v, idx)
+        kc = write_cache(cache.k, k, idx, valid_len=q_lens)
+        vc = write_cache(cache.v, v, idx, valid_len=q_lens)
         kc = plan.constrain(kc, "batch", "kv_seq", None, None)
         vc = plan.constrain(vc, "batch", "kv_seq", None, None)
-        if s == 1:
+        if q_lens is not None:   # unified mixed step (per-slot ragged batch)
+            if s == 1:           # decode-shaped budget: flash_decode eligible
+                out = decode_attention(q, kc, vc, kv_len=idx + q_lens,
+                                       q_positions=positions_from(idx, s),
+                                       window=window, policy=plan.kernels)
+            else:
+                out = chunked_attention(q, kc, vc, q_offset=idx,
+                                        kv_len=idx + q_lens, causal=True,
+                                        window=window, chunk_size=chunk_size)
+        elif s == 1:
             out = decode_attention(q, kc, vc, kv_len=idx + s,
                                    q_positions=positions_from(idx, s),
                                    window=window, policy=plan.kernels)
@@ -374,7 +411,7 @@ def _mla_qkr(p, x, cfg, positions):
 
 def mla_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
                   positions=None, cache=None, chunk_size: Optional[int] = None,
-                  absorb: Optional[bool] = None):
+                  absorb: Optional[bool] = None, q_lens=None):
     """MLA attention.  cache = (c_cache, kr_cache, length) for decode.
 
     ``absorb=None`` auto-selects the regime (the DeepSeek serving recipe):
@@ -385,6 +422,10 @@ def mla_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
                                (r + rd) per token instead of 2*nh*hd.
     Using absorbed at s >> 1 would multiply score FLOPs/bytes by ~r/hd (4x
     for deepseek-v2) — that blowup is exactly what the auto rule avoids.
+
+    ``q_lens`` (b,) marks the unified mixed serving step: slot i contributes
+    its first q_lens[i] rows (cache length is the per-slot offset vector);
+    ragged tails are masked from cache writes and the kv mask.
     """
     b, s, h = x.shape
     nh, hd, vd, r = cfg.n_heads, cfg.head_dim, cfg.v_head_dim, cfg.kv_lora_rank
@@ -404,12 +445,13 @@ def mla_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
         q = jnp.concatenate([q_nope, q_rope], axis=-1)
         if cache is not None:
             c_cache, kr_cache, idx = cache
-            cc = write_cache(c_cache, c, idx)
-            krc = write_cache(kr_cache, k_rope, idx)
+            cc = write_cache(c_cache, c, idx, valid_len=q_lens)
+            krc = write_cache(kr_cache, k_rope, idx, valid_len=q_lens)
             cc = plan.constrain(cc, "batch", "kv_seq", None)
             krc = plan.constrain(krc, "batch", "kv_seq", None)
             src_c, src_kr, skv = cc, krc, cc.shape[1]
-            off, kv_len = idx, idx + s
+            off = idx
+            kv_len = idx + (s if q_lens is None else q_lens)
             new_cache = (cc, krc)
         else:
             src_c, src_kr, skv = c, k_rope, s
@@ -438,11 +480,12 @@ def mla_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
             new_cache = (c, k_rope)
         else:
             c_cache, kr_cache, idx = cache
-            cc = write_cache(c_cache, c, idx)
-            krc = write_cache(kr_cache, k_rope, idx)
+            cc = write_cache(c_cache, c, idx, valid_len=q_lens)
+            krc = write_cache(kr_cache, k_rope, idx, valid_len=q_lens)
             cc = plan.constrain(cc, "batch", "kv_seq", None)
             krc = plan.constrain(krc, "batch", "kv_seq", None)
-            off, kv_len = idx, idx + s
+            off = idx
+            kv_len = idx + (s if q_lens is None else q_lens)
             new_cache = (cc, krc)
         # latent "keys" = [c ; k_rope], latent "values" = c (single kv head)
         k_lat = jnp.concatenate([cc, krc], axis=-1)[:, :, None, :]

@@ -356,22 +356,32 @@ def _cross_attn(p, x, cfg: ModelConfig, plan: ShardingPlan, xk, xv):
 
 
 def apply_sublayer(kind: str, p, x, c, *, cfg: ModelConfig,
-                   plan: ShardingPlan, positions, length, enc_out=None):
-    """One residual layer.  Returns (x, new_cache_or_None, aux)."""
+                   plan: ShardingPlan, positions, length, enc_out=None,
+                   q_lens=None):
+    """One residual layer.  Returns (x, new_cache_or_None, aux).
+
+    ``q_lens`` (b,) marks the unified mixed prefill/decode serving step:
+    per-slot ragged query counts against per-slot cache offsets.  Only
+    attention-cached kinds support it — the recurrent/ring kinds advance
+    their state by every row and cannot mask a ragged tail."""
     aux = jnp.zeros((), jnp.float32)
+    if q_lens is not None and kind not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"unified mixed step (q_lens) unsupported for layer kind "
+            f"{kind!r} — serve this family through the legacy engine path")
 
     if kind in ("dense", "moe", "xdec"):
         if cfg.attention == "mla":
             mla_cache = None if c is None else (c["c"], c["kr"], length)
             a_out, new_kv = L.mla_attention(p["attn"], x, cfg, plan,
                                             positions=positions,
-                                            cache=mla_cache)
+                                            cache=mla_cache, q_lens=q_lens)
             new_c = None if c is None else {"c": new_kv[0], "kr": new_kv[1]}
         else:
             kv_view = None if c is None else L.KVView(c["k"], c["v"], length)
             a_out, new_kv = L.gqa_attention(p["attn"], x, cfg, plan,
                                             positions=positions,
-                                            cache=kv_view)
+                                            cache=kv_view, q_lens=q_lens)
             new_c = None if c is None else {"k": new_kv[0], "v": new_kv[1]}
         x = x + a_out
 
@@ -464,14 +474,35 @@ class Output:
 
 def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
             tokens=None, embeds=None, frames=None, positions=None,
-            cache=None, remat: bool = False) -> Output:
+            cache=None, remat: bool = False, q_lens=None,
+            last_only: bool = False) -> Output:
     """Unified forward.
 
     tokens  (b, s_text) int32 — text token ids (None for pure-embed input)
     embeds  (b, s_front, h)   — vlm patch-embedding stub, prepended to tokens
     frames  (b, n_frames, d)  — audio frame-embedding stub (whisper encoder)
     cache   from ``init_cache`` (prefill fills it, decode reads+updates)
+    q_lens  (b,) int32        — unified mixed prefill/decode step: slot i
+                                contributes the first q_lens[i] of its s
+                                token rows (a prefill chunk, one decode
+                                token, or 0 = idle) at its own cache offset
+                                (``cache["length"]`` must be the per-slot
+                                vector); the cache advances by q_lens per
+                                slot and rows past q_lens[i] are inert
+                                padding whose logits/cache writes are
+                                masked.  Requires a cache; attention-cached
+                                families only (dense/vlm-text, moe, mla).
+    last_only                   with q_lens: apply the LM head only to each
+                                slot's last valid row (position
+                                q_lens[i] - 1), returning (b, 1, v) logits —
+                                the serving hot path, which would otherwise
+                                pay the vocab matmul on every pad row of the
+                                (b, chunk) buffer.
     """
+    if q_lens is not None and cache is None:
+        raise ValueError("q_lens (unified mixed step) requires a cache")
+    if last_only and q_lens is None:
+        raise ValueError("last_only requires q_lens (the unified mixed step)")
     length = None if cache is None else cache["length"]
     idx = 0 if cache is None else length
 
@@ -513,7 +544,8 @@ def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
                     x, nc, a = apply_sublayer(k, p_l[f"l{i}"], x, ci,
                                               cfg=cfg, plan=plan,
                                               positions=positions,
-                                              length=length, enc_out=enc_out)
+                                              length=length, enc_out=enc_out,
+                                              q_lens=q_lens)
                     aux = aux + a
                     if nc is not None:
                         new_c_l[f"l{i}"] = nc
@@ -522,7 +554,8 @@ def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
                 x, new_c_l, a = apply_sublayer(_g.kind, p_l, x, c_l,
                                                cfg=cfg, plan=plan,
                                                positions=positions,
-                                               length=length, enc_out=enc_out)
+                                               length=length, enc_out=enc_out,
+                                               q_lens=q_lens)
                 aux = aux + a
             # Megatron-style sequence parallelism on the residual stream:
             # the scan carry (saved for backward, x n_layers) lives
@@ -536,6 +569,9 @@ def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
             body, (x, aux_total), (p_g, c_g))
         new_groups.append(new_c_g)
 
+    if last_only:   # per-slot last valid row; norm/head are per-token ops
+        x = jnp.take_along_axis(
+            x, jnp.maximum(q_lens - 1, 0)[:, None, None], axis=1)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
     logits = jnp.einsum("bsh,hv->bsv", x, head)
@@ -546,7 +582,8 @@ def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
 
     new_cache = None
     if cache is not None:
-        new_cache = {"groups": new_groups, "length": length + s}
+        adv = s if q_lens is None else q_lens     # per-slot ragged advance
+        new_cache = {"groups": new_groups, "length": length + adv}
     return Output(logits=logits, cache=new_cache, aux=aux_total)
 
 

@@ -1,36 +1,49 @@
-"""vLLM-lite serving engine: continuous batching over a slotted KV cache.
+"""vLLM-lite serving engine: token-budget continuous batching over a slotted
+KV cache.
 
-The engine owns two jitted programs:
-  prefill_fn(params, tokens(1, s_bucket))           -> (last_logits, cache_1)
-  decode_fn(params, tokens(B, 1), cache, active(B)) -> (logits, cache)
+Default path — ONE jitted program (the unified mixed prefill/decode step):
 
-Requests are admitted into free slots at iteration granularity (Orca-style
-iteration-level scheduling); one decode step advances every active slot.
-Inactive slots decode a pad token whose cache writes land at their frozen
-``length`` — invisible (masked by kv_len) and overwritten before that
-position ever becomes visible to a future occupant.
+  unified_fn(params, tokens(B, chunk), q_lens(B,), cache, key)
+      -> (next_token(B,), last_logits(B, V), step_logits, cache)
+  (step_logits = every row's (B, chunk, V) logits under ``debug_logits``,
+   else None — the hot path runs the LM head only on last valid rows)
+
+Every iteration each slot contributes ``q_lens[i] ∈ {0, 1, …, chunk}``
+tokens against the fixed (B, chunk) buffer: a decoding slot contributes its
+1 sampled token, a prefilling slot contributes the next chunk of its
+prompt, an idle slot contributes 0.  Admission is just bookkeeping (the
+prompt goes into the slot's pending queue and the slot's cache length is
+zeroed) — no blocking prefill, so a long prompt never stalls the decode
+slots (Sarathi-style chunked prefill, finally wired into the online
+engine).  Ragged tails are masked at every level: per-slot cache writes
+drop rows past q_lens[i], attention masks keys past
+``length[i] + q_lens[i]``, and — because the default dropless MoE dispatch
+is count-independent — pad rows cannot perturb any other slot's logits
+(see docs/serving.md and docs/dispatch.md).
+
+Legacy path — the pre-unified two-program engine (bucket-padded blocking
+prefill in ``admit`` + a separate decode program), kept one release behind
+``legacy=True`` / env ``REPRO_LEGACY_ENGINE=1`` so equivalence tests can
+compare both and regressions bisect cleanly.  Families whose caches are not
+slot-indexed attention KV (ssm, hybrid ring buffers, whisper enc-dec) and
+stub-frontend models fall back to it automatically: their recurrent/ring
+state advances per row and cannot mask a ragged tail.
 
 This is the "online stage" host of MixServe: the ShardingPlan injected here
-is the one the automatic analyzer selected offline.
-
-Kernelization: ``kernel_policy`` (repro.kernels.KernelPolicy; default
-``auto()`` = Pallas kernels on TPU backends, jnp elsewhere) is attached to
-the plan, so the jitted decode step runs ``flash_decode`` attention and —
-for MoE archs — the ``topk_gate`` / fused-permute / grouped-GEMM dispatch
-pipeline.  The decode loop keeps ``cur_tokens`` on device (the host copy of
-each step's tokens is read once, for request bookkeeping only), so steps
-chain device-to-device.
-
-MoE dispatch: ``dispatch_mode`` (default: the plan's, which defaults to
-"auto" -> dropless) selects capacity vs dropless buffers.  Serving wants
-dropless — bucketed prefill and single-token decode then produce logits
-that are count-independent, and decode-sized batches pay T*k rows of
-expert compute instead of E*C (see docs/dispatch.md).
+is the one the automatic analyzer selected offline.  ``kernel_policy``
+(repro.kernels.KernelPolicy; default ``auto()`` = Pallas kernels on TPU
+backends) rides on the plan into the jitted step — for MoE archs the
+``topk_gate`` / fused-permute / grouped-GEMM dropless pipeline; with
+``chunk == 1`` (a pure-decode budget) the attention runs the Pallas
+``flash_decode`` kernel.  ``dispatch_mode`` (default: the plan's "auto" ->
+dropless) selects MoE buffers; serving wants dropless — it is what makes
+the mixed batch safe.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Callable, Optional
 
@@ -43,6 +56,10 @@ from repro.core.partitioner import NULL_PLAN, ShardingPlan
 from repro.kernels.policy import KernelPolicy
 from repro.models.model import forward, init_cache
 from repro.serving.kv_cache import insert_slot, with_lengths
+
+
+class PromptTooLongError(ValueError):
+    """Prompt (+ frontend tokens + generation budget) cannot fit the cache."""
 
 
 @dataclasses.dataclass
@@ -80,13 +97,30 @@ def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
     return buckets[-1]
 
 
+MAX_BUCKET = 4096      # largest legacy prefill bucket — hard prompt cap
+
+
+def unified_supported(cfg: ModelConfig) -> bool:
+    """Whether the unified mixed step can serve this config.
+
+    Attention-cached text families only: recurrent (rwkv) and ring-buffer
+    (hybrid local-attn) state advances by every scanned row so a ragged
+    tail cannot be masked, and stub-frontend models (vision/audio) need
+    per-request embeds injected at prefill — both stay on the legacy path.
+    """
+    return cfg.family in ("dense", "moe", "vlm") and not cfg.frontend \
+        and not cfg.mrope
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, plan: ShardingPlan = NULL_PLAN,
                  *, max_batch: int = 8, max_len: int = 512,
                  dtype=jnp.float32, temperature: float = 0.0, seed: int = 0,
                  embeds_fn: Optional[Callable] = None,
                  kernel_policy: Optional[KernelPolicy] = None,
-                 dispatch_mode: Optional[str] = None):
+                 dispatch_mode: Optional[str] = None,
+                 chunk: int = 16, legacy: Optional[bool] = None,
+                 debug_logits: bool = False):
         if kernel_policy is None:
             # respect a policy the caller already put on the plan (make_plan
             # kernels=...); only a plan with everything off falls to auto()
@@ -103,18 +137,93 @@ class Engine:
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
         self.embeds_fn = embeds_fn    # vlm/audio stub-frontend provider
+        self.chunk = max(1, min(int(chunk), max_len))
+        # debug/oracle mode: keep every row's logits (B, chunk, V) per step
+        # in ``step_logits``; the hot path applies the LM head only to each
+        # slot's last valid row (forward last_only)
+        self.debug_logits = bool(debug_logits)
+
+        if legacy is None:
+            env = os.environ.get("REPRO_LEGACY_ENGINE", "")
+            legacy = env not in ("", "0") or not unified_supported(cfg)
+        elif not legacy and not unified_supported(cfg):
+            raise ValueError(
+                f"{cfg.name}: family {cfg.family!r} / frontend "
+                f"{cfg.frontend!r} is not supported by the unified step — "
+                "use legacy=True (or legacy=None for auto-fallback)")
+        self.legacy = bool(legacy)
 
         self.cache = with_lengths(
             init_cache(cfg, max_batch, max_len, dtype),
             jnp.zeros((max_batch,), jnp.int32))
         self.slots: list[Optional[Request]] = [None] * max_batch
         self.cur_tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        # unified-step slot bookkeeping (host side, mirrors device lengths)
+        self._prompt_pos = [0] * max_batch     # prompt tokens already written
+        self._last_tok = [0] * max_batch       # last sampled token per slot
+        self._admit_seq = [0] * max_batch      # admission order (prefill FIFO)
+        self._seq = 0
+        self.last_logits = None                # (B, V) of the last step
+        self.step_logits = None                # (B, chunk, V), debug_logits
 
         self._prefill_cache = {}
         self._decode = jax.jit(self._decode_impl)
+        self._unified = jax.jit(self._unified_impl)
         self.dtype = dtype
 
+    # -- validation ------------------------------------------------------
+    def validate(self, req: Request) -> None:
+        """Reject a request whose prompt + generation can never fit.
+
+        The legacy path used to let an over-length prompt overflow the
+        bucket buffer / cache writes silently (positions past max_len were
+        clamp-scattered onto the last rows) — now both paths refuse it
+        up front with a clear error.
+        """
+        s = len(req.prompt) + self._front_len()
+        need = s + max(0, req.max_new_tokens - 1)
+        if self.legacy:
+            # the blocking prefill writes a whole bucket-padded buffer into
+            # the cache, so the BUCKET must fit, not just the prompt
+            need = max(need, _bucket(len(req.prompt)) + self._front_len())
+        if len(req.prompt) > MAX_BUCKET or need > self.max_len:
+            raise PromptTooLongError(
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"(+{self._front_len()} frontend, +{req.max_new_tokens} new) "
+                f"needs {need} cache positions but max_len={self.max_len} "
+                f"(prompt cap {MAX_BUCKET}) — raise max_len, shorten the "
+                "prompt, or lower max_new_tokens")
+
     # -- jitted programs -------------------------------------------------
+    def _unified_impl(self, params, tokens, q_lens, cache, key):
+        """THE serving program: one mixed token-budget iteration.
+
+        tokens (B, chunk) int32, q_lens (B,) int32.  Slot i's valid rows are
+        tokens[i, :q_lens[i]] — a prefill chunk or a single decode token —
+        at cache offset length[i]; rows past q_lens[i] are inert.  Samples
+        each slot's next token from its last valid row's logits (only
+        meaningful to the host when the slot just finished its prompt or is
+        decoding; the host ignores the rest).  The LM head runs only on
+        those last rows unless ``debug_logits`` asks for every row (the
+        oracle tests).
+        """
+        out = forward(params, self.cfg, self.plan, tokens=tokens,
+                      cache=cache, q_lens=q_lens,
+                      last_only=not self.debug_logits)
+        if self.debug_logits:
+            last = jnp.take_along_axis(
+                out.logits, jnp.maximum(q_lens - 1, 0)[:, None, None],
+                axis=1)[:, 0]                               # (B, V)
+            step_logits = out.logits
+        else:
+            last = out.logits[:, 0]
+            step_logits = None
+        if self.temperature > 0:
+            nxt = jax.random.categorical(key, last / self.temperature, -1)
+        else:
+            nxt = jnp.argmax(last, -1)
+        return nxt.astype(jnp.int32), last, step_logits, out.cache
+
     def _prefill_impl(self, params, tokens, real_len):
         cache = init_cache(self.cfg, 1, self.max_len, self.dtype)
         kw = {}
@@ -150,10 +259,28 @@ class Engine:
         return [i for i, r in enumerate(self.slots) if r is None]
 
     def admit(self, req: Request) -> bool:
+        """Admit into a free slot.  Unified path: pure bookkeeping — the
+        prompt becomes the slot's pending queue and the slot's cache length
+        is zeroed; its tokens flow through subsequent unified steps.  Legacy
+        path: the old blocking bucket-padded prefill."""
+        self.validate(req)
         free = self.free_slots()
         if not free:
             return False
         slot = free[0]
+        if self.legacy:
+            return self._admit_legacy(req, slot)
+        self.slots[slot] = req
+        self._prompt_pos[slot] = 0
+        self._last_tok[slot] = 0
+        self._admit_seq[slot] = self._seq
+        self._seq += 1
+        self.cache = with_lengths(
+            self.cache, self.cache["length"].at[slot].set(0))
+        req.t_admitted = time.perf_counter()
+        return True
+
+    def _admit_legacy(self, req: Request, slot: int) -> bool:
         s = len(req.prompt)
         bucket = _bucket(s)
         if bucket not in self._prefill_cache:
@@ -171,8 +298,91 @@ class Engine:
         self.slots[slot] = req
         return True
 
-    def step(self) -> list:
-        """One decode iteration for all active slots.  Returns finished."""
+    # -- token-budget planning (Sarathi-style, decode-first) -------------
+    def plan_q_lens(self, token_budget: Optional[int] = None) -> np.ndarray:
+        """Per-slot token counts for the next unified step.
+
+        Decode slots always get their 1 token (they are never starved by
+        prefill work); the remaining budget — default ``max_batch * chunk``
+        — is filled with prefill chunks in admission (FIFO) order, each
+        capped at ``chunk``.
+        """
+        budget = int(token_budget) if token_budget else \
+            self.max_batch * self.chunk
+        q = np.zeros((self.max_batch,), np.int32)
+        prefilling = []
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            if self._prompt_pos[i] < len(r.prompt):
+                prefilling.append(i)
+            elif not r.done:
+                q[i] = 1
+        budget -= int(q.sum())
+        for i in sorted(prefilling, key=lambda j: self._admit_seq[j]):
+            if budget <= 0:
+                break
+            n = min(self.chunk, len(self.slots[i].prompt)
+                    - self._prompt_pos[i], budget)
+            q[i] = n
+            budget -= n
+        return q
+
+    # -- stepping --------------------------------------------------------
+    def step(self, token_budget: Optional[int] = None) -> list:
+        """One engine iteration.  Returns finished requests.
+
+        Unified: one mixed token-budget step over all slots.  Legacy: one
+        decode step for all active (fully prefilled) slots."""
+        if self.legacy:
+            return self._step_legacy()
+        return self.unified_step(self.plan_q_lens(token_budget))
+
+    def unified_step(self, q_lens) -> list:
+        """Run the jitted unified step with an explicit per-slot plan."""
+        q_lens = np.asarray(q_lens, np.int32)
+        if not q_lens.any():
+            return []
+        toks = np.zeros((self.max_batch, self.chunk), np.int32)
+        for i, r in enumerate(self.slots):
+            n = int(q_lens[i])
+            if r is None or n == 0:
+                continue
+            pos = self._prompt_pos[i]
+            if pos < len(r.prompt):
+                toks[i, :n] = r.prompt[pos:pos + n]
+            else:
+                toks[i, 0] = self._last_tok[i]
+        self.key, sub = jax.random.split(self.key)
+        nxt, self.last_logits, self.step_logits, self.cache = self._unified(
+            self.params, jnp.asarray(toks), jnp.asarray(q_lens),
+            self.cache, sub)
+        # one (B,) host read per step, for request bookkeeping + the next
+        # step's token buffer (which must merge host-side prompt chunks
+        # anyway — the (B, chunk) int32 upload is noise next to the model)
+        nxt_host = np.asarray(nxt)
+        now = time.perf_counter()
+        finished = []
+        for i, r in enumerate(self.slots):
+            n = int(q_lens[i])
+            if r is None or n == 0:
+                continue
+            pos = self._prompt_pos[i]
+            if pos < len(r.prompt):                    # prefill chunk
+                self._prompt_pos[i] = pos + n
+                if self._prompt_pos[i] < len(r.prompt):
+                    continue                           # still prefilling
+                r.t_first_token = now                  # prompt done: TTFT
+            tok = int(nxt_host[i])
+            r.out_tokens.append(tok)
+            self._last_tok[i] = tok
+            r.t_done = now
+            if r.done:
+                finished.append(r)
+                self.slots[i] = None
+        return finished
+
+    def _step_legacy(self) -> list:
         active = jnp.asarray([r is not None and not r.done
                               for r in self.slots])
         if not bool(active.any()):
@@ -201,4 +411,5 @@ class Engine:
         return sum(r is not None for r in self.slots)
 
 
-__all__ = ["Engine", "Request"]
+__all__ = ["Engine", "Request", "PromptTooLongError", "unified_supported",
+           "MAX_BUCKET"]

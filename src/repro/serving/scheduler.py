@@ -1,10 +1,26 @@
-"""Request scheduler: FIFO admission + iteration-level continuous batching.
+"""Token-budget request scheduler: FIFO admission + Sarathi-style mixed
+continuous batching.
 
 Implements the serving-side of the paper's §III-B4 latency model: requests
 arrive stochastically (arrival_rate), queue (the W_q term), are admitted into
 engine slots, and per-request TTFT / ITL / throughput are measured — the same
 indicators Eqs. 9-11 estimate theoretically.  ``summarize`` reports both so
 benchmarks can compare measured vs modeled.
+
+Each iteration of ``run`` admits due arrivals into free slots (admission is
+pure bookkeeping on the unified engine — no blocking prefill) and then runs
+ONE engine step under a token budget (default ``engine.max_batch *
+engine.chunk`` tokens): every decoding slot contributes its 1 token first,
+and the remaining budget is filled with prefill chunks in admission order.
+Long prompts therefore stream through in chunks co-scheduled WITH the
+decode traffic instead of stalling it — the TTFT/ITL trade the paper's
+headline metrics measure.  A legacy engine (``legacy=True``) gets the old
+loop: blocking prefill inside admission + decode-only steps.
+
+``run(max_steps=...)`` no longer drops in-flight work silently: requests
+still queued or mid-generation at exit are counted in
+``ServeMetrics.n_incomplete``, and ``metrics()`` is well-defined with zero
+finished requests.
 """
 
 from __future__ import annotations
@@ -29,25 +45,33 @@ class ServeMetrics:
     throughput_tok_s: float      # total tokens (in+out) / wall time
     queue_wait_mean: float
     wall_time: float
+    n_incomplete: int = 0        # admitted-or-queued but unfinished at exit
 
     def row(self) -> str:
-        return (f"n={self.n_requests} ttft={self.ttft_mean*1e3:.1f}ms "
-                f"(p99 {self.ttft_p99*1e3:.1f}) itl={self.itl_mean*1e3:.2f}ms "
-                f"(p99 {self.itl_p99*1e3:.2f}) thr={self.throughput_tok_s:.1f}tok/s "
-                f"wq={self.queue_wait_mean*1e3:.1f}ms")
+        r = (f"n={self.n_requests} ttft={self.ttft_mean*1e3:.1f}ms "
+             f"(p99 {self.ttft_p99*1e3:.1f}) itl={self.itl_mean*1e3:.2f}ms "
+             f"(p99 {self.itl_p99*1e3:.2f}) thr={self.throughput_tok_s:.1f}tok/s "
+             f"wq={self.queue_wait_mean*1e3:.1f}ms")
+        if self.n_incomplete:
+            r += f" INCOMPLETE={self.n_incomplete}"
+        return r
 
 
 class Scheduler:
-    def __init__(self, engine: Engine):
+    def __init__(self, engine: Engine, token_budget: Optional[int] = None):
         self.engine = engine
+        self.token_budget = token_budget   # None -> engine default (B*chunk)
         self.waiting: deque[Request] = deque()
         self.finished: list[Request] = []
+        self.wall = 0.0
+        self.n_incomplete = 0
 
     def submit(self, req: Request):
+        self.engine.validate(req)          # raises PromptTooLongError early
         self.waiting.append(req)
 
     def run(self, *, max_steps: int = 100000) -> list:
-        """Drain the queue: admit when slots free, decode-step otherwise.
+        """Drain the queue: admit when slots free, step otherwise.
 
         Request ``arrival`` fields are *relative* offsets (seconds from run
         start) — an open-loop Poisson workload replays in real time.
@@ -65,11 +89,13 @@ class Scheduler:
                     break
                 self.waiting.popleft()
             if self.engine.n_active:
-                self.finished.extend(self.engine.step())
+                self.finished.extend(self.engine.step(self.token_budget))
             else:                              # idle: wait for next arrival
                 time.sleep(max(0.0, min(self.waiting[0].arrival - now, 1e-3)))
             steps += 1
         self.wall = time.perf_counter() - t0
+        # max_steps can exit with work in flight — surface it, don't drop it
+        self.n_incomplete = self.engine.n_active + len(self.waiting)
         return self.finished
 
     def metrics(self) -> ServeMetrics:
@@ -87,6 +113,7 @@ class Scheduler:
             throughput_tok_s=total_toks / max(self.wall, 1e-9),
             queue_wait_mean=float(waits.mean()) if len(rs) else 0.0,
             wall_time=self.wall,
+            n_incomplete=self.n_incomplete,
         )
 
 
@@ -106,4 +133,32 @@ def synthetic_workload(n_requests: int, *, prompt_len: int = 64,
                       max_new_tokens=max_new_tokens, arrival=t)
 
 
-__all__ = ["Scheduler", "ServeMetrics", "synthetic_workload"]
+def mixed_workload(n_short: int = 8, *, short_len: int = 12,
+                   n_long: int = 2, long_len: int = 96,
+                   max_new_tokens: int = 8, vocab: int = 256,
+                   arrival_rate: float = 16.0, seed: int = 0
+                   ) -> Iterable[Request]:
+    """Short decode-heavy stream with long prompts landing mid-decode — the
+    workload where blocking prefill spikes every active slot's ITL and
+    queued TTFTs, and the unified mixed step should not."""
+    rng = np.random.default_rng(seed)
+    reqs, t = [], 0.0
+    for rid in range(n_short):
+        t += rng.exponential(1.0 / arrival_rate)
+        s = max(4, int(rng.integers(short_len // 2, short_len + 1)))
+        reqs.append(Request(
+            rid=rid, prompt=rng.integers(0, vocab, size=s).astype(np.int32),
+            max_new_tokens=max_new_tokens, arrival=t))
+    # long prompts arrive in the thick of the short stream
+    mid = reqs[n_short // 3].arrival if reqs else 0.0
+    for j in range(n_long):
+        reqs.append(Request(
+            rid=n_short + j,
+            prompt=rng.integers(0, vocab, size=long_len).astype(np.int32),
+            max_new_tokens=max_new_tokens,
+            arrival=mid + 1e-3 * j))
+    return sorted(reqs, key=lambda r: r.arrival)
+
+
+__all__ = ["Scheduler", "ServeMetrics", "synthetic_workload",
+           "mixed_workload"]

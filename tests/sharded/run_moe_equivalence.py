@@ -47,6 +47,26 @@ def main():
                 print(f"{mode:8s} {mesh_name:9s} {strat:9s} {algo:8s} "
                       f"err={err:.2e}")
                 assert err < 1e-4, (mode, mesh_name, strat, algo, err)
+
+    # Mixed-batch safety under shard_map (the unified serving step's (B,
+    # chunk) buffers): dropless rows must be invariant to extra pad slots
+    # riding in the same batch — count-independence must survive the EP
+    # counts A2A / ragged exchange / closed-form regroup, fused and unfused.
+    x_mixed = x[:2, :4]                                     # (2, 4, 64)
+    garbage = jax.random.normal(jax.random.PRNGKey(9), (2, 4, 64),
+                                jnp.float32) * 3.0
+    x_padded = jnp.concatenate([x_mixed, garbage], axis=0)  # (4, 4, 64)
+    for strat, algo in [("mixserve", "fused"), ("mixserve", "unfused"),
+                        ("dp_ep", "unfused")]:
+        plan = make_plan(strat, meshes["2x2"], comm_algo=algo,
+                         dispatch="dropless")
+        fn = jax.jit(lambda p, xx, _plan=plan:
+                     M.moe_block(p, xx, cfg, _plan)[0])
+        real = fn(params, x_mixed)
+        padded = fn(params, x_padded)[:2]
+        err = float(jnp.max(jnp.abs(padded - real)))
+        print(f"mixed-batch dropless {strat:9s} {algo:8s} err={err:.2e}")
+        assert err < 1e-5, ("mixed", strat, algo, err)
     print("MOE_EQUIVALENCE_OK")
 
 

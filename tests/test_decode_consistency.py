@@ -103,8 +103,10 @@ def test_decode_with_flash_decode_kernel_matches_jnp(arch):
 
 def test_engine_decode_with_flash_decode_kernel():
     """Continuous-batching engine with flash_decode enabled generates the
-    exact same tokens as the jnp decode path, and the jitted decode step
-    contains the kernel."""
+    exact same tokens as the jnp decode path, and the jitted step contains
+    the kernel.  chunk=1 makes the unified program decode-shaped (sq == 1),
+    which is the flash_decode specialization — prefill then streams one
+    token per iteration through the same program."""
     import numpy as np
 
     from repro.kernels import ops
@@ -118,7 +120,7 @@ def test_engine_decode_with_flash_decode_kernel():
 
     def run_collect(policy):
         eng = Engine(cfg, params, max_batch=2, max_len=64,
-                     kernel_policy=policy)
+                     kernel_policy=policy, chunk=1)
         reqs = [Request(rid=i, prompt=p, max_new_tokens=6)
                 for i, p in enumerate(prompts)]
         for r in reqs:

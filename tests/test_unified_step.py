@@ -1,0 +1,214 @@
+"""Unified mixed prefill-decode step: numerics, scheduling, and guards.
+
+The correctness contract of the token-budget engine:
+  1. a decode-only unified step produces the same logits as the old
+     dedicated decode program (same math, per-slot masks);
+  2. a prompt streamed through the engine in ragged chunks produces the
+     one-shot-prefill logits per slot (the test_chunked_prefill oracle
+     pattern, via the ENGINE's jitted program);
+  3. a slot's generation is unperturbed by a neighbour prefilling a long
+     prompt in the same (B, chunk) buffer — the mixed-batch property that
+     dropless MoE dispatch guarantees at the MoE level and per-slot masks
+     guarantee at the attention level;
+  4. every admitted request finishes under a seeded Poisson workload
+     (no starvation), and max_steps exits report the stragglers.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import model as M
+from repro.serving.engine import Engine, PromptTooLongError, Request
+from repro.serving.scheduler import Scheduler, mixed_workload, \
+    synthetic_workload
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = C.get_reduced("smollm-360m")
+    params = M.init_params(KEY, cfg, jnp.float32)
+    return cfg, params
+
+
+def _drive_prefill(eng, req, *, budget=None):
+    """Admit and run unified steps until the prompt is consumed, collecting
+    the per-step (B, chunk, V) logits when the engine keeps them
+    (``debug_logits=True``)."""
+    assert eng.admit(req)
+    step_logits = []
+    while eng._prompt_pos[0] < len(req.prompt):
+        q = eng.plan_q_lens(budget)
+        eng.unified_step(q)
+        if eng.debug_logits:
+            step_logits.append((np.asarray(q), np.asarray(eng.step_logits)))
+    return step_logits
+
+
+def test_unified_decode_only_matches_decode_program(smollm):
+    """After prefill, pure-decode unified steps == the legacy decode
+    program's logits, step by step (same slots, same cache state)."""
+    cfg, params = smollm
+    prompt = np.asarray([3, 1, 4, 1, 5, 9, 2, 6], np.int32)
+
+    legacy = Engine(cfg, params, max_batch=2, max_len=64, legacy=True)
+    r_l = Request(rid=0, prompt=prompt, max_new_tokens=6)
+    legacy.admit(r_l)          # blocking prefill samples the first token
+
+    uni = Engine(cfg, params, max_batch=2, max_len=64, chunk=8)
+    r_u = Request(rid=0, prompt=prompt, max_new_tokens=6)
+    _drive_prefill(uni, r_u)   # first token sampled from the last chunk
+    assert r_u.out_tokens[:1] == r_l.out_tokens[:1]
+
+    while uni.n_active:
+        legacy.step()
+        q = uni.plan_q_lens()
+        assert q.tolist() == [1, 0]       # decode-only iterations from here
+        uni.unified_step(q)
+    assert r_u.out_tokens == r_l.out_tokens
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "phi3.5-moe-42b",
+                                  "minicpm3-4b"])
+def test_engine_chunked_prefill_matches_oneshot_logits(arch):
+    """Prompt streamed through the ENGINE in ragged chunks reproduces the
+    one-shot prefill logits row-for-row (GQA, MoE-dropless, MLA)."""
+    cfg = C.get_reduced(arch)
+    params = M.init_params(KEY, cfg, jnp.float32)
+    prompt = np.asarray(jax.random.randint(KEY, (11,), 0, cfg.vocab_size),
+                        np.int32)
+    one = M.forward(params, cfg, tokens=jnp.asarray(prompt)[None],
+                    cache=M.init_cache(cfg, 1, 64, jnp.float32))
+
+    eng = Engine(cfg, params, max_batch=2, max_len=64, chunk=4,
+                 debug_logits=True)
+    steps = _drive_prefill(eng, Request(rid=0, prompt=prompt,
+                                        max_new_tokens=4))
+    got = np.concatenate([logits[0, :q[0]] for q, logits in steps], axis=0)
+    err = float(np.max(np.abs(got - np.asarray(one.logits[0]))))
+    assert err < 2e-4, (arch, err)
+    # and the first sampled token is the oracle's argmax
+    assert eng._last_tok[0] == int(jnp.argmax(one.logits[0, -1]))
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "phi3.5-moe-42b"])
+def test_decode_unperturbed_by_neighbour_prefill(arch):
+    """THE mixed-batch property: slot 0's decode logits are identical
+    whether slot 1 is idle or prefilling a long prompt in the same step."""
+    cfg = C.get_reduced(arch)
+    params = M.init_params(KEY, cfg, jnp.float32)
+    rng = np.random.default_rng(0)
+    p0 = rng.integers(0, cfg.vocab_size, size=9).astype(np.int32)
+    p1 = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+
+    def run(with_neighbour: bool):
+        eng = Engine(cfg, params, max_batch=2, max_len=64, chunk=8)
+        r0 = Request(rid=0, prompt=p0, max_new_tokens=5)
+        _drive_prefill(eng, r0)
+        if with_neighbour:
+            assert eng.admit(Request(rid=1, prompt=p1, max_new_tokens=2))
+        logits = []
+        while not r0.done:
+            eng.unified_step(eng.plan_q_lens())
+            logits.append(np.asarray(eng.last_logits)[0])
+        return r0.out_tokens, np.stack(logits)
+
+    toks_alone, log_alone = run(False)
+    toks_mixed, log_mixed = run(True)
+    assert toks_mixed == toks_alone
+    err = float(np.max(np.abs(log_mixed - log_alone)))
+    # identical per-slot math; MoE dropless dispatch is count-independent
+    assert err < 2e-5, (arch, err)
+
+
+def test_no_starvation_under_poisson_load(smollm):
+    """Every admitted request finishes: long prompts chunk through without
+    starving decodes, short ones aren't starved by the long ones."""
+    cfg, params = smollm
+    eng = Engine(cfg, params, max_batch=2, max_len=96, chunk=8)
+    sched = Scheduler(eng)
+    reqs = list(mixed_workload(6, short_len=10, n_long=2, long_len=48,
+                               max_new_tokens=5, vocab=cfg.vocab_size,
+                               arrival_rate=32.0, seed=3))
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run()
+    assert len(done) == len(reqs)
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in done)
+    m = sched.metrics()
+    assert m.n_incomplete == 0 and m.n_requests == len(reqs)
+    # TTFT is measured at first-token (after chunked prefill), not admission
+    assert all(r.t_first_token >= r.t_admitted for r in done)
+
+
+def test_max_steps_reports_incomplete(smollm):
+    """max_steps exits surface in-flight work instead of dropping it, and
+    metrics() is well-defined with zero finished requests."""
+    cfg, params = smollm
+    eng = Engine(cfg, params, max_batch=2, max_len=96, chunk=4)
+    sched = Scheduler(eng)
+    for r in synthetic_workload(4, prompt_len=16, max_new_tokens=8,
+                                vocab=cfg.vocab_size):
+        sched.submit(r)
+    done = sched.run(max_steps=3)
+    m = sched.metrics()
+    assert m.n_incomplete == 4 - len(done) > 0
+    assert np.isfinite(m.ttft_mean) and np.isfinite(m.throughput_tok_s)
+    assert m.wall_time > 0
+
+
+def test_prompt_overflow_rejected(smollm):
+    """Silent prompt overflow is gone: an impossible request raises at
+    submit/admit on both engine paths."""
+    cfg, params = smollm
+    for legacy in (False, True):
+        eng = Engine(cfg, params, max_batch=1, max_len=32, legacy=legacy)
+        bad = Request(rid=0, prompt=np.zeros(40, np.int32), max_new_tokens=4)
+        with pytest.raises(PromptTooLongError):
+            eng.admit(bad)
+        with pytest.raises(PromptTooLongError):
+            Scheduler(eng).submit(bad)
+        # the boundary case still fits: prompt + max_new - 1 == max_len
+        ok = Request(rid=1, prompt=np.zeros(29, np.int32), max_new_tokens=4)
+        eng.validate(ok)
+
+
+def test_token_budget_caps_prefill(smollm):
+    """A sub-default budget throttles prefill chunks but never decode."""
+    cfg, params = smollm
+    eng = Engine(cfg, params, max_batch=3, max_len=96, chunk=8)
+    # slot 0 decoding, slots 1-2 prefilling
+    r0 = Request(rid=0, prompt=np.arange(6, dtype=np.int32), max_new_tokens=8)
+    _drive_prefill(eng, r0)
+    assert eng.admit(Request(rid=1, prompt=np.arange(20, dtype=np.int32)
+                             % cfg.vocab_size, max_new_tokens=2))
+    assert eng.admit(Request(rid=2, prompt=np.arange(20, dtype=np.int32)
+                             % cfg.vocab_size, max_new_tokens=2))
+    q = eng.plan_q_lens(6)
+    assert q[0] == 1                       # decode-first, always scheduled
+    assert q[1] == 5 and q[2] == 0         # remaining budget, FIFO order
+    q = eng.plan_q_lens()                  # default budget = B * chunk
+    assert q[0] == 1 and q[1] == 8 and q[2] == 8
+
+
+def test_unified_rejected_for_recurrent_family():
+    """ssm/hybrid/frontend archs auto-fall back to the legacy path; forcing
+    unified raises."""
+    cfg = C.get_reduced("rwkv6-1.6b")
+    params = M.init_params(KEY, cfg, jnp.float32)
+    eng = Engine(cfg, params, max_batch=1, max_len=32)
+    assert eng.legacy
+    with pytest.raises(ValueError):
+        Engine(cfg, params, max_batch=1, max_len=32, legacy=False)
+
+
+def test_legacy_env_escape_hatch(smollm, monkeypatch):
+    cfg, params = smollm
+    monkeypatch.setenv("REPRO_LEGACY_ENGINE", "1")
+    assert Engine(cfg, params, max_batch=1, max_len=32).legacy
+    monkeypatch.setenv("REPRO_LEGACY_ENGINE", "0")
+    assert not Engine(cfg, params, max_batch=1, max_len=32).legacy
