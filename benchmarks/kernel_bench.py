@@ -76,6 +76,25 @@ def run() -> list:
     _pair(rows, f"flash_decode/b{b}s{s}", us_ref, us_krn,
           f"{bytes_read / us_ref / 1e3:.1f}GB/s(cpu)")
 
+    # ---- ragged mixed-chunk flash attention (unified-step shape) --------
+    # a token-budget (B, chunk) iteration: one full prefill chunk, one
+    # decode slot, one short chunk, one idle slot — per-slot offsets deep
+    # into the cache so the kernel's frontier tile-skipping has tiles to
+    # skip (the jnp ref walks every (b, s) score column regardless).
+    b, sq, nq, nkv, hd, s = 4, 16, 16, 4, 64, 1024
+    qc = jax.random.normal(key, (b, sq, nq, hd), jnp.float32)
+    kc = jax.random.normal(key, (b, s, nkv, hd), jnp.float32)
+    vc = jax.random.normal(key, (b, s, nkv, hd), jnp.float32)
+    qlen = jnp.asarray([sq, 1, 5, 0], jnp.int32)
+    off = jnp.asarray([256, 900, 64, 0], jnp.int32)
+    kvlen = off + qlen
+    us_ref = time_fn(jax.jit(ops.flash_chunk_ref), qc, kc, vc, off, qlen,
+                     kvlen)
+    us_krn = time_fn(functools.partial(ops.flash_chunk, qc, kc, vc, off,
+                                       qlen, kvlen))
+    _pair(rows, f"flash_chunk/b{b}sq{sq}s{s}", us_ref, us_krn,
+          f"q_lens={[int(x) for x in qlen]} (ragged mixed batch)")
+
     # ---- fused token permute / unpermute+combine ------------------------
     tt, hh, ee, topk, cf = 512, 256, 32, 2, 2.0
     xx = jax.random.normal(key, (tt, hh), jnp.float32)

@@ -5,13 +5,15 @@ continuous-batching TTFT/ITL/throughput for a MoE and a dense arch.  CPU
 walltimes are not TPU predictions — the point is exercising the production
 engine loop end-to-end under load and reporting the same indicators.
 
-Two engine paths are compared head-to-head:
-  unified   the default one-program token-budget mixed step (chunked
-            prefill co-scheduled with decode)
-  legacy    the pre-unified blocking-prefill engine (escape hatch)
-``run_mixed`` is the scenario the unified step exists for: long prompts
-landing mid-decode, where blocking prefill spikes every queued TTFT and
-active ITL.
+Everything runs the unified token-budget mixed prefill/decode engine (the
+pre-unified blocking-prefill engine is no longer publicly reachable — it
+survives only as the internal auto-fallback for ssm/hybrid/frontend
+families).  ``run_mixed`` is the scenario the unified step exists for:
+long prompts landing mid-decode, streamed in chunks co-scheduled with the
+decode traffic.  Both ``run_quick`` and ``run_mixed`` record the kernel
+invocation counters of a ``KernelPolicy.all_on()`` engine and FAIL if the
+jitted mixed step did not trace the ragged ``flash_chunk`` attention
+kernel — no silent jnp fallback on the hot path.
 """
 
 from __future__ import annotations
@@ -31,14 +33,14 @@ def run_quick() -> list:
 
     Forces ``KernelPolicy.all_on()`` through a tiny MoE engine and FAILS
     unless the jitted graphs actually traced every hot-path kernel.  Three
-    runs:
-      unified/dropless + unified/capacity — the ONE-program mixed step must
+    runs of the ONE-program unified mixed step:
+      chunk=4 / dropless + chunk=4 / capacity — the mixed ragged batch must
         trace topk_gate, the expert GEMM (grouped under dropless, batched
-        under capacity) and the fused permute/unpermute pair (attention in
-        the mixed chunk runs the masked chunked-softmax body — flash_decode
-        is a chunk==1 specialization);
-      legacy/dropless — the escape-hatch decode program must still trace
-        flash_decode (regression bisect path).
+        under capacity), the fused permute/unpermute pair AND the ragged
+        ``flash_chunk`` attention kernel;
+      chunk=1 / dropless — a pure-decode-shaped budget degenerates the
+        program to sq == 1, whose attention is the ``flash_decode``
+        specialization of the same kernel family.
     """
     from repro.kernels import ops
     from repro.kernels.policy import KernelPolicy
@@ -46,24 +48,22 @@ def run_quick() -> list:
     cfg = C.get_reduced("phi3.5-moe-42b")
     params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
     rows = []
-    cases = [("unified", "dropless", "grouped_gemm", None),
-             ("unified", "capacity", "moe_gemm", None),
-             ("legacy", "dropless", "grouped_gemm", "flash_decode")]
-    for mode, dispatch, gemm, extra in cases:
+    cases = [("chunk4", "dropless", 4, {"grouped_gemm", "flash_chunk"}),
+             ("chunk4", "capacity", 4, {"moe_gemm", "flash_chunk"}),
+             ("chunk1", "dropless", 1, {"grouped_gemm", "flash_decode"})]
+    for mode, dispatch, chunk, extras in cases:
         ops.reset_counters()
         eng = Engine(cfg, params, max_batch=2, max_len=64,
                      kernel_policy=KernelPolicy.all_on(),
-                     dispatch_mode=dispatch, chunk=4,
-                     legacy=(mode == "legacy"))
+                     dispatch_mode=dispatch, chunk=chunk)
         sched = Scheduler(eng)
         for r in synthetic_workload(3, prompt_len=8, max_new_tokens=4,
                                     vocab=cfg.vocab_size, arrival_rate=16.0):
             sched.submit(r)
         done = sched.run()
         assert len(done) == 3, f"quick serve gate: {len(done)}/3 completed"
-        required = {"topk_gate", gemm, "permute_tokens", "unpermute_tokens"}
-        if extra:
-            required.add(extra)
+        required = {"topk_gate", "permute_tokens", "unpermute_tokens"} \
+            | extras
         missing = required - {k for k, v in ops.counters.items() if v > 0}
         if missing:
             raise RuntimeError(
@@ -77,10 +77,10 @@ def run_quick() -> list:
     return rows
 
 
-def _run_one(cfg, params, reqs, *, legacy: bool, max_batch=4, max_len=192,
-             chunk=16):
+def _run_one(cfg, params, reqs, *, max_batch=4, max_len=192, chunk=16,
+             kernel_policy=None):
     eng = Engine(cfg, params, max_batch=max_batch, max_len=max_len,
-                 chunk=chunk, legacy=legacy)
+                 chunk=chunk, kernel_policy=kernel_policy)
     sched = Scheduler(eng)
     for r in reqs:
         sched.submit(r)
@@ -89,10 +89,16 @@ def _run_one(cfg, params, reqs, *, legacy: bool, max_batch=4, max_len=192,
 
 
 def run_mixed(quick: bool = False) -> list:
-    """Mixed workload: long prompts arriving mid-decode, blocking-prefill vs
-    unified-step.  TTFT p99 is the headline (queued shorts wait behind the
-    long blocking prefill; the unified step streams it in chunks); the
-    decode-only scenario guards ITL against regression."""
+    """Mixed workload: long prompts arriving mid-decode, streamed through
+    the unified step.  TTFT p99 is the headline (the chunked prefill keeps
+    queued shorts from waiting behind a long blocking prefill); the
+    decode-only scenario guards ITL against regression.  A second pass with
+    ``KernelPolicy.all_on()`` records the kernel invocation counters and
+    fails if the mixed step silently fell back to the jnp attention body.
+    """
+    from repro.kernels import ops
+    from repro.kernels.policy import KernelPolicy
+
     rows = []
     arch = "smollm-360m"
     cfg = C.get_reduced(arch)
@@ -109,19 +115,30 @@ def run_mixed(quick: bool = False) -> list:
             arrival_rate=64.0, seed=0),
     }
     for scen, mk in scenarios.items():
-        ms = {}
-        for mode in ("legacy", "unified"):
-            ms[mode] = _run_one(cfg, params, list(mk()),
-                                legacy=(mode == "legacy"),
-                                chunk=8 if quick else 16)
-        for mode, m in ms.items():
-            other = ms["unified" if mode == "legacy" else "legacy"]
-            rows.append((
-                f"serve_mixed/{arch}/{scen}/{mode}/ttft_p99",
-                m.ttft_p99 * 1e6,
-                f"itl_p99={m.itl_p99*1e3:.2f}ms "
-                f"ttft_p99_vs_other={m.ttft_p99/max(other.ttft_p99,1e-9):.2f}x "
-                f"n={m.n_requests} incomplete={m.n_incomplete}"))
+        m = _run_one(cfg, params, list(mk()), chunk=8 if quick else 16)
+        rows.append((
+            f"serve_mixed/{arch}/{scen}/unified/ttft_p99",
+            m.ttft_p99 * 1e6,
+            f"itl_p99={m.itl_p99*1e3:.2f}ms "
+            f"n={m.n_requests} incomplete={m.n_incomplete}"))
+
+    # kernelized gate: the same mixed shape with every Pallas kernel on
+    # (interpret mode on CPU — a small workload, the counters are the point)
+    ops.reset_counters()
+    m = _run_one(cfg, params,
+                 list(mixed_workload(3, short_len=10, n_long=1, long_len=24,
+                                     max_new_tokens=4, vocab=cfg.vocab_size,
+                                     arrival_rate=32.0, seed=1)),
+                 max_batch=2, max_len=96, chunk=8,
+                 kernel_policy=KernelPolicy.all_on())
+    n_flash = ops.counters["flash_chunk"]
+    if n_flash <= 0:
+        raise RuntimeError(
+            "unified mixed step did not trace flash_chunk — silent jnp "
+            f"attention fallback (counters: {dict(ops.counters)})")
+    rows.append((f"serve_mixed/{arch}/kernels/flash_chunk", float(n_flash),
+                 f"traced call sites (all_on engine) "
+                 f"incomplete={m.n_incomplete}"))
     return rows
 
 

@@ -2,7 +2,8 @@
 
   moe_gemm      grouped expert GEMM over (E, C, h) capacity buffers
   topk_gate     fused softmax + top-k router gate
-  flash_decode  single-token decode attention (online softmax over KV tiles)
+  flash_chunk   ragged mixed-chunk flash attention (the unified-step kernel)
+  flash_decode  single-token decode attention (= flash_chunk at sq == 1)
   permute       fused token permute / unpermute+weighted-combine (dispatch)
   autotune      shape-keyed block-size selection shared by the kernels
   policy        KernelPolicy switches (rides on core.partitioner.ShardingPlan)

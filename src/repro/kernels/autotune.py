@@ -55,7 +55,9 @@ _CACHE: dict[KernelKey, dict] = {}
 # Cross-process persistence (measured registrations only)
 # ---------------------------------------------------------------------------
 
-CACHE_VERSION = 1
+# v2: added the "flash_chunk" op key ({bq, bs} block dicts) — v1 files
+# predate the ragged mixed-chunk kernel and are invalidated wholesale.
+CACHE_VERSION = 2
 _persist_loaded = False
 
 
@@ -232,6 +234,18 @@ def _default_blocks(op: str, shape: tuple, dtype: str) -> dict:
         while bs * 2 <= s and bs <= 1024:
             bs *= 2
         return {"bs": min(bs, 2048)}
+    if op == "flash_chunk":
+        # key is q.shape + (S,) = (B, sq, nq, hd, S): the q tile covers the
+        # chunk (it is small — the token-budget chunk width), the S tile
+        # grows with the cache like flash_decode's
+        _b, sq, _nq, _hd, s = shape
+        bq = 8
+        while bq * 2 <= sq and bq <= 64:
+            bq *= 2
+        bs = 128
+        while bs * 2 <= s and bs <= 1024:
+            bs *= 2
+        return {"bq": min(bq, 128), "bs": min(bs, 2048)}
     raise KeyError(op)
 
 
@@ -261,6 +275,8 @@ def _key_shape(op: str, args: tuple) -> tuple:
         return (args[1].shape[0], args[0].shape[-1])
     if op == "flash_decode":              # (q, k, v, lens) -> k.shape
         return tuple(args[1].shape)
+    if op == "flash_chunk":               # (q, k, v, ...) -> q.shape + (S,)
+        return tuple(args[0].shape) + (args[1].shape[1],)
     return tuple(args[0].shape)           # topk_gate: logits.shape
 
 

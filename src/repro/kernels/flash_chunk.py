@@ -1,0 +1,169 @@
+"""Ragged mixed-chunk flash attention (Pallas TPU) — the unified-step kernel.
+
+One kernel family serves every slot shape of the unified mixed
+prefill/decode serving iteration: slot ``i`` contributes ``q_len[i]`` query
+rows (a prefill chunk, one decode token, or 0 = idle) at absolute cache
+offset ``q_offset[i]`` against a cache whose valid prefix is ``kv_len[i]``.
+
+Grid ``(batch, kv_head, q-tile, S-tile)``; the S dimension is the innermost
+sequential axis so the online-softmax state (m, l, acc) lives in VMEM
+scratch across KV tiles (same schedule as the old ``flash_decode``, which
+is now the ``sq == 1`` specialization of this kernel — see
+``flash_decode.py``).  Per-slot ``q_offset``/``q_len``/``kv_len`` arrive
+via scalar prefetch, so raggedness is handled at *tile* granularity:
+
+  * KV tiles past a slot's causal frontier (``q_offset + q_tile_hi``) or
+    past its ``kv_len`` are skipped entirely — a ``pl.when`` gates the MXU
+    work and the k/v BlockSpec index maps clamp to the frontier tile, so
+    the pipeline re-uses the resident block instead of streaming dead
+    cache lines from HBM;
+  * q tiles past ``q_len`` (the ragged tail) and idle slots
+    (``q_len == 0``) do zero compute — their output rows are written as
+    exact zeros (finite; callers never read them);
+  * ``kv_len == 0`` is masked natively: no caller-side length floor needed.
+
+Causal masking inside a live tile is per element: query row ``r`` of slot
+``i`` sees keys ``pos <= q_offset[i] + r`` and ``pos < kv_len[i]``.  GQA
+runs ``g = nq // nkv`` query groups per kv head; MLA-absorbed decode is the
+``nkv == 1`` case with ``hdv != hd`` (latent keys carry the decoupled-rope
+dims, values are the bare latent).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_chunk_kernel(meta_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *,
+                        bq: int, bs: int, g: int, scale: float):
+    bi, qi, j = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+    q_off = meta_ref[0, bi]
+    q_len = meta_ref[1, bi]
+    kv_len = meta_ref[2, bi]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # rows of this q tile that are real queries, and the furthest key any of
+    # them may see (the causal frontier, clipped to the cache's valid prefix)
+    row_hi = jnp.minimum(q_len - qi * bq, bq)
+    kv_limit = jnp.minimum(kv_len, q_off + qi * bq + row_hi)
+
+    @pl.when((row_hi > 0) & (j * bs < kv_limit))
+    def _tile():
+        q = q_ref[0, :, 0].astype(jnp.float32)           # (bq, g, hd)
+        q = q.reshape(bq * g, q.shape[-1]) * scale
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)           # (bs, hdv)
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq*g, bs)
+        row = (qi * bq
+               + jax.lax.broadcasted_iota(jnp.int32, (bq * g, bs), 0) // g)
+        pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (bq * g, bs), 1)
+        mask = (row < q_len) & (pos < kv_len) & (pos <= q_off + row)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))  # (bq*g, 1)
+        # all-masked rows have m_new == NEG_INF and exp(s - m_new) == 1;
+        # re-masking p keeps their l at 0 so the flush emits exact zeros
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(3) - 1)
+    def _flush():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, :, 0] = out.reshape(bq, g, -1).astype(o_ref.dtype)
+
+
+def _kv_tile_index(bi, hi, qi, j, m, *, bq: int, bs: int):
+    """Clamp the KV tile index to the slot's frontier tile.
+
+    Past the frontier the compute is pl.when-gated off anyway; clamping the
+    index map means consecutive grid steps keep asking for the SAME block,
+    which the Pallas pipeline recognizes and does not re-fetch — dead cache
+    lines never leave HBM.
+    """
+    row_hi = jnp.minimum(m[1, bi] - qi * bq, bq)
+    kv_limit = jnp.minimum(m[2, bi], m[0, bi] + qi * bq + row_hi)
+    last = jnp.maximum((kv_limit - 1) // bs, 0)
+    return bi, jnp.minimum(j, last), hi, 0
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bs", "scale", "interpret"))
+def flash_chunk(q, k, v, q_offset, q_len, kv_len, *, bq: int = 128,
+                bs: int = 512, scale: float = None,
+                interpret: bool = False):
+    """q (B, sq, nq, hd); k (B, S, nkv, hd); v (B, S, nkv, hdv);
+    q_offset / q_len / kv_len (B,) int32 -> (B, sq, nq, hdv).
+
+    Slot ``i``'s first ``q_len[i]`` rows are real queries at absolute
+    positions ``q_offset[i] + r``; rows past ``q_len[i]`` come back as
+    exact zeros.  ``scale`` defaults to ``hd ** -0.5``.
+    """
+    b, sq, nq, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    g = nq // nkv
+    if scale is None:
+        scale = hd ** -0.5
+    bq = min(bq, sq)
+    bs = min(bs, skv)
+    pq, ps = (-sq) % bq, (-skv) % bs
+    qg = q.reshape(b, sq, nkv, g, hd)
+    if pq:
+        qg = jnp.pad(qg, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    if ps:
+        k = jnp.pad(k, ((0, 0), (0, ps), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, ps), (0, 0), (0, 0)))
+    sqp, sp = sq + pq, skv + ps
+
+    meta = jnp.stack([
+        jnp.broadcast_to(jnp.atleast_1d(q_offset), (b,)),
+        jnp.broadcast_to(jnp.atleast_1d(q_len), (b,)),
+        jnp.broadcast_to(jnp.atleast_1d(kv_len), (b,)),
+    ]).astype(jnp.int32)                                  # (3, B)
+
+    kv_index = functools.partial(_kv_tile_index, bq=bq, bs=bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nkv, sqp // bq, sp // bs),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, g, hd),
+                         lambda bi, hi, qi, j, m: (bi, qi, hi, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), kv_index),
+            pl.BlockSpec((1, bs, 1, hdv), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, g, hdv),
+                               lambda bi, hi, qi, j, m: (bi, qi, hi, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bq * g, 1), jnp.float32),
+                        pltpu.VMEM((bq * g, 1), jnp.float32),
+                        pltpu.VMEM((bq * g, hdv), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_flash_chunk_kernel, bq=bq, bs=bs, g=g,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sqp, nkv, g, hdv), q.dtype),
+        interpret=interpret,
+    )(meta, qg, k, v)
+    return out[:, :sq].reshape(b, sq, nq, hdv)
+
+
+__all__ = ["flash_chunk"]

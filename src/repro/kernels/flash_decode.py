@@ -1,13 +1,16 @@
-"""Flash-decode: single-token attention over a long KV cache (Pallas TPU).
+"""Flash-decode: single-token attention over a long KV cache.
 
-Grid (batch, kv_head, S-tiles); the S dimension is the innermost sequential
-axis so the online-softmax state (m, l, acc) lives in VMEM scratch across
-tiles.  Per tile: one (g, bs) MXU dot for scores + one (bs, hd) dot for
-values, masked by the per-request cache length.
+Since the ragged mixed-chunk kernel landed, flash-decode is the ``sq == 1``
+specialization of ``kernels.flash_chunk``: the decode invariant
+``q_position == kv_len - 1`` maps onto ``q_offset = lengths - 1``,
+``q_len = min(lengths, 1)``, ``kv_len = lengths`` — with ``bq = 1`` the
+grid degenerates to the classic ``(batch, kv_head, S-tile)`` flash-decode
+schedule (one (g, bs) MXU dot for scores + one (bs, hdv) dot for values per
+tile, online-softmax (m, l, acc) state in VMEM scratch).
 
-This is the TPU-native version of the decode path that
-``models.layers.decode_attention`` runs in pure JAX (and that the dry-run
-shards kv_seq-over-model); the kernel is the per-shard compute body.
+``lengths == 0`` (an idle slot of the unified mixed step) is masked
+natively by the chunk kernel and yields an exact-zero row — callers no
+longer need the old ``max(lengths, 1)`` floor.
 """
 
 from __future__ import annotations
@@ -16,44 +19,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels.flash_chunk import NEG_INF, flash_chunk
 
-
-def _flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *, bs: int, scale: float):
-    j = pl.program_id(2)
-
-    @pl.when(j == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    q = q_ref[0, 0].astype(jnp.float32) * scale          # (g, hd)
-    k = k_ref[0, :, 0].astype(jnp.float32)               # (bs, hd)
-    v = v_ref[0, :, 0].astype(jnp.float32)               # (bs, hdv)
-
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (g, bs)
-    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    valid = pos < len_ref[0]
-    s = jnp.where(valid, s, NEG_INF)
-
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))   # (g, 1)
-    p = jnp.exp(s - m_new)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
-        p, v, preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
-
-    @pl.when(j == pl.num_programs(2) - 1)
-    def _flush():
-        o_ref[0, 0] = (acc_ref[...] /
-                       jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+__all__ = ["flash_decode", "NEG_INF"]
 
 
 @functools.partial(jax.jit, static_argnames=("bs", "scale", "interpret"))
@@ -64,42 +33,12 @@ def flash_decode(q, k, v, lengths, *, bs: int = 512, scale: float = None,
 
     ``hdv`` may differ from ``hd`` (MLA absorbed decode: latent keys carry
     the decoupled-rope dims, values are the bare latent); ``scale`` defaults
-    to hd**-0.5.
+    to hd**-0.5.  A slot with ``lengths == 0`` returns an exact-zero row.
     """
-    b, nq, hd = q.shape
-    skv, nkv = k.shape[1], k.shape[2]
-    hdv = v.shape[-1]
-    g = nq // nkv
-    if scale is None:
-        scale = hd ** -0.5
-    bs = min(bs, skv)
-    ps = (-skv) % bs
-    if ps:
-        k = jnp.pad(k, ((0, 0), (0, ps), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, ps), (0, 0), (0, 0)))
-    sp = skv + ps
-
-    qg = q.reshape(b, nkv, g, hd)
-    # (B, S, nkv, hd) -> (B, nkv, S, hd) handled via BlockSpec index map on
-    # the padded arrays directly (avoids a transpose copy in HBM).
-    out = pl.pallas_call(
-        functools.partial(_flash_decode_kernel, bs=bs, scale=scale),
-        grid=(b, nkv, sp // bs),
-        in_specs=[
-            pl.BlockSpec((1,), lambda bi, hi, ji: (bi,)),
-            pl.BlockSpec((1, 1, g, hd), lambda bi, hi, ji: (bi, hi, 0, 0)),
-            pl.BlockSpec((1, bs, 1, hd), lambda bi, hi, ji: (bi, ji, hi, 0)),
-            pl.BlockSpec((1, bs, 1, hdv), lambda bi, hi, ji: (bi, ji, hi, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, g, hdv),
-                               lambda bi, hi, ji: (bi, hi, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, nkv, g, hdv), q.dtype),
-        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
-                        pltpu.VMEM((g, 1), jnp.float32),
-                        pltpu.VMEM((g, hdv), jnp.float32)],
-        interpret=interpret,
-    )(lengths, qg, k, v)
-    return out.reshape(b, nq, hdv)
-
-
-__all__ = ["flash_decode"]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    out = flash_chunk(q[:, None], k, v,
+                      q_offset=jnp.maximum(lengths - 1, 0),
+                      q_len=jnp.minimum(lengths, 1),
+                      kv_len=lengths,
+                      bq=1, bs=bs, scale=scale, interpret=interpret)
+    return out[:, 0]

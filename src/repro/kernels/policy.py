@@ -2,9 +2,11 @@
 
 The policy rides on the ``ShardingPlan`` (core.partitioner) so it reaches
 every layer the plan already reaches: ``model.forward`` ->
-``layers.decode_attention`` (flash_decode) and ``moe_block`` /
-``_moe_shard_fn`` (topk_gate, moe_gemm, fused permute/unpermute) — on both
-the local and the distributed (shard_map) execution paths.
+``layers.chunked_attention`` (flash_chunk, the ragged mixed-chunk kernel)
+/ ``layers.decode_attention`` (flash_decode, its sq == 1 specialization)
+and ``moe_block`` / ``_moe_shard_fn`` (topk_gate, moe_gemm, fused
+permute/unpermute) — on both the local and the distributed (shard_map)
+execution paths.  Routing table: docs/kernels.md.
 
 ``KernelPolicy.auto()`` enables everything on a TPU backend (kernels lower
 natively) and disables everything elsewhere, where the interpret-mode
@@ -22,19 +24,20 @@ class KernelPolicy:
     """Per-kernel opt-in switches for the serving hot path."""
 
     flash_decode: bool = False    # single-token decode attention
+    flash_chunk: bool = False     # ragged mixed-chunk prefill attention
     topk_gate: bool = False       # fused softmax+top-k router gate
     moe_gemm: bool = False        # grouped expert GEMM on capacity buffers
     fused_permute: bool = False   # fused token permute / unpermute+combine
 
     @property
     def any_enabled(self) -> bool:
-        return (self.flash_decode or self.topk_gate or self.moe_gemm
-                or self.fused_permute)
+        return (self.flash_decode or self.flash_chunk or self.topk_gate
+                or self.moe_gemm or self.fused_permute)
 
     @classmethod
     def all_on(cls) -> "KernelPolicy":
-        return cls(flash_decode=True, topk_gate=True, moe_gemm=True,
-                   fused_permute=True)
+        return cls(flash_decode=True, flash_chunk=True, topk_gate=True,
+                   moe_gemm=True, fused_permute=True)
 
     @classmethod
     def off(cls) -> "KernelPolicy":

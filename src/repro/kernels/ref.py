@@ -57,6 +57,37 @@ def flash_decode_ref(q, k, v, lengths, scale=None):
     return o.reshape(b, nq, v.shape[-1]).astype(q.dtype)
 
 
+def flash_chunk_ref(q, k, v, q_offset, q_len, kv_len, scale=None):
+    """Ragged mixed-chunk attention.  q (B, sq, nq, hd); k (B, S, nkv, hd);
+    v (B, S, nkv, hdv); q_offset/q_len/kv_len (B,).
+
+    Returns (B, sq, nq, hdv).  Row r of slot i is a real query iff
+    ``r < q_len[i]``, sits at absolute position ``q_offset[i] + r`` and sees
+    keys ``pos <= q_offset[i] + r`` with ``pos < kv_len[i]``.  Rows past
+    ``q_len[i]`` (ragged tail / idle slots) and rows with no visible key
+    come back as exact zeros — the kernel's garbage-but-finite contract.
+    """
+    b, sq, nq, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = hd ** -0.5 if scale is None else scale
+    off = jnp.broadcast_to(jnp.atleast_1d(q_offset), (b,)).astype(jnp.int32)
+    qlen = jnp.broadcast_to(jnp.atleast_1d(q_len), (b,)).astype(jnp.int32)
+    kvlen = jnp.broadcast_to(jnp.atleast_1d(kv_len), (b,)).astype(jnp.int32)
+    qg = q.reshape(b, sq, nkv, g, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, k.astype(jnp.float32))
+    row = jnp.arange(sq)[:, None]                        # (sq, 1)
+    pos = jnp.arange(skv)[None]                          # (1, skv)
+    mask = ((row < qlen[:, None, None])
+            & (pos < kvlen[:, None, None])
+            & (pos <= off[:, None, None] + row))          # (b, sq, skv)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, None], p, 0.0)           # dead rows -> 0
+    o = jnp.einsum("bhgqs,bshd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, nq, v.shape[-1]).astype(q.dtype)
+
+
 def permute_tokens_ref(x, src_tok):
     """x (T, h), src_tok (N,) int32 -> (N, h); src_tok[i] < 0 yields a 0 row."""
     rows = jnp.take(x, jnp.maximum(src_tok, 0), axis=0)
@@ -77,4 +108,5 @@ def unpermute_tokens_ref(buf, src_slot, weights):
 
 
 __all__ = ["moe_gemm_ref", "grouped_gemm_ref", "topk_gate_ref",
-           "flash_decode_ref", "permute_tokens_ref", "unpermute_tokens_ref"]
+           "flash_decode_ref", "flash_chunk_ref", "permute_tokens_ref",
+           "unpermute_tokens_ref"]

@@ -9,8 +9,11 @@ throughput next to the analyzer's theoretical estimates (Eqs. 9-11).
 
 The engine is the unified token-budget mixed prefill/decode step
 (docs/serving.md): one jitted program, prefill chunks co-scheduled with
-decode tokens under ``--chunk`` / ``--token-budget``; ``--legacy-engine``
-selects the pre-unified blocking-prefill path for A/B comparison.
+decode tokens under ``--chunk`` / ``--token-budget``.  Families the
+unified step cannot serve (ssm/hybrid/frontend) fall back to the internal
+blocking-prefill path automatically; the public ``--legacy-engine`` /
+``REPRO_LEGACY_ENGINE`` escape hatch was retired after its one-release
+window.
 """
 
 from __future__ import annotations
@@ -25,7 +28,7 @@ from repro.core import analyzer
 from repro.core.topology import CLUSTERS
 from repro.kernels.policy import KernelPolicy
 from repro.models.model import init_params
-from repro.serving.engine import Engine, unified_supported
+from repro.serving.engine import Engine
 from repro.serving.scheduler import Scheduler, synthetic_workload
 
 
@@ -61,10 +64,6 @@ def main():
                     help="total tokens per unified iteration across all "
                          "slots (0 -> max_batch * chunk); decode tokens are "
                          "scheduled first, prefill chunks fill the rest")
-    ap.add_argument("--legacy-engine", action="store_true",
-                    help="escape hatch: the pre-unified engine (blocking "
-                         "bucket-padded prefill in admit + a separate decode "
-                         "program); also via env REPRO_LEGACY_ENGINE=1")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     policy = {"auto": KernelPolicy.auto(), "on": KernelPolicy.all_on(),
@@ -91,11 +90,10 @@ def main():
             (b, e.n_frames, e.d_model), 0.01, jnp.float32)}
     eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
                  embeds_fn=embeds_fn, kernel_policy=policy,
-                 dispatch_mode=args.dispatch, chunk=args.chunk,
-                 legacy=True if args.legacy_engine else None)
-    if eng.legacy and not args.legacy_engine and not unified_supported(cfg):
+                 dispatch_mode=args.dispatch, chunk=args.chunk)
+    if eng.legacy:
         print(f"[engine] {cfg.name}: family {cfg.family!r} falls back to "
-              "the legacy blocking-prefill path")
+              "the internal blocking-prefill path")
     sched = Scheduler(eng, token_budget=args.token_budget or None)
     for r in synthetic_workload(args.requests, prompt_len=args.prompt_len,
                                 max_new_tokens=args.max_new,

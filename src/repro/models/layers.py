@@ -2,8 +2,10 @@
 
 Attention is implemented with a chunked online-softmax scan over KV blocks
 (flash-attention structure in pure JAX) so that prefill at 32k lowers with
-bounded live memory; the Pallas ``flash_decode`` kernel in ``repro.kernels``
-is the TPU-optimized version of the decode path.
+bounded live memory; the Pallas ``flash_chunk`` kernel in ``repro.kernels``
+is the TPU-optimized version of the cache-backed path (ragged mixed
+chunks, uniform chunked prefill, and — as its sq == 1 specialization
+``flash_decode`` — single-token decode); see docs/kernels.md.
 
 All parameter declarations carry logical axes consumed by the partitioner:
   "heads"/"kv_heads"/"ffn"/"vocab" shard over the TP ("model") mesh axis,
@@ -108,7 +110,8 @@ def chunked_attention(q, k, v, *, q_offset=0, kv_len: Optional[jax.Array] = None
                       causal: bool = True, window: int = 0,
                       chunk_size: Optional[int] = None,
                       scale: Optional[float] = None,
-                      k_positions: Optional[jax.Array] = None):
+                      k_positions: Optional[jax.Array] = None,
+                      policy: Optional[KernelPolicy] = None):
     """q: (b, sq, nq, hd); k, v: (b, skv, nkv, hd[v]).  GQA via head groups.
 
     Blocked over the QUERY axis: an outer ``lax.scan`` walks q blocks with no
@@ -125,12 +128,31 @@ def chunked_attention(q, k, v, *, q_offset=0, kv_len: Optional[jax.Array] = None
     masks the cache tail, ``window`` applies a sliding-window mask,
     ``k_positions`` ((skv,) or (b, skv)) gives explicit absolute KV
     positions for ring-buffer caches (negative = invalid).
+
+    ``policy.flash_chunk`` routes the cache-backed causal case through the
+    Pallas ragged mixed-chunk kernel (``repro.kernels.flash_chunk``): the
+    per-slot query count is ``kv_len - q_offset`` (how the unified step and
+    the uniform chunked prefill both encode it), KV tiles beyond a slot's
+    causal frontier are skipped, and ragged-tail rows come back as exact
+    zeros instead of garbage.  Sliding windows and explicit ``k_positions``
+    (ring buffers) and the stateless train path (``kv_len is None``, which
+    needs autodiff through the scan) keep this jnp body.
     """
     b, sq, nq, hd = q.shape
     skv, nkv = k.shape[1], k.shape[2]
     hdv = v.shape[-1]
     groups = nq // nkv
     scale = scale if scale is not None else hd ** -0.5
+
+    if (policy is not None and policy.flash_chunk and causal
+            and window == 0 and k_positions is None and kv_len is not None):
+        from repro.kernels import ops as _kops
+        off = jnp.broadcast_to(
+            jnp.atleast_1d(jnp.asarray(q_offset, jnp.int32)), (b,))
+        lens = jnp.broadcast_to(
+            jnp.atleast_1d(jnp.asarray(kv_len, jnp.int32)), (b,))
+        return _kops.flash_chunk(q, k, v, off, lens - off, lens,
+                                 scale=float(scale))
     qb = chunk_size or _pick_q_block(b, nq, sq, skv)
     qb = min(qb, sq)
     n_blocks = -(-sq // qb)
@@ -246,10 +268,10 @@ def decode_attention(q, k, v, *, kv_len=None, q_positions=None, window: int = 0,
             and window == 0 and k_positions is None and kv_len is not None):
         from repro.kernels import ops as _kops
         lens = jnp.broadcast_to(jnp.atleast_1d(kv_len), (b,)).astype(jnp.int32)
-        # kv_len == 0 only happens for idle slots of a unified mixed step,
-        # whose output rows are discarded; floor to 1 so the kernel's
-        # softmax never normalizes over an empty key set.
-        return _kops.flash_decode(q[:, 0], k, v, jnp.maximum(lens, 1),
+        # kv_len == 0 (idle slots of a unified mixed step) is masked
+        # natively by the kernel — those rows come back as exact zeros and
+        # callers discard them.
+        return _kops.flash_decode(q[:, 0], k, v, lens,
                                   scale=float(scale))[:, None]
     if q_positions is None:
         q_positions = jnp.zeros((sq,), jnp.int32)
@@ -360,7 +382,8 @@ def gqa_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
             else:
                 out = chunked_attention(q, kc, vc, q_offset=idx,
                                         kv_len=idx + q_lens, causal=True,
-                                        window=window, chunk_size=chunk_size)
+                                        window=window, chunk_size=chunk_size,
+                                        policy=plan.kernels)
         elif s == 1:
             out = decode_attention(q, kc, vc, kv_len=idx + s,
                                    q_positions=positions_from(idx, s),
@@ -368,7 +391,8 @@ def gqa_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
         else:  # prefill into the buffer (uniform batch, scalar idx)
             out = chunked_attention(q, kc, vc, q_offset=idx, kv_len=idx + s,
                                     causal=True, window=window,
-                                    chunk_size=chunk_size)
+                                    chunk_size=chunk_size,
+                                    policy=plan.kernels)
         new_kv = (kc, vc)
     out = jnp.einsum("bsnd,ndh->bsh", out, p["wo"])
     return plan.constrain(out, "batch", "seq_resid", "embed"), new_kv
@@ -469,9 +493,12 @@ def mla_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
         q = plan.constrain(q, "batch", "seq", "heads", None)
         k = plan.constrain(k, "batch", "seq", "heads", None)
         v = plan.constrain(v, "batch", "seq", "heads", None)
+        # kv_len is None on the stateless train path, so the policy routing
+        # only fires for cache-backed (chunked / mixed) prefill
         out = chunked_attention(q, k, v, q_offset=off, kv_len=kv_len,
                                 causal=True, chunk_size=chunk_size,
-                                scale=(hd + cfg.rope_head_dim) ** -0.5)
+                                scale=(hd + cfg.rope_head_dim) ** -0.5,
+                                policy=plan.kernels)
     else:
         # absorbed attention: fold w_uk into q, w_uv into the output
         q_lat = jnp.einsum("bsnd,rnd->bsnr", q_nope, p["w_uk"])  # (b,s,nh,r)
@@ -500,7 +527,8 @@ def mla_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
             o_lat = chunked_attention(
                 q_full, k_lat, cc[:, :, None, :], q_offset=off, kv_len=kv_len,
                 causal=True, chunk_size=chunk_size,
-                scale=(hd + cfg.rope_head_dim) ** -0.5)          # (b,s,nh,r)
+                scale=(hd + cfg.rope_head_dim) ** -0.5,
+                policy=plan.kernels)                             # (b,s,nh,r)
         out = jnp.einsum("bsnr,rnd->bsnd", o_lat, p["w_uv"])
     out = jnp.einsum("bsnd,ndh->bsh", out, p["wo"])
     return plan.constrain(out, "batch", "seq_resid", "embed"), new_cache

@@ -24,9 +24,10 @@ mesh axis — the universal scheme that works for MQA (kv=1), GQA (any head
 count) and MLA (headless latent), keeping per-chip cache bytes ~1/d_TP.
 
 The plan's ``KernelPolicy`` (``plan.kernels``) rides through every layer
-call here: single-token decode runs the Pallas ``flash_decode`` kernel and
-the MoE block runs the ``topk_gate``/fused-permute/``moe_gemm`` pipeline
-when enabled (see repro.kernels.policy).
+call here: cache-backed prefill and the unified mixed step run the ragged
+``flash_chunk`` Pallas kernel, single-token decode its ``flash_decode``
+specialization, and the MoE block the ``topk_gate``/fused-permute/
+``moe_gemm`` pipeline when enabled (routing table: docs/kernels.md).
 """
 
 from __future__ import annotations

@@ -22,12 +22,14 @@ is count-independent — pad rows cannot perturb any other slot's logits
 (see docs/serving.md and docs/dispatch.md).
 
 Legacy path — the pre-unified two-program engine (bucket-padded blocking
-prefill in ``admit`` + a separate decode program), kept one release behind
-``legacy=True`` / env ``REPRO_LEGACY_ENGINE=1`` so equivalence tests can
-compare both and regressions bisect cleanly.  Families whose caches are not
-slot-indexed attention KV (ssm, hybrid ring buffers, whisper enc-dec) and
-stub-frontend models fall back to it automatically: their recurrent/ring
-state advances per row and cannot mask a ragged tail.
+prefill in ``admit`` + a separate decode program).  The public escape
+hatch (``legacy=True`` / ``--legacy-engine`` / env
+``REPRO_LEGACY_ENGINE=1``) was retired after its one-release window (PR 3
+-> PR 4); the path now exists ONLY for families the unified step cannot
+serve — ``unified_supported`` returns False for recurrent state (ssm),
+hybrid ring buffers, whisper enc-dec and stub-frontend models, whose
+per-row state cannot mask a ragged tail — and the engine falls back to it
+automatically for exactly those configs.
 
 This is the "online stage" host of MixServe: the ShardingPlan injected here
 is the one the automatic analyzer selected offline.  ``kernel_policy``
@@ -35,15 +37,15 @@ is the one the automatic analyzer selected offline.  ``kernel_policy``
 backends) rides on the plan into the jitted step — for MoE archs the
 ``topk_gate`` / fused-permute / grouped-GEMM dropless pipeline; with
 ``chunk == 1`` (a pure-decode budget) the attention runs the Pallas
-``flash_decode`` kernel.  ``dispatch_mode`` (default: the plan's "auto" ->
-dropless) selects MoE buffers; serving wants dropless — it is what makes
-the mixed batch safe.
+``flash_decode`` kernel, and with ``chunk > 1`` the mixed ragged batch
+runs the Pallas ``flash_chunk`` kernel (see docs/kernels.md).
+``dispatch_mode`` (default: the plan's "auto" -> dropless) selects MoE
+buffers; serving wants dropless — it is what makes the mixed batch safe.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import os
 import time
 from typing import Callable, Optional
 
@@ -119,8 +121,7 @@ class Engine:
                  embeds_fn: Optional[Callable] = None,
                  kernel_policy: Optional[KernelPolicy] = None,
                  dispatch_mode: Optional[str] = None,
-                 chunk: int = 16, legacy: Optional[bool] = None,
-                 debug_logits: bool = False):
+                 chunk: int = 16, debug_logits: bool = False):
         if kernel_policy is None:
             # respect a policy the caller already put on the plan (make_plan
             # kernels=...); only a plan with everything off falls to auto()
@@ -143,15 +144,10 @@ class Engine:
         # slot's last valid row (forward last_only)
         self.debug_logits = bool(debug_logits)
 
-        if legacy is None:
-            env = os.environ.get("REPRO_LEGACY_ENGINE", "")
-            legacy = env not in ("", "0") or not unified_supported(cfg)
-        elif not legacy and not unified_supported(cfg):
-            raise ValueError(
-                f"{cfg.name}: family {cfg.family!r} / frontend "
-                f"{cfg.frontend!r} is not supported by the unified step — "
-                "use legacy=True (or legacy=None for auto-fallback)")
-        self.legacy = bool(legacy)
+        # the blocking-prefill path survives ONLY as the automatic fallback
+        # for families the unified step cannot serve (ssm/hybrid/frontend);
+        # the public legacy escape hatch was retired after PR 3's window
+        self.legacy = not unified_supported(cfg)
 
         self.cache = with_lengths(
             init_cache(cfg, max_batch, max_len, dtype),

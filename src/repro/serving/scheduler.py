@@ -14,8 +14,9 @@ engine.chunk`` tokens): every decoding slot contributes its 1 token first,
 and the remaining budget is filled with prefill chunks in admission order.
 Long prompts therefore stream through in chunks co-scheduled WITH the
 decode traffic instead of stalling it — the TTFT/ITL trade the paper's
-headline metrics measure.  A legacy engine (``legacy=True``) gets the old
-loop: blocking prefill inside admission + decode-only steps.
+headline metrics measure.  Engines on the internal legacy fallback
+(``unified_supported(cfg)`` False: ssm/hybrid/frontend families) get the
+old loop: blocking prefill inside admission + decode-only steps.
 
 ``run(max_steps=...)`` no longer drops in-flight work silently: requests
 still queued or mid-generation at exit are counted in

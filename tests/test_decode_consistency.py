@@ -136,6 +136,32 @@ def test_engine_decode_with_flash_decode_kernel():
     assert kern == base
 
 
+def test_decode_attention_idle_slot_rows_finite():
+    """kv_len == 0 (idle slots of the unified mixed step) through the flash
+    path: no caller-side length floor anymore — the kernel masks len==0
+    natively, idle rows are garbage-but-finite (exact zeros) and discarded,
+    and live slots are untouched by their idle neighbours."""
+    from repro.kernels.policy import KernelPolicy
+    from repro.models.layers import decode_attention
+
+    b, nq, nkv, hd, s = 3, 8, 4, 32, 64
+    q = jax.random.normal(KEY, (b, 1, nq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, hd))
+    lens = jnp.asarray([0, 17, 64], jnp.int32)          # slot 0 is idle
+    pol = KernelPolicy(flash_decode=True)
+    out = decode_attention(q, k, v, kv_len=lens,
+                           q_positions=(jnp.maximum(lens, 1) - 1)[:, None],
+                           policy=pol)
+    assert bool(jnp.isfinite(out).all())
+    assert float(jnp.max(jnp.abs(out[0]))) == 0.0       # discarded row
+    # live slots: identical to the jnp body computed without the idle slot
+    want = decode_attention(q[1:], k[1:], v[1:], kv_len=lens[1:],
+                            q_positions=(lens[1:] - 1)[:, None])
+    err = float(jnp.max(jnp.abs(out[1:] - want)))
+    assert err < 1e-4, err
+
+
 def test_engine_respects_plan_kernel_policy():
     """A policy set on the plan (make_plan kernels=...) must survive Engine
     construction when kernel_policy is omitted — not be clobbered by auto()."""

@@ -80,6 +80,89 @@ def test_flash_decode_matches_model_decode_attention():
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,sq,nq,nkv,hd,hdv,s", [
+    (3, 8, 8, 2, 64, 64, 256),      # GQA, mixed chunk
+    (2, 16, 4, 1, 40, 24, 96),      # MLA-absorbed-like: nkv=1, hdv != hd
+    (4, 1, 15, 5, 16, 16, 77),      # decode shape (sq == 1, ragged heads)
+    (2, 5, 6, 6, 32, 32, 33),       # MHA, nothing tile-aligned
+])
+def test_flash_chunk_sweep(b, sq, nq, nkv, hd, hdv, s, dtype):
+    """Ragged mixed-chunk kernel == the jnp oracle across slot mixes:
+    idle (q_len 0), decode (1), short chunk, full chunk, at random cache
+    offsets — GQA and MLA-absorbed (hdv != hd) head shapes."""
+    rng = np.random.default_rng(b * sq + s)
+    q = jax.random.normal(KEY, (b, sq, nq, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, hdv), dtype)
+    qlen = rng.integers(0, sq + 1, b).astype(np.int32)
+    qlen[0] = 0                                     # always one idle slot
+    off = np.asarray([rng.integers(0, s - ql + 1) for ql in qlen], np.int32)
+    kvlen = off + qlen
+    got = ops.flash_chunk(q, k, v, jnp.asarray(off), jnp.asarray(qlen),
+                          jnp.asarray(kvlen), bq=4, bs=32)
+    want = ops.flash_chunk_ref(q, k, v, jnp.asarray(off), jnp.asarray(qlen),
+                               jnp.asarray(kvlen))
+    assert got.shape == (b, sq, nq, hdv) and got.dtype == dtype
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+    # ragged tails / idle slots are exact zeros, never NaN
+    tail = np.asarray(got, np.float32)[np.arange(sq)[None] >= qlen[:, None]]
+    assert np.all(tail == 0.0)
+
+
+def test_flash_chunk_all_idle_zero_work():
+    """An all-idle batch (every q_len == 0) writes finite exact-zero output
+    — the case the old flash_decode needed a caller-side length floor for."""
+    b, sq, nq, nkv, hd, s = 2, 4, 8, 2, 32, 64
+    q = jax.random.normal(KEY, (b, sq, nq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, hd))
+    zero = jnp.zeros((b,), jnp.int32)
+    got = ops.flash_chunk(q, k, v, zero, zero, zero, bq=4, bs=32)
+    assert float(jnp.max(jnp.abs(got))) == 0.0
+    assert not bool(jnp.isnan(got).any())
+
+
+def test_flash_decode_is_flash_chunk_sq1_specialization():
+    """flash_decode == flash_chunk at sq == 1 with the decode invariant
+    (q_offset = len-1, q_len = 1, kv_len = len), incl. a len == 0 slot."""
+    b, nq, nkv, hd, s = 3, 8, 4, 32, 128
+    q = jax.random.normal(KEY, (b, nq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, hd))
+    lens = jnp.asarray([0, 50, 128], jnp.int32)
+    dec = ops.flash_decode(q, k, v, lens, bs=64)
+    chk = ops.flash_chunk(q[:, None], k, v, jnp.maximum(lens - 1, 0),
+                          jnp.minimum(lens, 1), lens, bq=1, bs=64)[:, 0]
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(chk))
+    # live slots match the decode oracle; the len==0 slot is exact zeros
+    want = ops.flash_decode_ref(q[1:], k[1:], v[1:], lens[1:])
+    np.testing.assert_allclose(np.asarray(dec[1:]), np.asarray(want),
+                               atol=1e-4)
+    assert float(jnp.max(jnp.abs(dec[0]))) == 0.0
+
+
+def test_flash_chunk_matches_chunked_attention_oracle():
+    """Kernel == the model's masked chunked-softmax body over valid rows
+    (the unified step's vector q_offset/kv_len semantics)."""
+    from repro.models.layers import chunked_attention
+    b, sq, nq, nkv, hd, s = 3, 8, 8, 2, 32, 64
+    q = jax.random.normal(KEY, (b, sq, nq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, hd))
+    off = jnp.asarray([0, 13, 40], jnp.int32)
+    qlen = jnp.asarray([8, 3, 0], jnp.int32)
+    jnp_out = chunked_attention(q, k, v, q_offset=off, kv_len=off + qlen,
+                                causal=True)
+    krn_out = ops.flash_chunk(q, k, v, off, qlen, off + qlen, bq=4, bs=32)
+    for i, ql in enumerate([8, 3, 0]):       # jnp tail rows are garbage
+        np.testing.assert_allclose(np.asarray(krn_out[i, :ql]),
+                                   np.asarray(jnp_out[i, :ql]), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("t,h,n,frac", [
     (16, 32, 40, 0.5), (100, 64, 256, 0.9), (7, 48, 7, 1.0),
     (256, 128, 300, 0.0),
@@ -270,6 +353,45 @@ def test_autotune_flash_decode_bs_tracks_kv_len():
     long = autotune.select_blocks("flash_decode", (4, 4096, 8, 64),
                                   jnp.float32)
     assert short["bs"] == 256 and long["bs"] == 2048
+    autotune.clear_cache()
+
+
+def test_autotune_flash_chunk_blocks():
+    """The flash_chunk default: bq covers the (small) chunk, bs tracks the
+    cache length like flash_decode's tile."""
+    autotune.clear_cache()
+    small = autotune.select_blocks("flash_chunk", (4, 8, 16, 64, 256),
+                                   jnp.float32)
+    assert small == {"bq": 8, "bs": 256}
+    long = autotune.select_blocks("flash_chunk", (4, 256, 16, 64, 4096),
+                                  jnp.float32)
+    assert long["bq"] == 128 and long["bs"] == 2048
+    autotune.clear_cache()
+
+
+def test_autotune_flash_chunk_persistent_roundtrip(tmp_path, monkeypatch):
+    """A persisted flash_chunk registration survives reload under the
+    CURRENT cache version, and a stale-version file is invalidated
+    wholesale (the version was bumped for this op's key)."""
+    import json
+
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_cache()
+    shape = (2, 16, 8, 32, 512)
+    autotune.register("flash_chunk", shape, jnp.float32,
+                      {"bq": 16, "bs": 64})
+    assert json.loads(path.read_text())["version"] == autotune.CACHE_VERSION
+    autotune.clear_cache()              # "new process"
+    assert autotune.select_blocks("flash_chunk", shape,
+                                  jnp.float32) == {"bq": 16, "bs": 64}
+    # rewrite the same entry under the PREVIOUS schema version: ignored
+    payload = json.loads(path.read_text())
+    payload["version"] = autotune.CACHE_VERSION - 1
+    path.write_text(json.dumps(payload))
+    autotune.clear_cache()
+    got = autotune.select_blocks("flash_chunk", shape, jnp.float32)
+    assert got != {"bq": 16, "bs": 64}      # analytic default instead
     autotune.clear_cache()
 
 

@@ -50,26 +50,35 @@ def _drive_prefill(eng, req, *, budget=None):
 
 
 def test_unified_decode_only_matches_decode_program(smollm):
-    """After prefill, pure-decode unified steps == the legacy decode
-    program's logits, step by step (same slots, same cache state)."""
+    """After prefill, pure-decode unified steps == the dedicated
+    single-token decode program's tokens, step by step (the math the
+    retired legacy engine ran — now oracled directly via ``forward``)."""
     cfg, params = smollm
     prompt = np.asarray([3, 1, 4, 1, 5, 9, 2, 6], np.int32)
-
-    legacy = Engine(cfg, params, max_batch=2, max_len=64, legacy=True)
-    r_l = Request(rid=0, prompt=prompt, max_new_tokens=6)
-    legacy.admit(r_l)          # blocking prefill samples the first token
 
     uni = Engine(cfg, params, max_batch=2, max_len=64, chunk=8)
     r_u = Request(rid=0, prompt=prompt, max_new_tokens=6)
     _drive_prefill(uni, r_u)   # first token sampled from the last chunk
-    assert r_u.out_tokens[:1] == r_l.out_tokens[:1]
+
+    # oracle: the old decode program — one-token forward per step on a
+    # snapshot of the post-prefill cache (slot 1 is empty; only slot 0's
+    # logits are read, and per-slot cache rows cannot interact)
+    cache = jax.tree.map(lambda x: x, uni.cache)
+    tok = r_u.out_tokens[0]
+    oracle = [tok]
+    for _ in range(5):
+        out = M.forward(params, cfg,
+                        tokens=jnp.asarray([[tok], [0]], jnp.int32),
+                        cache=cache)
+        cache = out.cache
+        tok = int(jnp.argmax(out.logits[0, 0]))
+        oracle.append(tok)
 
     while uni.n_active:
-        legacy.step()
         q = uni.plan_q_lens()
         assert q.tolist() == [1, 0]       # decode-only iterations from here
         uni.unified_step(q)
-    assert r_u.out_tokens == r_l.out_tokens
+    assert r_u.out_tokens == oracle
 
 
 @pytest.mark.parametrize("arch", ["smollm-360m", "phi3.5-moe-42b",
@@ -163,18 +172,31 @@ def test_max_steps_reports_incomplete(smollm):
 
 def test_prompt_overflow_rejected(smollm):
     """Silent prompt overflow is gone: an impossible request raises at
-    submit/admit on both engine paths."""
+    submit/admit."""
     cfg, params = smollm
-    for legacy in (False, True):
-        eng = Engine(cfg, params, max_batch=1, max_len=32, legacy=legacy)
-        bad = Request(rid=0, prompt=np.zeros(40, np.int32), max_new_tokens=4)
-        with pytest.raises(PromptTooLongError):
-            eng.admit(bad)
-        with pytest.raises(PromptTooLongError):
-            Scheduler(eng).submit(bad)
-        # the boundary case still fits: prompt + max_new - 1 == max_len
-        ok = Request(rid=1, prompt=np.zeros(29, np.int32), max_new_tokens=4)
-        eng.validate(ok)
+    eng = Engine(cfg, params, max_batch=1, max_len=32)
+    bad = Request(rid=0, prompt=np.zeros(40, np.int32), max_new_tokens=4)
+    with pytest.raises(PromptTooLongError):
+        eng.admit(bad)
+    with pytest.raises(PromptTooLongError):
+        Scheduler(eng).submit(bad)
+    # the boundary case still fits: prompt + max_new - 1 == max_len
+    ok = Request(rid=1, prompt=np.zeros(29, np.int32), max_new_tokens=4)
+    eng.validate(ok)
+
+
+def test_prompt_overflow_rejected_on_legacy_fallback():
+    """The internal blocking-prefill fallback (recurrent families) validates
+    the BUCKET, not just the prompt."""
+    cfg = C.get_reduced("rwkv6-1.6b")
+    params = M.init_params(KEY, cfg, jnp.float32)
+    eng = Engine(cfg, params, max_batch=1, max_len=24)
+    assert eng.legacy       # auto-fallback: ssm family
+    # a 20-token prompt + 2 new tokens fits 24 cache positions, but the
+    # blocking prefill writes the whole 32-wide bucket — rejected
+    bad = Request(rid=0, prompt=np.zeros(20, np.int32), max_new_tokens=2)
+    with pytest.raises(PromptTooLongError):
+        eng.admit(bad)
 
 
 def test_token_budget_caps_prefill(smollm):
@@ -195,20 +217,51 @@ def test_token_budget_caps_prefill(smollm):
     assert q[0] == 1 and q[1] == 8 and q[2] == 8
 
 
-def test_unified_rejected_for_recurrent_family():
-    """ssm/hybrid/frontend archs auto-fall back to the legacy path; forcing
-    unified raises."""
+def test_unified_auto_fallback_for_recurrent_family(smollm):
+    """ssm/hybrid/frontend archs auto-fall back to the internal legacy
+    path; the public escape hatch is retired — the ``legacy=`` kwarg is
+    gone and ``REPRO_LEGACY_ENGINE`` is ignored."""
     cfg = C.get_reduced("rwkv6-1.6b")
     params = M.init_params(KEY, cfg, jnp.float32)
-    eng = Engine(cfg, params, max_batch=1, max_len=32)
-    assert eng.legacy
-    with pytest.raises(ValueError):
-        Engine(cfg, params, max_batch=1, max_len=32, legacy=False)
+    assert Engine(cfg, params, max_batch=1, max_len=32).legacy
+    cfg_s, params_s = smollm
+    with pytest.raises(TypeError):
+        Engine(cfg_s, params_s, max_batch=1, max_len=32, legacy=True)
 
 
-def test_legacy_env_escape_hatch(smollm, monkeypatch):
+def test_legacy_env_escape_hatch_retired(smollm, monkeypatch):
     cfg, params = smollm
     monkeypatch.setenv("REPRO_LEGACY_ENGINE", "1")
-    assert Engine(cfg, params, max_batch=1, max_len=32).legacy
-    monkeypatch.setenv("REPRO_LEGACY_ENGINE", "0")
     assert not Engine(cfg, params, max_batch=1, max_len=32).legacy
+
+
+def test_engine_chunked_prefill_flash_chunk_kernel(smollm):
+    """The unified engine with KernelPolicy.all_on() runs the ragged
+    flash_chunk kernel (traced, counter > 0) and still reproduces the
+    one-shot prefill logits and the jnp engine's tokens."""
+    from repro.kernels import ops
+    from repro.kernels.policy import KernelPolicy
+
+    cfg, params = smollm
+    prompt = np.asarray(jax.random.randint(KEY, (11,), 0, cfg.vocab_size),
+                        np.int32)
+    one = M.forward(params, cfg, tokens=jnp.asarray(prompt)[None],
+                    cache=M.init_cache(cfg, 1, 64, jnp.float32))
+
+    def run(policy):
+        eng = Engine(cfg, params, max_batch=2, max_len=64, chunk=4,
+                     kernel_policy=policy, debug_logits=True)
+        req = Request(rid=0, prompt=prompt, max_new_tokens=3)
+        steps = _drive_prefill(eng, req)
+        while eng.n_active:
+            eng.unified_step(eng.plan_q_lens())
+        return req.out_tokens, steps
+
+    base_toks, _ = run(KernelPolicy.off())
+    ops.reset_counters()
+    kern_toks, steps = run(KernelPolicy.all_on())
+    assert ops.counters["flash_chunk"] > 0, dict(ops.counters)
+    assert kern_toks == base_toks
+    got = np.concatenate([logits[0, :q[0]] for q, logits in steps], axis=0)
+    err = float(np.max(np.abs(got - np.asarray(one.logits[0]))))
+    assert err < 2e-4, err
