@@ -43,10 +43,14 @@ QUICK = {
 }
 
 
-def _emit_json(name: str, rows: list) -> None:
+def _emit_json(name: str, rows: list, meta: dict | None = None) -> None:
     payload = {"suite": name,
                "rows": [{"name": r, "value_us": v, "derived": d}
                         for r, v, d in rows]}
+    if meta:
+        # e.g. the ServeSpec resolver's provenance report — which
+        # auto-chosen knobs produced these numbers (serve_micro.run_mixed)
+        payload["meta"] = meta
     with open(f"BENCH_{name}.json", "w") as f:
         json.dump(payload, f, indent=1)
 
@@ -62,10 +66,12 @@ def main() -> int:
     for name, runner in runners.items():
         t0 = time.time()
         try:
-            rows = list(runner())
+            out = runner()
+            rows, meta = ((out["rows"], out.get("meta"))
+                          if isinstance(out, dict) else (list(out), None))
             for row, v, derived in rows:
                 print(f"{row},{v:.1f},{derived}")
-            _emit_json(name, rows)
+            _emit_json(name, rows, meta)
         except Exception:
             failed.append(name)
             traceback.print_exc()

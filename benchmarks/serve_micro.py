@@ -5,6 +5,12 @@ continuous-batching TTFT/ITL/throughput for a MoE and a dense arch.  CPU
 walltimes are not TPU predictions — the point is exercising the production
 engine loop end-to-end under load and reporting the same indicators.
 
+Every engine here is built through the declarative ``ServeSpec`` API
+(docs/api.md) — the benchmark gate therefore exercises the resolver on
+every run, and ``run_mixed`` records the resolver's provenance report in
+the ``BENCH_serve_mixed`` metadata so the perf trajectory says which
+auto-chosen knobs produced each number.
+
 Everything runs the unified token-budget mixed prefill/decode engine (the
 pre-unified blocking-prefill engine is no longer publicly reachable — it
 survives only as the internal auto-fallback for ssm/hybrid/frontend
@@ -23,17 +29,17 @@ import jax.numpy as jnp
 
 import repro.configs as C
 from repro.models.model import init_params
-from repro.serving.engine import Engine
-from repro.serving.scheduler import (Scheduler, mixed_workload,
-                                     synthetic_workload)
+from repro.serving.api import LLM, ServeSpec
+from repro.serving.scheduler import mixed_workload, synthetic_workload
 
 
 def run_quick() -> list:
     """Smoke gate for the kernelized serve path (``benchmarks.run --quick``).
 
-    Forces ``KernelPolicy.all_on()`` through a tiny MoE engine and FAILS
-    unless the jitted graphs actually traced every hot-path kernel.  Three
-    runs of the ONE-program unified mixed step:
+    Builds every engine through ``ServeSpec`` (explicit chunk/dispatch, the
+    rest resolved), forces ``KernelPolicy.all_on()`` through a tiny MoE
+    engine and FAILS unless the jitted graphs actually traced every
+    hot-path kernel.  Three runs of the ONE-program unified mixed step:
       chunk=4 / dropless + chunk=4 / capacity — the mixed ragged batch must
         trace topk_gate, the expert GEMM (grouped under dropless, batched
         under capacity), the fused permute/unpermute pair AND the ragged
@@ -45,7 +51,8 @@ def run_quick() -> list:
     from repro.kernels import ops
     from repro.kernels.policy import KernelPolicy
 
-    cfg = C.get_reduced("phi3.5-moe-42b")
+    arch = "phi3.5-moe-42b"
+    cfg = C.get_reduced(arch)
     params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
     rows = []
     cases = [("chunk4", "dropless", 4, {"grouped_gemm", "flash_chunk"}),
@@ -53,14 +60,15 @@ def run_quick() -> list:
              ("chunk1", "dropless", 1, {"grouped_gemm", "flash_decode"})]
     for mode, dispatch, chunk, extras in cases:
         ops.reset_counters()
-        eng = Engine(cfg, params, max_batch=2, max_len=64,
-                     kernel_policy=KernelPolicy.all_on(),
-                     dispatch_mode=dispatch, chunk=chunk)
-        sched = Scheduler(eng)
-        for r in synthetic_workload(3, prompt_len=8, max_new_tokens=4,
-                                    vocab=cfg.vocab_size, arrival_rate=16.0):
-            sched.submit(r)
-        done = sched.run()
+        resolved = ServeSpec(
+            arch=arch, kernels=KernelPolicy.all_on(), dispatch=dispatch,
+            chunk=chunk, max_batch=2, max_len=64, prompt_len=8,
+            max_new_tokens=4).resolve()
+        llm = LLM.from_spec(resolved, cfg=cfg, params=params)
+        sched = llm.serve(synthetic_workload(
+            3, prompt_len=8, max_new_tokens=4, vocab=cfg.vocab_size,
+            arrival_rate=16.0))
+        done = sched.finished
         assert len(done) == 3, f"quick serve gate: {len(done)}/3 completed"
         required = {"topk_gate", "permute_tokens", "unpermute_tokens"} \
             | extras
@@ -77,24 +85,27 @@ def run_quick() -> list:
     return rows
 
 
-def _run_one(cfg, params, reqs, *, max_batch=4, max_len=192, chunk=16,
-             kernel_policy=None):
-    eng = Engine(cfg, params, max_batch=max_batch, max_len=max_len,
-                 chunk=chunk, kernel_policy=kernel_policy)
-    sched = Scheduler(eng)
-    for r in reqs:
-        sched.submit(r)
-    sched.run()
-    return sched.metrics()
+def _spec_llm(arch, cfg, params, *, max_batch=4, max_len=192, chunk=16,
+              kernel_policy=None, prompt_len=96, max_new_tokens=8):
+    """One engine through the ServeSpec door; returns (llm, resolved)."""
+    spec = ServeSpec(arch=arch, kernels=kernel_policy or "auto",
+                     chunk=chunk, max_batch=max_batch, max_len=max_len,
+                     prompt_len=prompt_len, max_new_tokens=max_new_tokens)
+    resolved = spec.resolve(C.get(arch))
+    return LLM.from_spec(resolved, cfg=cfg, params=params), resolved
 
 
-def run_mixed(quick: bool = False) -> list:
+def run_mixed(quick: bool = False):
     """Mixed workload: long prompts arriving mid-decode, streamed through
     the unified step.  TTFT p99 is the headline (the chunked prefill keeps
     queued shorts from waiting behind a long blocking prefill); the
     decode-only scenario guards ITL against regression.  A second pass with
     ``KernelPolicy.all_on()`` records the kernel invocation counters and
     fails if the mixed step silently fell back to the jnp attention body.
+
+    Returns ``{"rows": ..., "meta": ...}`` — the meta block carries the
+    resolver's provenance report (which knob came from where) into the
+    ``BENCH_serve_mixed.json`` artifact.
     """
     from repro.kernels import ops
     from repro.kernels.policy import KernelPolicy
@@ -114,8 +125,13 @@ def run_mixed(quick: bool = False) -> list:
             max_new_tokens=8 if quick else 16, vocab=cfg.vocab_size,
             arrival_rate=64.0, seed=0),
     }
+    provenance = {}
     for scen, mk in scenarios.items():
-        m = _run_one(cfg, params, list(mk()), chunk=8 if quick else 16)
+        llm, resolved = _spec_llm(arch, cfg, params,
+                                  chunk=8 if quick else 16,
+                                  prompt_len=long_len)
+        provenance[scen] = resolved.as_meta()
+        m = llm.serve(list(mk())).metrics()
         rows.append((
             f"serve_mixed/{arch}/{scen}/unified/ttft_p99",
             m.ttft_p99 * 1e6,
@@ -125,12 +141,13 @@ def run_mixed(quick: bool = False) -> list:
     # kernelized gate: the same mixed shape with every Pallas kernel on
     # (interpret mode on CPU — a small workload, the counters are the point)
     ops.reset_counters()
-    m = _run_one(cfg, params,
-                 list(mixed_workload(3, short_len=10, n_long=1, long_len=24,
-                                     max_new_tokens=4, vocab=cfg.vocab_size,
-                                     arrival_rate=32.0, seed=1)),
-                 max_batch=2, max_len=96, chunk=8,
-                 kernel_policy=KernelPolicy.all_on())
+    llm, resolved = _spec_llm(arch, cfg, params, max_batch=2, max_len=96,
+                              chunk=8, kernel_policy=KernelPolicy.all_on(),
+                              prompt_len=24, max_new_tokens=4)
+    provenance["kernels"] = resolved.as_meta()
+    m = llm.serve(list(mixed_workload(
+        3, short_len=10, n_long=1, long_len=24, max_new_tokens=4,
+        vocab=cfg.vocab_size, arrival_rate=32.0, seed=1))).metrics()
     n_flash = ops.counters["flash_chunk"]
     if n_flash <= 0:
         raise RuntimeError(
@@ -139,32 +156,32 @@ def run_mixed(quick: bool = False) -> list:
     rows.append((f"serve_mixed/{arch}/kernels/flash_chunk", float(n_flash),
                  f"traced call sites (all_on engine) "
                  f"incomplete={m.n_incomplete}"))
-    return rows
+    return {"rows": rows, "meta": {"serve_spec": provenance}}
 
 
-def run_mixed_quick() -> list:
+def run_mixed_quick():
     return run_mixed(quick=True)
 
 
-def run() -> list:
+def run():
     rows = []
     for arch in ("smollm-360m", "phi3.5-moe-42b"):
         cfg = C.get_reduced(arch)
         params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
-        eng = Engine(cfg, params, max_batch=4, max_len=128)
-        sched = Scheduler(eng)
-        for r in synthetic_workload(10, prompt_len=24, max_new_tokens=8,
-                                    vocab=cfg.vocab_size, arrival_rate=8.0):
-            sched.submit(r)
-        sched.run()
-        m = sched.metrics()
+        llm, _ = _spec_llm(arch, cfg, params, max_batch=4, max_len=128,
+                           prompt_len=24)
+        m = llm.serve(synthetic_workload(
+            10, prompt_len=24, max_new_tokens=8, vocab=cfg.vocab_size,
+            arrival_rate=8.0)).metrics()
         rows.append((f"serve/{arch}/itl", m.itl_mean * 1e6,
                      f"ttft={m.ttft_mean*1e3:.1f}ms "
                      f"thr={m.throughput_tok_s:.1f}tok/s n={m.n_requests}"))
-    rows.extend(run_mixed())
-    return rows
+    mixed = run_mixed()
+    rows.extend(mixed["rows"])
+    return {"rows": rows, "meta": mixed["meta"]}
 
 
 if __name__ == "__main__":
-    for name, v, derived in run():
+    out = run()
+    for name, v, derived in out["rows"]:
         print(f"{name},{v:.1f},{derived}")

@@ -1,8 +1,10 @@
-"""The automatic analyzer as a standalone tool (paper §III-B).
+"""The automatic resolver as a standalone tool (paper §III-A/B).
 
-For every assigned architecture, rank parallel strategies on a chosen
-cluster and print the top-3 with their theoretical TTFT/ITL/throughput —
-the offline stage MixServe runs before loading any weights.
+For every assigned architecture, resolve a full ``ServeSpec`` on a chosen
+cluster: the analyzer ranks parallel strategies (top-3 printed with their
+theoretical TTFT/ITL/throughput) and the cost model prices every serving
+knob — the offline stage MixServe runs before loading any weights, with
+the provenance report showing which value came from where.
 
 Run:  PYTHONPATH=src python examples/autotune_strategy.py \
           [--cluster v5e-pod-256] [--objective throughput]
@@ -11,8 +13,8 @@ Run:  PYTHONPATH=src python examples/autotune_strategy.py \
 import argparse
 
 import repro.configs as C
-from repro.core import analyzer
 from repro.core.topology import CLUSTERS
+from repro.serving.api import ServeSpec
 
 
 def main():
@@ -25,16 +27,17 @@ def main():
     ap.add_argument("--l-in", type=int, default=1024)
     ap.add_argument("--l-out", type=int, default=256)
     args = ap.parse_args()
-    cluster = CLUSTERS[args.cluster]
 
     for arch in C.ARCH_IDS:
-        cfg = C.get(arch)
-        rep = analyzer.select(cfg, cluster, batch=args.batch,
-                              l_in=args.l_in, l_out=args.l_out,
-                              objective=args.objective)
-        print(f"\n=== {arch} on {cluster.name} "
+        spec = ServeSpec(arch=arch, cluster=args.cluster,
+                         max_batch=args.batch, prompt_len=args.l_in,
+                         max_new_tokens=args.l_out,
+                         objective=args.objective)
+        resolved = spec.resolve()
+        print(f"\n=== {arch} on {resolved.cluster} "
               f"(objective={args.objective}) ===")
-        print(rep.describe(top=3))
+        print(resolved.report.describe(top=3))
+        print(resolved.describe())
 
 
 if __name__ == "__main__":

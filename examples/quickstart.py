@@ -1,53 +1,48 @@
-"""Quickstart: the MixServe pipeline end-to-end in one script.
+"""Quickstart: the MixServe pipeline end-to-end through ONE API.
 
-1. offline stage — the automatic analyzer picks a parallel strategy for
-   DeepSeek-V2-236B on a TPU v5e pod from the theoretical cost model;
-2. online stage — a reduced same-family model is built, partitioned by the
-   resulting plan semantics, and serves a couple of requests on this host.
+1. declare — a ``ServeSpec`` for DeepSeek-V2-236B with every knob "auto";
+2. resolve — the offline stage: the automatic analyzer picks the parallel
+   strategy on a TPU v5e pod and the cost model prices the serving knobs
+   (prefill chunk, token budget, batch envelope); the provenance report
+   says which field came from where;
+3. serve — the ``LLM`` facade builds the engine from the resolved spec
+   (a reduced same-family model on this host) and generates.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
 import repro.configs as C
-from repro.core import analyzer
-from repro.core.topology import TPU_V5E_POD
-from repro.models.model import count_params, init_params
-from repro.serving.engine import Engine, Request
-from repro.serving.scheduler import Scheduler
+from repro.models.model import count_params
+from repro.serving.api import LLM, ServeSpec
 
 ARCH = "deepseek-v2-236b"
 
 
 def main():
-    # ---------------- offline: automatic analyzer ----------------
     full_cfg = C.get(ARCH)
     print(f"model: {full_cfg.name}  ({count_params(full_cfg):,} params, "
           f"{full_cfg.n_experts} experts top-{full_cfg.top_k})")
-    report = analyzer.select(full_cfg, TPU_V5E_POD, batch=16, l_in=1024,
-                             l_out=256, arrival_rate=4.0,
-                             objective="balanced")
-    print("\n== offline stage: strategy ranking (theoretical) ==")
-    print(report.describe(top=5))
-    best = report.best.strategy
-    print(f"\nselected: {best.describe()}")
 
-    # ---------------- online: serve a reduced variant ----------------
-    cfg = C.get_reduced(ARCH)
-    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
-    engine = Engine(cfg, params, max_batch=2, max_len=96)
-    sched = Scheduler(engine)
-    import numpy as np
-    for rid in range(3):
-        prompt = np.arange(10 + rid, dtype=np.int32) % cfg.vocab_size
-        sched.submit(Request(rid=rid, prompt=prompt, max_new_tokens=8))
-    done = sched.run()
+    # ---------------- declare + resolve (offline stage) ----------------
+    spec = ServeSpec(arch=ARCH, cluster="v5e-pod-256", prompt_len=16,
+                     max_new_tokens=8, arrival_rate=4.0,
+                     objective="balanced")
+    resolved = spec.resolve()
+    print("\n== offline stage: strategy ranking (theoretical) ==")
+    print(resolved.report.describe(top=5))
+    print("\n== resolved serving spec (provenance) ==")
+    print(resolved.describe())
+
+    # ---------------- serve (online stage, reduced config) ----------------
+    llm = LLM.from_spec(resolved)
+    prompts = [np.arange(10 + rid, dtype=np.int32) % llm.cfg.vocab_size
+               for rid in range(3)]
+    outs = llm.generate(prompts, max_new_tokens=8)
     print("\n== online stage: served requests (reduced config, CPU) ==")
-    for r in done:
-        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.out_tokens}")
-    print(sched.metrics().row())
+    for rid, (p, toks) in enumerate(zip(prompts, outs)):
+        print(f"  req {rid}: prompt[{len(p)}] -> {toks}")
 
 
 if __name__ == "__main__":

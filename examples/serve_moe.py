@@ -1,24 +1,22 @@
 """End-to-end serving driver: batched requests through the continuous-
 batching engine on an MoE model (the paper's serving scenario).
 
-A Poisson request stream replays in real time against the engine; per-request
-TTFT / ITL and aggregate throughput are reported next to the analyzer's
-theoretical estimates for the paper's two clusters.
+The offline stage resolves a full ``ServeSpec`` on each of the paper's two
+evaluation clusters (H20 x16, Ascend 910B x32) — strategy from the
+analyzer, chunk/token-budget/batch from the cost model — then the ``LLM``
+facade replays a Poisson request stream against the resolved configuration
+on this host and reports measured TTFT / ITL / throughput next to the
+theoretical estimates.
 
 Run:  PYTHONPATH=src python examples/serve_moe.py [--arch phi3.5-moe-42b]
 """
 
 import argparse
 
-import jax
-import jax.numpy as jnp
-
 import repro.configs as C
-from repro.core import analyzer
 from repro.core.topology import ASCEND_910B_CLUSTER, H20_CLUSTER
-from repro.models.model import init_params
-from repro.serving.engine import Engine
-from repro.serving.scheduler import Scheduler, synthetic_workload
+from repro.serving.api import LLM, ServeSpec
+from repro.serving.scheduler import synthetic_workload
 
 
 def main():
@@ -29,35 +27,31 @@ def main():
     ap.add_argument("--rate", type=float, default=4.0)
     args = ap.parse_args()
 
-    full = C.get(args.arch)
-    print("== offline analyzer on the paper's clusters ==")
-    for cl in (H20_CLUSTER, ASCEND_910B_CLUSTER):
-        rep = analyzer.select(full, cl, batch=16, l_in=1024, l_out=256,
-                              arrival_rate=args.rate)
-        print(f"[{cl.name}] best: {rep.best.strategy.describe()}  "
-              f"ttft={rep.best.ind.ttft*1e3:.0f}ms "
-              f"itl={rep.best.ind.itl*1e3:.1f}ms "
-              f"thr={rep.best.ind.throughput:.0f}tok/s")
+    spec = ServeSpec(arch=args.arch, prompt_len=32, max_new_tokens=12,
+                     arrival_rate=args.rate)
 
-    cfg = C.get_reduced(args.arch)
-    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
-    embeds_fn = None
-    if cfg.frontend == "audio_stub":
-        e = cfg.encoder
-        embeds_fn = lambda b: {"frames": jnp.full(
-            (b, e.n_frames, e.d_model), 0.01, jnp.float32)}
-    engine = Engine(cfg, params, max_batch=4, max_len=128,
-                    embeds_fn=embeds_fn)
-    sched = Scheduler(engine)
-    for r in synthetic_workload(args.requests, prompt_len=32,
-                                max_new_tokens=12, vocab=cfg.vocab_size,
-                                arrival_rate=args.rate):
-        sched.submit(r)
-    done = sched.run()
+    print("== offline stage: the spec resolved on the paper's clusters ==")
+    for cl in (H20_CLUSTER, ASCEND_910B_CLUSTER):
+        r = spec.resolve(cluster=cl)
+        best = r.report.best
+        print(f"[{cl.name}] {r.strategy} ({r.strategy_detail})  "
+              f"chunk={r.chunk} budget={r.token_budget} "
+              f"b={r.max_batch}  ttft={best.ind.ttft*1e3:.0f}ms "
+              f"itl={best.ind.itl*1e3:.1f}ms "
+              f"thr={best.ind.throughput:.0f}tok/s")
+
+    # online stage: serve the default-cluster resolution on this host
+    resolved = spec.resolve()
+    print("\n== resolved serving spec (provenance) ==")
+    print(resolved.describe())
+    llm = LLM.from_spec(resolved)
+    sched = llm.serve(synthetic_workload(
+        args.requests, prompt_len=32, max_new_tokens=12,
+        vocab=llm.cfg.vocab_size, arrival_rate=args.rate))
     m = sched.metrics()
-    print(f"\n== measured on this host (reduced {cfg.name}) ==")
+    print(f"\n== measured on this host (reduced {llm.cfg.name}) ==")
     print(m.row())
-    assert len(done) == args.requests
+    assert len(sched.finished) == args.requests
 
 
 if __name__ == "__main__":

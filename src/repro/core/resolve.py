@@ -1,0 +1,161 @@
+"""Knob resolution for the declarative serving API (ServeSpec "auto" fields).
+
+The paper's headline is *automatic*: model + cluster in, serving system
+configured out (§III-A/B).  ``repro.serving.api.ServeSpec`` is the
+declarative surface; THIS module is where each ``"auto"`` field becomes a
+concrete value, derived from the offline analyzer / theoretical cost model
+instead of user homework:
+
+  cluster       explicit ClusterSpec / name (validated against the mesh) or
+                the v5e heuristic fallback
+  strategy      ``analyzer.select`` on the §III-B1 grammar, mapped to a
+                ShardingPlan layout name (hybrid "mixserve" vs pure-EP
+                "dp_ep", with the expert-divisibility guard)
+  max_batch     largest power-of-two batch the Eq. 8 memory constraint
+                admits on the target cluster (capped — engine slots, not
+                cluster-wide batch)
+  chunk         largest prefill chunk whose co-scheduled cost keeps the
+                mixed step's ITL inflation under ``ITL_SLACK`` — Sarathi's
+                chunk rule instantiated with the Eq. 4-6 token-time
+                estimates (replaces the hardcoded 16)
+  token_budget  max_batch decode tokens + one prefill chunk per unified
+                iteration (replaces the B*chunk default, which let every
+                slot prefill at once and spike ITL)
+  max_len       the workload envelope l_in + l_out (+ frontend tokens),
+                rounded up to the cache-row granule
+
+Everything here is deterministic: same (spec, model, cluster) in, same
+resolved knobs out.  No serving imports — ``serving.api`` composes these
+helpers, ``launch.auto`` reuses the strategy mapping.
+"""
+
+from __future__ import annotations
+
+from typing import Union
+
+from repro.configs.base import ModelConfig
+from repro.core import analyzer
+from repro.core import cost_model as cm
+from repro.core.topology import (CLUSTERS, TPU_V5E_MULTIPOD, TPU_V5E_POD,
+                                 ClusterSpec)
+
+AUTO = "auto"
+
+# auto-chunk: prefill tokens riding a decode step may inflate it by at most
+# this fraction (Sarathi's ITL-bounded chunking, priced by the cost model)
+ITL_SLACK = 0.5
+CHUNK_CANDIDATES = (4, 8, 16, 32, 64)
+# auto max_batch: engine slots on ONE host; Eq. 8 bounds it from above,
+# this caps it from sanity (a CPU dev host is not a pod)
+AUTO_BATCH_CAP = 8
+# max_len is allocated in cache-row granules
+LEN_GRANULE = 64
+
+
+def resolve_cluster(cluster: Union[str, ClusterSpec, None] = None, *,
+                    mesh=None) -> tuple[ClusterSpec, str]:
+    """(ClusterSpec, provenance).  Explicit name/spec wins — validated
+    against ``mesh.devices.size`` when a mesh is given; ``auto``/None falls
+    back to the v5e heuristic (multi-pod iff the mesh exceeds one pod)."""
+    if cluster is None or cluster == AUTO:
+        if mesh is not None:
+            spec = TPU_V5E_MULTIPOD if mesh.devices.size > 256 else TPU_V5E_POD
+            return spec, f"auto:mesh-heuristic({mesh.devices.size} devices)"
+        return TPU_V5E_POD, "auto:default(v5e-pod-256)"
+    if isinstance(cluster, str):
+        if cluster not in CLUSTERS:
+            raise KeyError(f"unknown cluster {cluster!r} "
+                           f"(have {sorted(CLUSTERS)})")
+        spec = CLUSTERS[cluster]
+    else:
+        spec = cluster
+    if mesh is not None and spec.n_devices != mesh.devices.size:
+        raise ValueError(
+            f"cluster {spec.name!r} has {spec.n_devices} devices but the "
+            f"mesh has {mesh.devices.size} — pass a matching ClusterSpec "
+            "or let the heuristic pick one")
+    return spec, "explicit"
+
+
+def plan_name_for(cfg: ModelConfig, strat: cm.Strategy,
+                  n_devices: int) -> str:
+    """Map an analyzer Strategy onto a ShardingPlan layout name.
+
+    The winning strategy maps to the hybrid ("mixserve") layout when its
+    MoE block uses TP > 1, else to pure-EP — with a divisibility guard:
+    pure-EP needs n_experts % n_devices == 0, otherwise the hybrid layout
+    is the only implementable choice on this mesh (the deepseek-v2 case:
+    160 experts on 256 chips).
+    """
+    name = "mixserve" if strat.moe_tp > 1 or not cfg.is_moe else "dp_ep"
+    if name == "dp_ep" and cfg.n_experts % max(n_devices, 1) != 0:
+        name = "mixserve"
+    return name
+
+
+def auto_max_batch(cfg: ModelConfig, strat: cm.Strategy,
+                   cluster: ClusterSpec, *, l_in: int, l_out: int,
+                   cap: int = AUTO_BATCH_CAP) -> tuple[int, str]:
+    """Largest power-of-two batch under the Eq. 8 memory constraint."""
+    b = 1
+    while b * 2 <= cap and cm.memory_per_device(
+            cfg, strat, batch=b * 2, seq_len=l_in + l_out) < cluster.hbm_bytes:
+        b *= 2
+    return b, (f"auto:cost-model(Eq. 8 memory on {cluster.name}, "
+               f"cap {cap})")
+
+
+def token_times(cfg: ModelConfig, strat: cm.Strategy, cluster: ClusterSpec,
+                *, batch: int, l_in: int, l_out: int) -> tuple[float, float]:
+    """(per-prefill-token latency, decode-step latency) — Eq. 4-6."""
+    prf = cm.service_latency(
+        cfg, strat, cm.Workload(batch=batch, seq_len=l_in), cluster)
+    dec = cm.service_latency(
+        cfg, strat, cm.Workload(batch=batch, seq_len=1, kv_len=l_in + l_out),
+        cluster)
+    return prf / max(batch * l_in, 1), dec
+
+
+def auto_chunk(cfg: ModelConfig, strat: cm.Strategy, cluster: ClusterSpec, *,
+               batch: int, l_in: int, l_out: int,
+               slack: float = ITL_SLACK) -> tuple[int, str]:
+    """Largest chunk whose prefill tokens inflate a decode step <= slack.
+
+    A prefill chunk of c tokens co-scheduled with the decode batch adds
+    ~``c * t_prefill_token`` to the unified step; Sarathi's rule bounds the
+    resulting ITL inflation.  Candidates above the workload's prompt length
+    are pointless (the (B, chunk) buffer is static) and skipped.
+    """
+    t_tok, t_dec = token_times(cfg, strat, cluster, batch=batch,
+                               l_in=l_in, l_out=l_out)
+    chunk = CHUNK_CANDIDATES[0]
+    for c in CHUNK_CANDIDATES:
+        if c > max(l_in, CHUNK_CANDIDATES[0]):
+            break
+        if c * t_tok <= slack * t_dec:
+            chunk = c
+    return chunk, (f"auto:cost-model({chunk} prefill tok <= "
+                   f"{slack:.0%} of a {t_dec*1e3:.2f}ms decode step)")
+
+
+def auto_token_budget(max_batch: int, chunk: int) -> tuple[int, str]:
+    """Decode-first budget: every slot's decode token + ONE prefill chunk
+    per unified iteration (the cost-model-bounded prefill rate), replacing
+    the B*chunk default that let every slot prefill at once."""
+    return max_batch + chunk, (f"auto:cost-model({max_batch} decode tokens "
+                               f"+ one {chunk}-token prefill chunk)")
+
+
+def auto_max_len(l_in: int, l_out: int, front: int = 0,
+                 granule: int = LEN_GRANULE) -> tuple[int, str]:
+    """Cache rows for the workload envelope, rounded to the granule."""
+    need = max(front + l_in + l_out, 1)
+    n = -(-need // granule) * granule
+    return n, (f"auto:workload({front} frontend + {l_in} prompt + "
+               f"{l_out} new tokens, {granule}-row granule)")
+
+
+__all__ = ["AUTO", "ITL_SLACK", "CHUNK_CANDIDATES", "AUTO_BATCH_CAP",
+           "LEN_GRANULE", "resolve_cluster", "plan_name_for",
+           "auto_max_batch", "token_times", "auto_chunk",
+           "auto_token_budget", "auto_max_len"]

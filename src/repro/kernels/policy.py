@@ -48,6 +48,30 @@ class KernelPolicy:
         import jax
         return cls.all_on() if jax.default_backend() == "tpu" else cls.off()
 
+    @classmethod
+    def parse(cls, value) -> "KernelPolicy":
+        """The ServeSpec / CLI surface: "auto" | "on" | "off" (or an
+        already-built policy, passed through) -> a concrete KernelPolicy."""
+        if isinstance(value, cls):
+            return value
+        if value == "auto":
+            return cls.auto()
+        if value in ("on", "all_on"):
+            return cls.all_on()
+        if value in ("off", "none"):
+            return cls.off()
+        raise ValueError(
+            f"kernel policy must be 'auto'/'on'/'off' or a KernelPolicy, "
+            f"got {value!r}")
+
+    def describe(self) -> str:
+        """Compact provenance-report form: all-on / off / the enabled set."""
+        on = [f.name for f in dataclasses.fields(self)
+              if getattr(self, f.name)]
+        if len(on) == len(dataclasses.fields(self)):
+            return "all-on"
+        return "+".join(on) if on else "off"
+
 
 NULL_POLICY = KernelPolicy()
 

@@ -5,33 +5,48 @@ takes the best feasible strategy, and maps it onto a ShardingPlan — the
 "--strategy auto" path of the launcher/dry-run.  This is the piece that
 makes the system *automatic* end to end: model config in, mesh in, sharded
 program out.
+
+The serving-side mirror of this loop is ``repro.serving.api.ServeSpec``
+(docs/api.md), which resolves the SAME analyzer choice plus the online
+knobs (chunk, token budget, kernels, dispatch) through ``core.resolve`` —
+the strategy -> layout mapping is shared (``core.resolve.plan_name_for``).
 """
 
 from __future__ import annotations
 
+from typing import Union
+
 from repro.configs.base import InputShape, ModelConfig
 from repro.core import analyzer
 from repro.core.partitioner import ShardingPlan, make_plan
-from repro.core.topology import TPU_V5E_MULTIPOD, TPU_V5E_POD
+from repro.core.resolve import plan_name_for, resolve_cluster
+from repro.core.topology import ClusterSpec
 
 
-def cluster_for_mesh(mesh):
-    return TPU_V5E_MULTIPOD if mesh.devices.size > 256 else TPU_V5E_POD
+def cluster_for_mesh(mesh, cluster: Union[str, ClusterSpec, None] = None
+                     ) -> ClusterSpec:
+    """ClusterSpec for a mesh: an explicit spec/name wins (validated
+    against ``mesh.devices.size``); None falls back to the v5e heuristic
+    (multi-pod iff the mesh exceeds one 256-chip pod)."""
+    spec, _src = resolve_cluster(cluster, mesh=mesh)
+    return spec
 
 
 def auto_plan(cfg: ModelConfig, mesh, shape: InputShape, *,
               fsdp: bool = False, sp: bool = True,
-              objective: str = "balanced") -> tuple:
+              objective: str = "balanced",
+              cluster: Union[str, ClusterSpec, None] = None) -> tuple:
     """(plan, report): analyzer-selected ShardingPlan for (model, mesh, shape).
 
-    The analyzer enumerates the §III-B1 grammar on the mesh's cluster spec;
-    the winning strategy maps to the hybrid ("mixserve") layout when its MoE
-    block uses TP>1, else to pure-EP — with a divisibility guard: pure-EP
-    needs n_experts % n_devices == 0, otherwise the hybrid layout is the
-    only implementable choice on this mesh (the deepseek-v2 case: 160
-    experts on 256 chips).
+    The analyzer enumerates the §III-B1 grammar on the mesh's cluster spec
+    (explicit ``cluster`` or the heuristic fallback); the winning strategy
+    maps to the hybrid ("mixserve") layout when its MoE block uses TP>1,
+    else to pure-EP — with a divisibility guard: pure-EP needs
+    n_experts % n_devices == 0, otherwise the hybrid layout is the only
+    implementable choice on this mesh (the deepseek-v2 case: 160 experts
+    on 256 chips).
     """
-    cluster = cluster_for_mesh(mesh)
+    cluster = cluster_for_mesh(mesh, cluster)
     if shape.kind == "train":
         batch, l_in, l_out = shape.global_batch, shape.seq_len, 1
     elif shape.kind == "prefill":
@@ -42,9 +57,7 @@ def auto_plan(cfg: ModelConfig, mesh, shape: InputShape, *,
                           l_out=l_out, objective=objective)
     best = rep.best.strategy
 
-    name = "mixserve" if best.moe_tp > 1 or not cfg.is_moe else "dp_ep"
-    if name == "dp_ep" and cfg.n_experts % mesh.devices.size != 0:
-        name = "mixserve"
+    name = plan_name_for(cfg, best, mesh.devices.size)
     plan = make_plan(name, mesh, comm_algo=best.comm_algo, fsdp=fsdp, sp=sp)
     return plan, rep
 

@@ -1,109 +1,124 @@
 """Serving driver: the MixServe online stage end-to-end.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch phi3.5-moe-42b --reduced \
+  PYTHONPATH=src python -m repro.launch.serve --arch phi3.5-moe-42b \
       --requests 16 --rate 4
 
-Offline stage first (automatic analyzer on the target cluster), then the
-engine + scheduler replay a Poisson workload and report measured TTFT / ITL /
-throughput next to the analyzer's theoretical estimates (Eqs. 9-11).
+One door: the CLI builds a declarative ``ServeSpec`` (every knob defaults
+to ``auto``), ``resolve`` runs the offline stage — the automatic analyzer
++ cost model pick the strategy, kernel policy, dispatch mode, prefill
+chunk, token budget and slot envelope — and the ``LLM`` facade runs the
+online engine with exactly that resolved configuration (the provenance
+report printed below says which field came from where).  Explicit flags
+(``--chunk 8``, ``--dispatch capacity``, ...) beat ``auto`` field by
+field.  See docs/api.md.
 
 The engine is the unified token-budget mixed prefill/decode step
-(docs/serving.md): one jitted program, prefill chunks co-scheduled with
-decode tokens under ``--chunk`` / ``--token-budget``.  Families the
-unified step cannot serve (ssm/hybrid/frontend) fall back to the internal
-blocking-prefill path automatically; the public ``--legacy-engine`` /
-``REPRO_LEGACY_ENGINE`` escape hatch was retired after its one-release
-window.
+(docs/serving.md); families the unified step cannot serve
+(ssm/hybrid/frontend) fall back to the internal blocking-prefill path
+automatically.
 """
 
 from __future__ import annotations
 
 import argparse
 
-import jax
-import jax.numpy as jnp
-
 import repro.configs as C
-from repro.core import analyzer
 from repro.core.topology import CLUSTERS
-from repro.kernels.policy import KernelPolicy
-from repro.models.model import init_params
-from repro.serving.engine import Engine
-from repro.serving.scheduler import Scheduler, synthetic_workload
+from repro.serving.api import AUTO, LLM, ServeSpec
+from repro.serving.scheduler import synthetic_workload
 
 
-def main():
+def _auto_int(v: str):
+    return v if v == AUTO else int(v)
+
+
+def parse_args(argv=None) -> argparse.Namespace:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=C.ARCH_IDS)
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="serve the reduced config on this host (the "
+                         "offline analyzer always prices the FULL config); "
+                         "--no-reduced serves the full one")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--rate", type=float, default=4.0)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--cluster", default="v5e-pod-256",
-                    choices=list(CLUSTERS))
-    ap.add_argument("--kernels", default="auto", choices=("auto", "on", "off"),
+    ap.add_argument("--max-batch", type=_auto_int, default=AUTO,
+                    help="engine slots; auto = largest power-of-two batch "
+                         "the Eq. 8 memory constraint admits")
+    ap.add_argument("--max-len", type=_auto_int, default=AUTO,
+                    help="cache rows per slot; auto = the workload "
+                         "envelope (prompt + new tokens, rounded up)")
+    ap.add_argument("--cluster", default=AUTO,
+                    choices=[AUTO] + list(CLUSTERS),
+                    help="offline-stage target cluster (auto -> v5e pod)")
+    ap.add_argument("--objective", default="balanced",
+                    choices=("ttft", "itl", "throughput", "balanced"))
+    ap.add_argument("--strategy", default=AUTO,
+                    choices=(AUTO, "mixserve", "dp_ep", "pure_ep",
+                             "pure_tp"),
+                    help="parallel layout; auto = the analyzer's pick")
+    ap.add_argument("--kernels", default=AUTO, choices=(AUTO, "on", "off"),
                     help="Pallas kernel policy for the jitted serve graph: "
                          "auto = on for TPU backends, off elsewhere; on "
                          "forces the kernelized path (interpret mode on CPU)")
-    ap.add_argument("--dispatch", default="auto",
-                    choices=("auto", "dropless", "capacity"),
+    ap.add_argument("--dispatch", default=AUTO,
+                    choices=(AUTO, "dropless", "capacity"),
                     help="MoE dispatch buffers: auto (-> dropless, the "
                          "count-independent ragged inference dispatch) or "
                          "capacity (fixed (E, C, h) buffers; training's "
                          "scheme, kept for A/B comparison)")
-    ap.add_argument("--chunk", type=int, default=16,
-                    help="prefill chunk size of the unified mixed step: each "
-                         "prefilling slot contributes at most this many "
-                         "prompt tokens per iteration (decode slots always "
-                         "contribute 1); also the static width of the "
-                         "(B, chunk) token buffer")
-    ap.add_argument("--token-budget", type=int, default=0,
+    ap.add_argument("--chunk", type=_auto_int, default=AUTO,
+                    help="prefill chunk size of the unified mixed step "
+                         "(static width of the (B, chunk) token buffer); "
+                         "auto = the largest chunk the cost model prices "
+                         "under the ITL-inflation bound")
+    ap.add_argument("--token-budget", type=_auto_int, default=AUTO,
                     help="total tokens per unified iteration across all "
-                         "slots (0 -> max_batch * chunk); decode tokens are "
-                         "scheduled first, prefill chunks fill the rest")
+                         "slots; auto = max_batch decode tokens + one "
+                         "prefill chunk (decode is scheduled first)")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-    policy = {"auto": KernelPolicy.auto(), "on": KernelPolicy.all_on(),
-              "off": KernelPolicy.off()}[args.kernels]
+    return ap.parse_args(argv)
 
-    cfg_full = C.get(args.arch)
-    cluster = CLUSTERS[args.cluster]
 
-    # ---- offline stage: automatic analyzer on the FULL config ----
-    rep = analyzer.select(cfg_full, cluster, batch=args.max_batch,
-                          l_in=args.prompt_len, l_out=args.max_new,
-                          arrival_rate=args.rate)
+def build_spec(args: argparse.Namespace) -> ServeSpec:
+    """CLI flags -> the declarative spec (auto flags stay auto)."""
+    return ServeSpec(
+        arch=args.arch, reduced=args.reduced, cluster=args.cluster,
+        strategy=args.strategy, kernels=args.kernels,
+        dispatch=args.dispatch, chunk=args.chunk,
+        token_budget=args.token_budget, max_batch=args.max_batch,
+        max_len=args.max_len, prompt_len=args.prompt_len,
+        max_new_tokens=args.max_new, arrival_rate=args.rate,
+        objective=args.objective, seed=args.seed)
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    spec = build_spec(args)
+
+    # ---- offline stage: automatic analyzer + knob resolution on the
+    # FULL config (model + cluster in, serving configuration out) ----
+    resolved = spec.resolve(C.get(args.arch))
     print("== offline analyzer (theoretical, full config on "
-          f"{cluster.name}) ==")
-    print(rep.describe(top=3))
+          f"{resolved.cluster}) ==")
+    print(resolved.report.describe(top=3))
+    print("\n== resolved serving spec (provenance) ==")
+    print(resolved.describe())
 
-    # ---- online stage: run the reduced config on this host ----
-    cfg = C.get_reduced(args.arch) if args.reduced else cfg_full
-    params = init_params(jax.random.PRNGKey(args.seed), cfg, jnp.float32)
-    embeds_fn = None
-    if cfg.frontend == "audio_stub":
-        e = cfg.encoder
-        embeds_fn = lambda b: {"frames": jnp.full(
-            (b, e.n_frames, e.d_model), 0.01, jnp.float32)}
-    eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
-                 embeds_fn=embeds_fn, kernel_policy=policy,
-                 dispatch_mode=args.dispatch, chunk=args.chunk)
-    if eng.legacy:
-        print(f"[engine] {cfg.name}: family {cfg.family!r} falls back to "
-              "the internal blocking-prefill path")
-    sched = Scheduler(eng, token_budget=args.token_budget or None)
-    for r in synthetic_workload(args.requests, prompt_len=args.prompt_len,
-                                max_new_tokens=args.max_new,
-                                vocab=cfg.vocab_size,
-                                arrival_rate=args.rate, seed=args.seed):
-        sched.submit(r)
-    sched.run()
-    m = sched.metrics()
-    print("== online measured (reduced config on this host) ==")
-    print(m.row())
+    # ---- online stage: the LLM facade runs EXACTLY the resolved spec ----
+    llm = LLM.from_spec(resolved)
+    if llm.engine.legacy:
+        print(f"[engine] {llm.cfg.name}: family {llm.cfg.family!r} falls "
+              "back to the internal blocking-prefill path")
+    sched = llm.serve(synthetic_workload(
+        args.requests, prompt_len=args.prompt_len,
+        max_new_tokens=args.max_new, vocab=llm.cfg.vocab_size,
+        arrival_rate=args.rate, seed=args.seed))
+    print("\n== online measured "
+          f"({'reduced' if args.reduced else 'full'} config on this host) ==")
+    print(sched.metrics().row())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,18 @@
+"""The serving stack: one resolvable API (docs/api.md).
+
+``ServeSpec`` is the declarative surface — every knob defaults to "auto"
+and is resolved by the offline analyzer / cost model; ``LLM`` is the
+facade that owns Engine + Scheduler construction.
+"""
+
+from repro.serving.api import (AUTO, LLM, ResolvedServeSpec, ServeSpec,
+                               spec_from_engine_kwargs)
+from repro.serving.engine import (Engine, PromptTooLongError, Request,
+                                  unified_supported)
+from repro.serving.scheduler import (Scheduler, ServeMetrics, mixed_workload,
+                                     synthetic_workload)
+
+__all__ = ["AUTO", "LLM", "ServeSpec", "ResolvedServeSpec",
+           "spec_from_engine_kwargs", "Engine", "Request",
+           "PromptTooLongError", "unified_supported", "Scheduler",
+           "ServeMetrics", "synthetic_workload", "mixed_workload"]

@@ -31,22 +31,25 @@ hybrid ring buffers, whisper enc-dec and stub-frontend models, whose
 per-row state cannot mask a ragged tail — and the engine falls back to it
 automatically for exactly those configs.
 
-This is the "online stage" host of MixServe: the ShardingPlan injected here
-is the one the automatic analyzer selected offline.  ``kernel_policy``
-(repro.kernels.KernelPolicy; default ``auto()`` = Pallas kernels on TPU
-backends) rides on the plan into the jitted step — for MoE archs the
-``topk_gate`` / fused-permute / grouped-GEMM dropless pipeline; with
-``chunk == 1`` (a pure-decode budget) the attention runs the Pallas
-``flash_decode`` kernel, and with ``chunk > 1`` the mixed ragged batch
-runs the Pallas ``flash_chunk`` kernel (see docs/kernels.md).
-``dispatch_mode`` (default: the plan's "auto" -> dropless) selects MoE
-buffers; serving wants dropless — it is what makes the mixed batch safe.
+This is the "online stage" host of MixServe, configured by ONE object: a
+``repro.serving.api.ResolvedServeSpec`` (``Engine(cfg, params, spec=...)``)
+carrying the analyzer-selected ShardingPlan, the ``KernelPolicy`` (default
+``auto()`` = Pallas kernels on TPU backends — for MoE archs the
+``topk_gate`` / fused-permute / grouped-GEMM dropless pipeline; ``chunk ==
+1`` runs the Pallas ``flash_decode`` attention, ``chunk > 1`` the ragged
+``flash_chunk`` kernel, see docs/kernels.md), the MoE ``dispatch`` mode
+(dropless is what makes the mixed batch safe), and the
+chunk/token-budget/slot envelope the cost model resolved.  The old
+per-knob kwargs (``max_batch=``, ``chunk=``, ``kernel_policy=``, ...)
+survive one release as a deprecation shim that folds them into a spec
+internally — see docs/api.md.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -116,33 +119,58 @@ def unified_supported(cfg: ModelConfig) -> bool:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, plan: ShardingPlan = NULL_PLAN,
-                 *, max_batch: int = 8, max_len: int = 512,
-                 dtype=jnp.float32, temperature: float = 0.0, seed: int = 0,
+                 *, spec=None,
+                 max_batch: Optional[int] = None,
+                 max_len: Optional[int] = None,
+                 dtype=jnp.float32, temperature: Optional[float] = None,
+                 seed: Optional[int] = None,
                  embeds_fn: Optional[Callable] = None,
                  kernel_policy: Optional[KernelPolicy] = None,
                  dispatch_mode: Optional[str] = None,
-                 chunk: int = 16, debug_logits: bool = False):
-        if kernel_policy is None:
-            # respect a policy the caller already put on the plan (make_plan
-            # kernels=...); only a plan with everything off falls to auto()
-            kernel_policy = (plan.kernels if plan.kernels.any_enabled
-                             else KernelPolicy.auto())
-        if kernel_policy != plan.kernels:
-            plan = dataclasses.replace(plan, kernels=kernel_policy)
-        if dispatch_mode is not None and dispatch_mode != plan.dispatch_mode:
-            # explicit argument wins over the plan; the plan default ("auto")
-            # already resolves to the dropless inference dispatch
-            plan = dataclasses.replace(plan, dispatch_mode=dispatch_mode)
+                 chunk: Optional[int] = None,
+                 debug_logits: Optional[bool] = None):
+        # ``spec`` (a serving.api.ResolvedServeSpec) is THE configuration
+        # surface: strategy/plan, kernels, dispatch, chunk, token budget and
+        # the slot envelope all ride on it, resolved by the analyzer / cost
+        # model.  The per-knob kwargs below are a one-release deprecation
+        # shim that folds them into a spec internally.
+        legacy_kwargs = {k: v for k, v in dict(
+            max_batch=max_batch, max_len=max_len, temperature=temperature,
+            seed=seed, kernel_policy=kernel_policy,
+            dispatch_mode=dispatch_mode, chunk=chunk,
+            debug_logits=debug_logits).items() if v is not None}
+        from repro.serving.api import spec_from_engine_kwargs
+        if spec is None:
+            if legacy_kwargs:
+                warnings.warn(
+                    "Engine(max_batch=..., max_len=..., chunk=, "
+                    "kernel_policy=, dispatch_mode=, ...) kwargs are "
+                    "deprecated: build a repro.serving.api.ServeSpec and "
+                    "pass Engine(cfg, params, spec=spec.resolve(...)) — or "
+                    "use the LLM facade (docs/api.md)",
+                    DeprecationWarning, stacklevel=2)
+            spec = spec_from_engine_kwargs(cfg, plan, **legacy_kwargs)
+        else:
+            if legacy_kwargs:
+                raise ValueError(
+                    "pass knobs on the ResolvedServeSpec, not alongside it "
+                    f"(got both spec= and {sorted(legacy_kwargs)})")
+            if plan is not NULL_PLAN and plan != spec.plan:
+                raise ValueError(
+                    "the ShardingPlan rides on the spec "
+                    "(ResolvedServeSpec.plan) — don't pass both")
+        self.spec = spec
+        plan = spec.plan
         self.cfg, self.params, self.plan = cfg, params, plan
-        self.max_batch, self.max_len = max_batch, max_len
-        self.temperature = temperature
-        self.key = jax.random.PRNGKey(seed)
+        self.max_batch, self.max_len = spec.max_batch, spec.max_len
+        self.temperature = spec.temperature
+        self.key = jax.random.PRNGKey(spec.seed)
         self.embeds_fn = embeds_fn    # vlm/audio stub-frontend provider
-        self.chunk = max(1, min(int(chunk), max_len))
+        self.chunk = max(1, min(int(spec.chunk), spec.max_len))
         # debug/oracle mode: keep every row's logits (B, chunk, V) per step
         # in ``step_logits``; the hot path applies the LM head only to each
         # slot's last valid row (forward last_only)
-        self.debug_logits = bool(debug_logits)
+        self.debug_logits = bool(spec.debug_logits)
 
         # the blocking-prefill path survives ONLY as the automatic fallback
         # for families the unified step cannot serve (ssm/hybrid/frontend);
@@ -150,14 +178,14 @@ class Engine:
         self.legacy = not unified_supported(cfg)
 
         self.cache = with_lengths(
-            init_cache(cfg, max_batch, max_len, dtype),
-            jnp.zeros((max_batch,), jnp.int32))
-        self.slots: list[Optional[Request]] = [None] * max_batch
-        self.cur_tokens = jnp.zeros((max_batch, 1), jnp.int32)
+            init_cache(cfg, self.max_batch, self.max_len, dtype),
+            jnp.zeros((self.max_batch,), jnp.int32))
+        self.slots: list[Optional[Request]] = [None] * self.max_batch
+        self.cur_tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
         # unified-step slot bookkeeping (host side, mirrors device lengths)
-        self._prompt_pos = [0] * max_batch     # prompt tokens already written
-        self._last_tok = [0] * max_batch       # last sampled token per slot
-        self._admit_seq = [0] * max_batch      # admission order (prefill FIFO)
+        self._prompt_pos = [0] * self.max_batch   # prompt tokens written
+        self._last_tok = [0] * self.max_batch     # last sampled token
+        self._admit_seq = [0] * self.max_batch    # admission (prefill FIFO)
         self._seq = 0
         self.last_logits = None                # (B, V) of the last step
         self.step_logits = None                # (B, chunk, V), debug_logits
@@ -379,10 +407,19 @@ class Engine:
         return finished
 
     def _step_legacy(self) -> list:
-        active = jnp.asarray([r is not None and not r.done
-                              for r in self.slots])
+        finished = []
+        # reap requests already complete: the blocking prefill emits the
+        # first token inside admit, so a max_new_tokens==1 request is done
+        # before its first decode step — without this sweep it would pin
+        # its slot forever (and the append loop below would push a token
+        # past its budget)
+        for i, r in enumerate(self.slots):
+            if r is not None and r.done:
+                finished.append(r)
+                self.slots[i] = None
+        active = jnp.asarray([r is not None for r in self.slots])
         if not bool(active.any()):
-            return []
+            return finished
         self.key, sub = jax.random.split(self.key)
         nxt, self.cache = self._decode(self.params, self.cur_tokens,
                                        self.cache, active, sub)
@@ -390,7 +427,6 @@ class Engine:
         # purely for request bookkeeping (no device->host->device round trip)
         self.cur_tokens = nxt[:, None]
         now = time.perf_counter()
-        finished = []
         nxt_host = np.asarray(nxt)
         for i, r in enumerate(self.slots):
             if r is None:

@@ -9,8 +9,10 @@ benchmarks can compare measured vs modeled.
 
 Each iteration of ``run`` admits due arrivals into free slots (admission is
 pure bookkeeping on the unified engine — no blocking prefill) and then runs
-ONE engine step under a token budget (default ``engine.max_batch *
-engine.chunk`` tokens): every decoding slot contributes its 1 token first,
+ONE engine step under a token budget (from the engine's resolved
+``ServeSpec.token_budget`` — the cost model's decode-first budget, or the
+old ``B * chunk`` for legacy-kwarg engines): every decoding slot
+contributes its 1 token first,
 and the remaining budget is filled with prefill chunks in admission order.
 Long prompts therefore stream through in chunks co-scheduled WITH the
 decode traffic instead of stalling it — the TTFT/ITL trade the paper's
@@ -28,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Iterable, Optional
 
@@ -61,7 +64,18 @@ class ServeMetrics:
 class Scheduler:
     def __init__(self, engine: Engine, token_budget: Optional[int] = None):
         self.engine = engine
-        self.token_budget = token_budget   # None -> engine default (B*chunk)
+        if token_budget is not None:
+            warnings.warn(
+                "Scheduler(token_budget=...) is deprecated: set "
+                "ServeSpec.token_budget (default 'auto' -> the cost "
+                "model's decode-first budget) and build the engine from "
+                "the resolved spec — see docs/api.md",
+                DeprecationWarning, stacklevel=2)
+        # the budget rides on the engine's resolved spec (the cost-model
+        # choice, or B*chunk for legacy-kwarg engines); the deprecated
+        # kwarg still wins for its one-release window
+        self.token_budget = int(token_budget) if token_budget \
+            else engine.spec.token_budget
         self.waiting: deque[Request] = deque()
         self.finished: list[Request] = []
         self.wall = 0.0

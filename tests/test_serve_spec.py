@@ -1,0 +1,244 @@
+"""ServeSpec resolution: the automatic loop's public API contract.
+
+- resolution fills EVERY "auto" field with a concrete, deterministic value
+  (arch sweep: MoE + dense + a legacy-fallback family);
+- resolved specs round-trip through ``dataclasses.replace``;
+- explicit overrides beat "auto" field by field;
+- the resolved spec — not Engine flag defaults — is what reaches the
+  engine (the acceptance criterion of the redesign);
+- the old per-knob ``Engine(...)`` / ``Scheduler(token_budget=)`` kwargs
+  still work for their one-release window, but warn.
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.topology import CLUSTERS
+from repro.kernels.policy import KernelPolicy
+from repro.models.model import init_params
+from repro.serving.api import AUTO, LLM, ResolvedServeSpec, ServeSpec
+from repro.serving.engine import Engine
+from repro.serving.scheduler import Scheduler
+
+# one MoE, one dense, one family the unified engine serves via the
+# internal legacy fallback (ssm) — resolution must work for all of them
+ARCH_SWEEP = ("phi3.5-moe-42b", "smollm-360m", "rwkv6-1.6b")
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = C.get_reduced("smollm-360m")
+    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    return cfg, params
+
+
+@pytest.mark.parametrize("arch", ARCH_SWEEP)
+def test_resolution_concrete_and_deterministic(arch):
+    spec = ServeSpec(arch=arch, prompt_len=32, max_new_tokens=8)
+    r1 = spec.resolve()
+    r2 = spec.resolve()
+    for f in ("chunk", "token_budget", "max_batch", "max_len"):
+        v = getattr(r1, f)
+        assert isinstance(v, int) and v > 0, (f, v)
+    assert r1.dispatch in ("dropless", "capacity")
+    assert isinstance(r1.kernels, KernelPolicy)
+    assert r1.strategy in ("mixserve", "dp_ep", "pure_ep", "pure_tp")
+    assert r1.cluster in CLUSTERS
+    assert r1 == r2                                 # deterministic
+    # every knob has a provenance entry, and auto fields say so
+    assert set(r1.provenance) >= set(ResolvedServeSpec._KNOBS)
+    for f in ("strategy", "chunk", "token_budget", "max_batch", "max_len",
+              "kernels", "dispatch"):
+        assert r1.provenance[f].startswith("auto:"), (f, r1.provenance[f])
+    assert arch in r1.describe()                    # printable report
+
+
+@pytest.mark.parametrize("arch", ARCH_SWEEP)
+def test_resolved_spec_roundtrips_replace(arch):
+    r = ServeSpec(arch=arch).resolve()
+    assert dataclasses.replace(r) == r
+    bumped = dataclasses.replace(r, chunk=r.chunk + 1)
+    assert bumped.chunk == r.chunk + 1
+    assert dataclasses.replace(bumped, chunk=r.chunk) == r
+
+
+def test_explicit_overrides_beat_auto():
+    spec = ServeSpec(arch="phi3.5-moe-42b", strategy="mixserve",
+                     kernels="off", dispatch="capacity", chunk=5,
+                     token_budget=11, max_batch=3, max_len=80)
+    r = spec.resolve()
+    assert (r.chunk, r.token_budget, r.max_batch, r.max_len) == (5, 11, 3, 80)
+    assert r.dispatch == "capacity" and not r.kernels.any_enabled
+    assert r.strategy == "mixserve"
+    for f in ("strategy", "kernels", "dispatch", "chunk", "token_budget",
+              "max_batch", "max_len"):
+        assert r.provenance[f].startswith("explicit"), f
+    # the plan carries the explicit kernel/dispatch choice
+    assert r.plan.dispatch_mode == "capacity"
+    assert r.plan.kernels == KernelPolicy.off()
+
+
+def test_spec_field_validation():
+    with pytest.raises(ValueError):
+        ServeSpec(arch="smollm-360m", dispatch="bogus")
+    with pytest.raises(ValueError):
+        ServeSpec(arch="smollm-360m", strategy="bogus")
+    with pytest.raises(ValueError):
+        ServeSpec(arch="smollm-360m", chunk="sixteen")
+    with pytest.raises(ValueError):
+        ServeSpec().resolve()          # no arch, no cfg
+
+
+def test_explicit_cluster_name_and_mismatch():
+    r = ServeSpec(arch="smollm-360m", cluster="h20x16").resolve()
+    assert r.cluster == "h20x16" and r.provenance["cluster"] == "explicit"
+    with pytest.raises(KeyError):
+        ServeSpec(arch="smollm-360m", cluster="nope").resolve()
+
+
+def test_resolved_spec_reaches_engine(smollm):
+    """Acceptance: the analyzer/cost-model-resolved knobs — not the old
+    Engine flag defaults (max_batch=8/max_len=512/chunk=16, budget
+    B*chunk) — are what configures the engine and scheduler."""
+    cfg, params = smollm
+    r = ServeSpec(arch="smollm-360m", prompt_len=16,
+                  max_new_tokens=4).resolve()
+    eng = Engine(cfg, params, spec=r)
+    assert eng.spec is r
+    assert eng.max_batch == r.max_batch and eng.max_len == r.max_len
+    assert eng.chunk == r.chunk
+    assert eng.plan is r.plan
+    assert eng.plan.dispatch_mode == r.dispatch == "dropless"
+    assert eng.plan.kernels == r.kernels
+    assert eng.temperature == r.temperature
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # no deprecation on the new API
+        sched = Scheduler(eng)
+    assert sched.token_budget == r.token_budget
+    # the resolved values are live, not the legacy defaults
+    assert eng.max_len != 512
+    assert sched.token_budget != eng.max_batch * eng.chunk
+
+
+def test_engine_kwargs_deprecation_shim(smollm):
+    """Old per-knob kwargs still work — and warn — for one release."""
+    cfg, params = smollm
+    with pytest.warns(DeprecationWarning):
+        eng = Engine(cfg, params, max_batch=3, max_len=48, chunk=4)
+    assert (eng.max_batch, eng.max_len, eng.chunk) == (3, 48, 4)
+    assert eng.spec.token_budget == 12          # the legacy B*chunk default
+    assert eng.spec.provenance["max_batch"].startswith("engine-kwargs")
+    with pytest.warns(DeprecationWarning):
+        sched = Scheduler(eng, token_budget=7)
+    assert sched.token_budget == 7              # deprecated kwarg still wins
+
+
+def test_engine_rejects_spec_plus_kwargs(smollm):
+    cfg, params = smollm
+    r = ServeSpec(arch="smollm-360m", max_batch=2, max_len=64).resolve()
+    with pytest.raises(ValueError):
+        Engine(cfg, params, spec=r, max_batch=4)
+
+
+def test_llm_generate_and_stream_agree(smollm):
+    cfg, params = smollm
+    r = ServeSpec(arch="smollm-360m", prompt_len=16, max_new_tokens=4,
+                  max_batch=2, max_len=64, chunk=4).resolve()
+    prompts = [np.arange(5, dtype=np.int32) % cfg.vocab_size,
+               np.arange(7, dtype=np.int32) % cfg.vocab_size]
+
+    llm = LLM.from_spec(r, cfg=cfg, params=params)
+    outs = llm.generate(prompts, max_new_tokens=4)
+    assert [len(o) for o in outs] == [4, 4]
+
+    llm2 = LLM.from_spec(r, cfg=cfg, params=params)
+    rids = [llm2.submit(p, 4) for p in prompts]
+    got = {rid: [] for rid in rids}
+    for rid, tok in llm2.stream():
+        got[rid].append(tok)
+    assert [got[rid] for rid in rids] == outs
+
+
+def test_llm_generate_after_submit_does_not_crash(smollm):
+    """generate() drains the queue: an earlier submit()'s request must not
+    crash the bookkeeping (regression: KeyError on the foreign rid)."""
+    cfg, params = smollm
+    r = ServeSpec(arch="smollm-360m", prompt_len=16, max_new_tokens=4,
+                  max_batch=2, max_len=64, chunk=4).resolve()
+    llm = LLM.from_spec(r, cfg=cfg, params=params)
+    llm.submit(np.arange(4, dtype=np.int32) % cfg.vocab_size, 3)
+    outs = llm.generate([np.arange(6, dtype=np.int32) % cfg.vocab_size],
+                        max_new_tokens=2)
+    assert [len(o) for o in outs] == [2]
+    assert llm.engine.n_active == 0 and not llm._queue
+
+
+def test_llm_stream_terminates_on_legacy_fallback_single_token():
+    """Legacy-fallback families (blocking prefill emits the first token in
+    admit): a max_new_tokens=1 request must finish and free its slot
+    instead of spinning stream() forever (regression)."""
+    cfg = C.get_reduced("rwkv6-1.6b")
+    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    r = ServeSpec(arch="rwkv6-1.6b", prompt_len=8, max_new_tokens=1,
+                  max_batch=1, max_len=64).resolve()
+    llm = LLM.from_spec(r, cfg=cfg, params=params)
+    assert llm.engine.legacy
+    outs = llm.generate([np.arange(5, dtype=np.int32) % cfg.vocab_size],
+                        max_new_tokens=1)
+    assert [len(o) for o in outs] == [1]
+    assert llm.engine.n_active == 0
+
+
+def test_llm_from_plain_spec_builds_reduced_engine():
+    llm = LLM.from_spec(ServeSpec(arch="smollm-360m", prompt_len=8,
+                                  max_new_tokens=2, max_batch=1,
+                                  max_len=32))
+    assert llm.cfg.name == C.get_reduced("smollm-360m").name
+    assert llm.engine.max_batch == 1 and llm.engine.max_len == 32
+    out = llm.generate([np.arange(4, dtype=np.int32)], max_new_tokens=2)
+    assert len(out[0]) == 2
+
+
+def test_serve_cli_builds_auto_spec_and_reduced_toggle():
+    """serve.py flags land on the spec; --reduced is finally disableable."""
+    from repro.launch import serve as S
+    args = S.parse_args(["--arch", "phi3.5-moe-42b"])
+    assert args.reduced is True
+    spec = S.build_spec(args)
+    for f in ("chunk", "token_budget", "max_batch", "max_len",
+              "kernels", "dispatch", "strategy"):
+        assert getattr(spec, f) == AUTO, f
+    args2 = S.parse_args(["--arch", "phi3.5-moe-42b", "--no-reduced",
+                          "--chunk", "8", "--dispatch", "capacity"])
+    assert args2.reduced is False
+    spec2 = S.build_spec(args2)
+    assert spec2.reduced is False
+    assert spec2.chunk == 8 and spec2.dispatch == "capacity"
+
+
+def test_cluster_for_mesh_explicit_and_fallback():
+    """launch.auto.cluster_for_mesh: explicit ClusterSpec/name wins and is
+    validated against the mesh size; the v5e heuristic is the fallback."""
+    from repro.core.topology import TPU_V5E_POD
+    from repro.launch.auto import cluster_for_mesh
+
+    class FakeDevices:
+        def __init__(self, size):
+            self.size = size
+
+    class FakeMesh:
+        def __init__(self, size):
+            self.devices = FakeDevices(size)
+
+    assert cluster_for_mesh(FakeMesh(256)) is TPU_V5E_POD
+    assert cluster_for_mesh(FakeMesh(512)).name == "v5e-2pods-512"
+    assert cluster_for_mesh(FakeMesh(16), "h20x16").name == "h20x16"
+    assert cluster_for_mesh(FakeMesh(16), CLUSTERS["h20x16"]).name == "h20x16"
+    with pytest.raises(ValueError):
+        cluster_for_mesh(FakeMesh(8), "h20x16")     # 16 devices != 8
