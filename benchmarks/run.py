@@ -55,6 +55,23 @@ def _emit_json(name: str, rows: list, meta: dict | None = None) -> None:
         json.dump(payload, f, indent=1)
 
 
+def _check_serve_mixed_meta(meta: dict | None) -> None:
+    """The serve_mixed artifact must carry the graceful-degradation
+    counters for every scenario — a missing block means the robustness
+    layer got disconnected from the benchmark gate."""
+    rb = (meta or {}).get("robustness")
+    if not rb:
+        raise RuntimeError(
+            "BENCH_serve_mixed meta has no 'robustness' block "
+            "(shed/preempt/cancel/deadline-miss/fault counters)")
+    for scen, counters in rb.items():
+        missing = set(serve_micro.ROBUSTNESS_KEYS) - set(counters)
+        if missing:
+            raise RuntimeError(
+                f"BENCH_serve_mixed meta: scenario {scen!r} is missing "
+                f"robustness counters {sorted(missing)}")
+
+
 def main() -> int:
     argv = sys.argv[1:]
     quick = "--quick" in argv
@@ -69,6 +86,8 @@ def main() -> int:
             out = runner()
             rows, meta = ((out["rows"], out.get("meta"))
                           if isinstance(out, dict) else (list(out), None))
+            if name == "serve_mixed":
+                _check_serve_mixed_meta(meta)
             for row, v, derived in rows:
                 print(f"{row},{v:.1f},{derived}")
             _emit_json(name, rows, meta)

@@ -20,6 +20,12 @@ decode traffic.  Both ``run_quick`` and ``run_mixed`` record the kernel
 invocation counters of a ``KernelPolicy.all_on()`` engine and FAIL if the
 jitted mixed step did not trace the ragged ``flash_chunk`` attention
 kernel — no silent jnp fallback on the hot path.
+
+``run_mixed`` additionally records per-scenario ROBUSTNESS counters
+(shed/preempt/cancel/deadline-miss/fault, ``ServeMetrics.robustness()``)
+in the artifact meta, including a chaos scenario with injected NaN and
+straggler faults — ``benchmarks.run --quick`` fails if the counters are
+missing, so the graceful-degradation path cannot silently rot.
 """
 
 from __future__ import annotations
@@ -30,7 +36,14 @@ import jax.numpy as jnp
 import repro.configs as C
 from repro.models.model import init_params
 from repro.serving.api import LLM, ServeSpec
-from repro.serving.scheduler import mixed_workload, synthetic_workload
+from repro.serving.faults import Fault
+from repro.serving.scheduler import (mixed_workload, synthetic_workload,
+                                     tiered_workload)
+
+# every scenario's meta must carry these graceful-degradation counters —
+# ``benchmarks.run --quick`` FAILS if they go missing from the artifact
+ROBUSTNESS_KEYS = ("n_shed", "n_preempted", "n_cancelled",
+                   "n_deadline_miss", "n_faults", "deadline_miss_p99")
 
 
 def run_quick() -> list:
@@ -86,11 +99,13 @@ def run_quick() -> list:
 
 
 def _spec_llm(arch, cfg, params, *, max_batch=4, max_len=192, chunk=16,
-              kernel_policy=None, prompt_len=96, max_new_tokens=8):
+              kernel_policy=None, prompt_len=96, max_new_tokens=8,
+              faults=()):
     """One engine through the ServeSpec door; returns (llm, resolved)."""
     spec = ServeSpec(arch=arch, kernels=kernel_policy or "auto",
                      chunk=chunk, max_batch=max_batch, max_len=max_len,
-                     prompt_len=prompt_len, max_new_tokens=max_new_tokens)
+                     prompt_len=prompt_len, max_new_tokens=max_new_tokens,
+                     faults=faults)
     resolved = spec.resolve(C.get(arch))
     return LLM.from_spec(resolved, cfg=cfg, params=params), resolved
 
@@ -126,17 +141,40 @@ def run_mixed(quick: bool = False):
             arrival_rate=64.0, seed=0),
     }
     provenance = {}
+    robustness = {}
     for scen, mk in scenarios.items():
         llm, resolved = _spec_llm(arch, cfg, params,
                                   chunk=8 if quick else 16,
                                   prompt_len=long_len)
         provenance[scen] = resolved.as_meta()
         m = llm.serve(list(mk())).metrics()
+        robustness[scen] = m.robustness()
         rows.append((
             f"serve_mixed/{arch}/{scen}/unified/ttft_p99",
             m.ttft_p99 * 1e6,
             f"itl_p99={m.itl_p99*1e3:.2f}ms "
             f"n={m.n_requests} incomplete={m.n_incomplete}"))
+
+    # chaos scenario: a priority/deadline-tiered workload under injected
+    # NaN and straggler faults — the robustness counters in the artifact
+    # must show the degradation machinery actually firing, not just exist
+    llm, resolved = _spec_llm(arch, cfg, params, max_batch=2, max_len=96,
+                              chunk=8, prompt_len=24, max_new_tokens=6,
+                              faults=(Fault(kind="nan", rid=1, every=1,
+                                            n_max=1),
+                                      Fault(kind="latency", every=8, ms=2.0)))
+    provenance["chaos"] = resolved.as_meta()
+    m = llm.serve(list(tiered_workload(
+        8 if quick else 14, prompt_len=14, max_new_tokens=6,
+        vocab=cfg.vocab_size, arrival_rate=300.0, seed=2,
+        hi_every=3, hi_priority=5, hi_deadline_s=2.0))).metrics()
+    robustness["chaos"] = m.robustness()
+    if m.n_faults < 1:
+        raise RuntimeError(
+            "chaos scenario: injected NaN fault did not surface in the "
+            f"robustness counters ({m.robustness()})")
+    rows.append((f"serve_mixed/{arch}/chaos/faults", float(m.n_faults),
+                 m.row()))
 
     # kernelized gate: the same mixed shape with every Pallas kernel on
     # (interpret mode on CPU — a small workload, the counters are the point)
@@ -156,7 +194,8 @@ def run_mixed(quick: bool = False):
     rows.append((f"serve_mixed/{arch}/kernels/flash_chunk", float(n_flash),
                  f"traced call sites (all_on engine) "
                  f"incomplete={m.n_incomplete}"))
-    return {"rows": rows, "meta": {"serve_spec": provenance}}
+    return {"rows": rows,
+            "meta": {"serve_spec": provenance, "robustness": robustness}}
 
 
 def run_mixed_quick():

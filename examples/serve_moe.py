@@ -4,9 +4,16 @@ batching engine on an MoE model (the paper's serving scenario).
 The offline stage resolves a full ``ServeSpec`` on each of the paper's two
 evaluation clusters (H20 x16, Ascend 910B x32) — strategy from the
 analyzer, chunk/token-budget/batch from the cost model — then the ``LLM``
-facade replays a Poisson request stream against the resolved configuration
-on this host and reports measured TTFT / ITL / throughput next to the
+facade replays a request stream against the resolved configuration on
+this host and reports measured TTFT / ITL / throughput next to the
 theoretical estimates.
+
+The online stream is PRIORITY/DEADLINE-TIERED (every third request is
+high-priority with a deadline, the rest best-effort), so the run also
+exercises the robustness tier — priority preemption, deadline
+enforcement, overload shedding — and prints the shed/preempt/deadline
+counters next to the latency indicators (docs/serving.md, "Robustness &
+degradation").
 
 Run:  PYTHONPATH=src python examples/serve_moe.py [--arch phi3.5-moe-42b]
 """
@@ -16,7 +23,7 @@ import argparse
 import repro.configs as C
 from repro.core.topology import ASCEND_910B_CLUSTER, H20_CLUSTER
 from repro.serving.api import LLM, ServeSpec
-from repro.serving.scheduler import synthetic_workload
+from repro.serving.scheduler import tiered_workload
 
 
 def main():
@@ -25,6 +32,8 @@ def main():
                     choices=[a for a in C.ARCH_IDS])
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=4.0)
+    ap.add_argument("--deadline", type=float, default=5.0,
+                    help="deadline (s) carried by the high-priority tier")
     args = ap.parse_args()
 
     spec = ServeSpec(arch=args.arch, prompt_len=32, max_new_tokens=12,
@@ -40,18 +49,28 @@ def main():
               f"itl={best.ind.itl*1e3:.1f}ms "
               f"thr={best.ind.throughput:.0f}tok/s")
 
-    # online stage: serve the default-cluster resolution on this host
+    # online stage: serve the default-cluster resolution on this host with
+    # a two-tier workload — every third request is high-priority with a
+    # deadline, the rest best-effort (preemptible, sheddable under load)
     resolved = spec.resolve()
     print("\n== resolved serving spec (provenance) ==")
     print(resolved.describe())
     llm = LLM.from_spec(resolved)
-    sched = llm.serve(synthetic_workload(
+    reqs = list(tiered_workload(
         args.requests, prompt_len=32, max_new_tokens=12,
-        vocab=llm.cfg.vocab_size, arrival_rate=args.rate))
+        vocab=llm.cfg.vocab_size, arrival_rate=args.rate,
+        hi_every=3, hi_priority=10, hi_deadline_s=args.deadline))
+    n_hi = sum(1 for r in reqs if r.priority > 0)
+    print(f"\n== online stage: {len(reqs)} requests "
+          f"({n_hi} high-priority w/ {args.deadline:.1f}s deadline, "
+          f"{len(reqs) - n_hi} best-effort) ==")
+    sched = llm.serve(reqs)
     m = sched.metrics()
     print(f"\n== measured on this host (reduced {llm.cfg.name}) ==")
     print(m.row())
-    assert len(sched.finished) == args.requests
+    rb = m.robustness()
+    print("robustness: " + " ".join(f"{k}={v}" for k, v in rb.items()))
+    assert m.n_incomplete == 0, "every request must reach a terminal state"
 
 
 if __name__ == "__main__":

@@ -23,6 +23,10 @@ instead of user homework:
                 slot prefill at once and spike ITL)
   max_len       the workload envelope l_in + l_out (+ frontend tokens),
                 rounded up to the cache-row granule
+  overload      bounded admission queue: cap = a wait-time bound divided by
+                the Eq. 4-6 predicted per-request service time, plus the
+                shed policy (deadline-infeasible-first) — priced
+                *degradation*, not just priced performance
 
 Everything here is deterministic: same (spec, model, cluster) in, same
 resolved knobs out.  No serving imports — ``serving.api`` composes these
@@ -31,6 +35,7 @@ helpers, ``launch.auto`` reuses the strategy mapping.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Union
 
 from repro.configs.base import ModelConfig
@@ -50,6 +55,12 @@ CHUNK_CANDIDATES = (4, 8, 16, 32, 64)
 AUTO_BATCH_CAP = 8
 # max_len is allocated in cache-row granules
 LEN_GRANULE = 64
+# auto overload: the bounded admission queue holds at most this many
+# seconds of predicted work (queue cap = bound / est. per-request service
+# time) — generous so light traffic never sheds, finite so overload
+# degrades to bounded latency instead of unbounded queueing
+OVERLOAD_WAIT_BOUND_S = 30.0
+_SHED_POLICIES = ("reject-newest", "deadline-first")
 
 
 def resolve_cluster(cluster: Union[str, ClusterSpec, None] = None, *,
@@ -146,6 +157,55 @@ def auto_token_budget(max_batch: int, chunk: int) -> tuple[int, str]:
                                f"+ one {chunk}-token prefill chunk)")
 
 
+@dataclasses.dataclass(frozen=True)
+class OverloadPolicy:
+    """Bounded-admission policy: how the scheduler degrades under pressure.
+
+    ``queue_cap`` bounds the admission queue; on overflow ``shed`` picks
+    the victim — "reject-newest" drops the incoming request,
+    "deadline-first" prefers a queued request whose deadline is already
+    infeasible against ``est_request_s`` (the cost model's Eq. 4-6
+    prediction of one request's service time), falling back to
+    reject-newest when every queued deadline is still feasible.
+    """
+
+    queue_cap: int
+    shed: str = "reject-newest"
+    est_request_s: float = 0.0        # predicted per-request service time
+
+    def __post_init__(self):
+        if self.queue_cap < 1:
+            raise ValueError(f"queue_cap must be >= 1, got {self.queue_cap}")
+        if self.shed not in _SHED_POLICIES:
+            raise ValueError(f"shed must be one of {_SHED_POLICIES}, "
+                             f"got {self.shed!r}")
+
+    def describe(self) -> str:
+        est = f", est {self.est_request_s*1e3:.1f}ms/req" \
+            if self.est_request_s else ""
+        return f"queue_cap={self.queue_cap} shed={self.shed}{est}"
+
+
+def auto_overload(cfg: ModelConfig, strat: cm.Strategy, cluster: ClusterSpec,
+                  *, batch: int, l_in: int, l_out: int,
+                  wait_bound_s: float = OVERLOAD_WAIT_BOUND_S
+                  ) -> tuple[OverloadPolicy, str]:
+    """Queue cap from the Eq. 4-6 token-time estimates: admit at most
+    ``wait_bound_s`` seconds of predicted work, so worst-case queue wait is
+    bounded by construction.  Shed policy is deadline-first — requests that
+    cannot meet their SLO anyway are the cheapest work to drop."""
+    t_tok, t_dec = token_times(cfg, strat, cluster, batch=batch,
+                               l_in=l_in, l_out=l_out)
+    # one request ~ its prefill + its decode steps, amortized over the batch
+    est = (l_in * t_tok * batch + l_out * t_dec) / max(batch, 1)
+    cap = max(2 * batch, int(wait_bound_s / max(est, 1e-6)))
+    cap = min(cap, 100_000)           # finite even for microscopic models
+    policy = OverloadPolicy(queue_cap=cap, shed="deadline-first",
+                            est_request_s=est)
+    return policy, (f"auto:cost-model({wait_bound_s:.0f}s wait bound / "
+                    f"{est*1e3:.2f}ms predicted per request)")
+
+
 def auto_max_len(l_in: int, l_out: int, front: int = 0,
                  granule: int = LEN_GRANULE) -> tuple[int, str]:
     """Cache rows for the workload envelope, rounded to the granule."""
@@ -156,6 +216,7 @@ def auto_max_len(l_in: int, l_out: int, front: int = 0,
 
 
 __all__ = ["AUTO", "ITL_SLACK", "CHUNK_CANDIDATES", "AUTO_BATCH_CAP",
-           "LEN_GRANULE", "resolve_cluster", "plan_name_for",
-           "auto_max_batch", "token_times", "auto_chunk",
-           "auto_token_budget", "auto_max_len"]
+           "LEN_GRANULE", "OVERLOAD_WAIT_BOUND_S", "OverloadPolicy",
+           "resolve_cluster", "plan_name_for", "auto_max_batch",
+           "token_times", "auto_chunk", "auto_token_budget", "auto_overload",
+           "auto_max_len"]

@@ -2,17 +2,22 @@
 
 ``ServeSpec`` is the declarative surface — every knob defaults to "auto"
 and is resolved by the offline analyzer / cost model; ``LLM`` is the
-facade that owns Engine + Scheduler construction.
+facade that owns Engine + Scheduler construction.  The robustness layer
+(request lifecycle, bounded admission, preemption, fault injection) rides
+the same spec: docs/serving.md "Robustness & degradation".
 """
 
-from repro.serving.api import (AUTO, LLM, ResolvedServeSpec, ServeSpec,
-                               spec_from_engine_kwargs)
+from repro.core.resolve import OverloadPolicy
+from repro.serving.api import AUTO, LLM, ResolvedServeSpec, ServeSpec
 from repro.serving.engine import (Engine, PromptTooLongError, Request,
-                                  unified_supported)
-from repro.serving.scheduler import (Scheduler, ServeMetrics, mixed_workload,
-                                     synthetic_workload)
+                                  RequestState, unified_supported)
+from repro.serving.faults import Fault, FaultInjector, InjectedFault
+from repro.serving.scheduler import (Scheduler, ServeMetrics,
+                                     StalledEngineError, mixed_workload,
+                                     synthetic_workload, tiered_workload)
 
-__all__ = ["AUTO", "LLM", "ServeSpec", "ResolvedServeSpec",
-           "spec_from_engine_kwargs", "Engine", "Request",
-           "PromptTooLongError", "unified_supported", "Scheduler",
-           "ServeMetrics", "synthetic_workload", "mixed_workload"]
+__all__ = ["AUTO", "LLM", "ServeSpec", "ResolvedServeSpec", "OverloadPolicy",
+           "Engine", "Request", "RequestState", "PromptTooLongError",
+           "unified_supported", "Fault", "FaultInjector", "InjectedFault",
+           "Scheduler", "ServeMetrics", "StalledEngineError",
+           "synthetic_workload", "mixed_workload", "tiered_workload"]

@@ -18,17 +18,20 @@ On top sits the ``LLM`` facade, which owns Engine + Scheduler construction:
     rid = llm.submit(prompt)                         # or streaming:
     for rid, tok in llm.stream(): ...
 
-``Engine(cfg, params, spec=resolved)`` consumes the resolved spec directly;
-the old per-knob kwargs survive one release as a deprecation shim that
-builds a spec internally (``spec_from_engine_kwargs``).  Resolution always
-analyses the FULL config (the offline stage prices the real model on the
-real cluster); ``reduced`` only selects which weights the local engine
-loads.  Full field/resolution table: docs/api.md.
+``Engine(cfg, params, spec=resolved)`` consumes the resolved spec directly
+(the PR 5 per-knob kwargs shim is gone after its one-release window).
+Resolution always analyses the FULL config (the offline stage prices the
+real model on the real cluster); ``reduced`` only selects which weights the
+local engine loads.  Robustness knobs ride the same surface: ``overload``
+("auto" -> a cost-model-priced bounded admission queue) and ``faults`` (a
+tuple of deterministic fault injections for chaos testing — docs/serving.md
+"Robustness & degradation").  Full field/resolution table: docs/api.md.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Iterator, Optional, Union
 
@@ -39,10 +42,11 @@ from repro.core import analyzer
 from repro.core import cost_model as cm
 from repro.core import resolve as R
 from repro.core.partitioner import NULL_PLAN, ShardingPlan, make_plan
-from repro.core.resolve import AUTO
+from repro.core.resolve import AUTO, OverloadPolicy
 from repro.core.topology import ClusterSpec
 from repro.kernels.policy import KernelPolicy
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine, Request, RequestState
+from repro.serving.faults import Fault, InjectedFault
 from repro.serving.scheduler import Scheduler
 
 _DISPATCH_MODES = (AUTO, "dropless", "capacity")
@@ -81,6 +85,10 @@ class ServeSpec:
     max_new_tokens: int = 32
     arrival_rate: float = 0.0
     objective: str = "balanced"
+    # robustness: bounded admission ("auto" -> cost-model queue cap +
+    # deadline-first shedding) and the deterministic chaos-fault plan
+    overload: Union[str, OverloadPolicy] = AUTO
+    faults: tuple = ()
     # sampling / debug
     temperature: float = 0.0
     seed: int = 0
@@ -98,6 +106,16 @@ class ServeSpec:
             v = getattr(self, f)
             if isinstance(v, str) and v != AUTO:
                 raise ValueError(f"{f} must be an int or 'auto', got {v!r}")
+        if not isinstance(self.overload, OverloadPolicy) \
+                and self.overload != AUTO:
+            raise ValueError("overload must be 'auto' or an OverloadPolicy, "
+                             f"got {self.overload!r}")
+        object.__setattr__(self, "faults", tuple(self.faults))
+        for f in self.faults:
+            if not isinstance(f, Fault):
+                raise ValueError(
+                    f"faults must be serving.faults.Fault instances, "
+                    f"got {f!r}")
 
     # ------------------------------------------------------------------
     def resolve(self, cfg: Optional[ModelConfig] = None,
@@ -209,6 +227,14 @@ class ServeSpec:
             token_budget, prov["token_budget"] = R.auto_token_budget(
                 max_batch, chunk)
 
+        # ---- overload: priced degradation (bounded admission queue) ----
+        if isinstance(self.overload, OverloadPolicy):
+            overload, prov["overload"] = self.overload, "explicit"
+        else:
+            overload, prov["overload"] = R.auto_overload(
+                cfg, cost_strat, cluster_spec, batch=max_batch,
+                l_in=l_in, l_out=l_out)
+
         plan = make_plan(name, mesh, comm_algo=comm_algo, fsdp=fsdp, sp=sp,
                          kernels=kernels, dispatch=dispatch)
 
@@ -219,6 +245,7 @@ class ServeSpec:
             token_budget=token_budget, max_batch=max_batch, max_len=max_len,
             prompt_len=l_in, max_new_tokens=l_out,
             arrival_rate=self.arrival_rate, objective=self.objective,
+            overload=overload, faults=self.faults,
             temperature=self.temperature, seed=self.seed,
             debug_logits=self.debug_logits, plan=plan, report=report,
             provenance=prov)
@@ -248,16 +275,18 @@ class ResolvedServeSpec:
     max_new_tokens: int
     arrival_rate: float
     objective: str
+    overload: OverloadPolicy
     temperature: float
     seed: int
     debug_logits: bool
+    faults: tuple = ()
     plan: ShardingPlan = NULL_PLAN
     report: Optional[analyzer.AnalyzerReport] = dataclasses.field(
         default=None, compare=False, repr=False)
     provenance: dict = dataclasses.field(default_factory=dict)
 
     _KNOBS = ("strategy", "kernels", "dispatch", "chunk", "token_budget",
-              "max_batch", "max_len", "cluster")
+              "max_batch", "max_len", "cluster", "overload")
 
     def describe(self) -> str:
         """The provenance report: every knob, its value, and its source."""
@@ -272,7 +301,7 @@ class ResolvedServeSpec:
             v = getattr(self, f)
             if f == "strategy" and self.strategy_detail:
                 v = f"{v} ({self.strategy_detail})"
-            elif isinstance(v, KernelPolicy):
+            elif isinstance(v, (KernelPolicy, OverloadPolicy)):
                 v = v.describe()
             rows.append((f, str(v), self.provenance.get(f, "?")))
         w0 = max(len(r[0]) for r in rows)
@@ -283,47 +312,16 @@ class ResolvedServeSpec:
 
     def as_meta(self) -> dict:
         """JSON-able provenance block (benchmark artifacts / logs)."""
+        resolved = {}
+        for f in self._KNOBS:
+            v = getattr(self, f)
+            resolved[f] = v.describe() \
+                if isinstance(v, (KernelPolicy, OverloadPolicy)) else v
         return {
-            "resolved": {f: (getattr(self, f).describe()
-                             if isinstance(getattr(self, f), KernelPolicy)
-                             else getattr(self, f)) for f in self._KNOBS},
+            "resolved": resolved,
             "provenance": dict(self.provenance),
+            "faults": [f.describe() for f in self.faults],
         }
-
-
-def spec_from_engine_kwargs(cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN,
-                            *, max_batch: int = 8, max_len: int = 512,
-                            temperature: float = 0.0, seed: int = 0,
-                            kernel_policy: Optional[KernelPolicy] = None,
-                            dispatch_mode: Optional[str] = None,
-                            chunk: int = 16,
-                            debug_logits: bool = False) -> ResolvedServeSpec:
-    """Deprecation shim: the pre-ServeSpec ``Engine(...)`` kwargs, folded
-    into a ResolvedServeSpec with the old defaults and precedence rules
-    (explicit kwarg > plan field > KernelPolicy.auto()/plan default)."""
-    if kernel_policy is None:
-        # respect a policy the caller already put on the plan (make_plan
-        # kernels=...); only a plan with everything off falls to auto()
-        kernel_policy = (plan.kernels if plan.kernels.any_enabled
-                         else KernelPolicy.auto())
-    if kernel_policy != plan.kernels:
-        plan = dataclasses.replace(plan, kernels=kernel_policy)
-    if dispatch_mode is not None and dispatch_mode != plan.dispatch_mode:
-        # explicit argument wins over the plan; the plan default ("auto")
-        # already resolves to the dropless inference dispatch
-        plan = dataclasses.replace(plan, dispatch_mode=dispatch_mode)
-    max_batch, max_len = int(max_batch), int(max_len)
-    chunk = max(1, min(int(chunk), max_len))
-    src = "engine-kwargs (deprecated; build a ServeSpec)"
-    return ResolvedServeSpec(
-        arch=cfg.name, reduced=True, cluster="(unresolved)",
-        strategy="(engine-kwargs)", strategy_detail="",
-        kernels=kernel_policy, dispatch=plan.dispatch_mode, chunk=chunk,
-        token_budget=max_batch * chunk, max_batch=max_batch, max_len=max_len,
-        prompt_len=0, max_new_tokens=0, arrival_rate=0.0,
-        objective="balanced", temperature=temperature, seed=seed,
-        debug_logits=debug_logits, plan=plan, report=None,
-        provenance={f: src for f in ResolvedServeSpec._KNOBS})
 
 
 class LLM:
@@ -385,31 +383,77 @@ class LLM:
         return cls(cfg, params, resolved, embeds_fn=embeds_fn, dtype=dtype)
 
     # -- streaming -------------------------------------------------------
-    def submit(self, prompt, max_new_tokens: Optional[int] = None) -> int:
-        """Queue a prompt; returns its request id.  Validates eagerly."""
+    def submit(self, prompt, max_new_tokens: Optional[int] = None, *,
+               priority: int = 0,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue a prompt; returns its request id.  Validates eagerly
+        (``PromptTooLongError`` raised here never corrupts already-queued
+        requests).  ``priority`` orders nothing in the plain stream() loop
+        but rides into Scheduler-driven serving; ``deadline_s`` is seconds
+        from NOW — an expired request is cancelled mid-flight."""
         if max_new_tokens is None:
             max_new_tokens = self.spec.max_new_tokens or 32
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens)
+                      max_new_tokens=max_new_tokens,
+                      arrival=time.perf_counter(),
+                      priority=priority, deadline_s=deadline_s)
         self.engine.validate(req)
         self._queue.append(req)
         return rid
 
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or running request.  Frees its engine slot
+        immediately; a ``stream()`` in progress simply stops yielding its
+        tokens.  Returns False for unknown/already-finished rids."""
+        for req in self._queue:
+            if req.rid == rid:
+                self._queue.remove(req)
+                req.state = RequestState.CANCELLED
+                req.error = "cancelled"
+                req.t_done = time.perf_counter()
+                self.engine.events["cancel"] += 1
+                return True
+        return self.engine.cancel(rid) is not None
+
     def stream(self) -> Iterator[tuple[int, int]]:
-        """Drive unified steps, yielding (rid, token) as tokens land."""
+        """Drive unified steps, yielding (rid, token) as tokens land.
+
+        Lifecycle-aware: cancelled/failed/deadline-expired requests stop
+        yielding and free their slots; injected admission faults shed
+        exactly the targeted request; later rids keep completing.
+        """
         emitted: dict[int, int] = {}
         live: dict[int, Request] = {}
         while self._queue or self.engine.n_active:
             while self._queue and self.engine.free_slots():
                 req = self._queue[0]
-                if not self.engine.admit(req):
-                    break
+                try:
+                    if not self.engine.admit(req):
+                        break
+                except InjectedFault as e:
+                    self._queue.popleft()
+                    req.state = RequestState.SHED
+                    req.error = str(e)
+                    req.t_done = time.perf_counter()
+                    continue
                 self._queue.popleft()
                 live[req.rid] = req
+            now = time.perf_counter()
+            for req in list(live.values()):
+                if not req.terminal and not req.done and now > req.deadline:
+                    slot = self.engine.slot_of(req.rid)
+                    if slot is not None:
+                        self.engine.release(
+                            slot, RequestState.CANCELLED,
+                            error="deadline expired mid-flight",
+                            reason="deadline_miss")
             self.engine.step(self.spec.token_budget)
             for req in list(live.values()):
+                if req.terminal and req.state != RequestState.DONE:
+                    del live[req.rid]       # cancelled / failed / shed
+                    continue
                 n0 = emitted.get(req.rid, 0)
                 for tok in req.out_tokens[n0:]:
                     yield req.rid, int(tok)
@@ -442,5 +486,5 @@ class LLM:
         return sched
 
 
-__all__ = ["AUTO", "ServeSpec", "ResolvedServeSpec",
-           "spec_from_engine_kwargs", "LLM"]
+__all__ = ["AUTO", "ServeSpec", "ResolvedServeSpec", "OverloadPolicy",
+           "Fault", "LLM"]

@@ -4,52 +4,56 @@ KV cache.
 Default path — ONE jitted program (the unified mixed prefill/decode step):
 
   unified_fn(params, tokens(B, chunk), q_lens(B,), cache, key)
-      -> (next_token(B,), last_logits(B, V), step_logits, cache)
+      -> (next_token(B,), last_logits(B, V), step_logits, cache, bad(B,))
   (step_logits = every row's (B, chunk, V) logits under ``debug_logits``,
-   else None — the hot path runs the LM head only on last valid rows)
+   else None — the hot path runs the LM head only on last valid rows;
+   bad[i] flags a non-finite sampled-logits row, the NaN/Inf quarantine
+   signal)
 
 Every iteration each slot contributes ``q_lens[i] ∈ {0, 1, …, chunk}``
 tokens against the fixed (B, chunk) buffer: a decoding slot contributes its
 1 sampled token, a prefilling slot contributes the next chunk of its
-prompt, an idle slot contributes 0.  Admission is just bookkeeping (the
-prompt goes into the slot's pending queue and the slot's cache length is
-zeroed) — no blocking prefill, so a long prompt never stalls the decode
-slots (Sarathi-style chunked prefill, finally wired into the online
-engine).  Ragged tails are masked at every level: per-slot cache writes
-drop rows past q_lens[i], attention masks keys past
-``length[i] + q_lens[i]``, and — because the default dropless MoE dispatch
-is count-independent — pad rows cannot perturb any other slot's logits
-(see docs/serving.md and docs/dispatch.md).
+pending tokens, an idle slot contributes 0.  Admission is just bookkeeping
+(the slot's pending buffer is ``prompt + tokens generated so far`` — the
+recompute-on-resume suffix is what makes preemption exact — and the slot's
+cache length is zeroed); no blocking prefill, so a long prompt never stalls
+the decode slots.  Ragged tails are masked at every level (docs/serving.md,
+docs/dispatch.md).
+
+Robustness (docs/serving.md "Robustness & degradation"):
+
+- every ``Request`` carries a lifecycle ``state``
+  (QUEUED/RUNNING/DONE/CANCELLED/SHED/FAILED/PREEMPTED), a ``priority``
+  and an optional ``deadline_s``;
+- ``release``/``cancel`` free a slot mid-decode (deadline kills, user
+  cancellation), ``preempt`` evicts a slot for recompute-on-resume (the
+  vLLM recompute strategy — works on the dense per-slot cache today and
+  carries over verbatim to paged KV);
+- a NaN/Inf guard on the sampled-logits rows quarantines exactly the
+  offending slot (state FAILED) instead of propagating;
+- a ``FaultInjector`` (``repro.serving.faults``, wired through
+  ``ServeSpec.faults``) deterministically injects latency spikes, NaN
+  rows, admit failures and clock skew for chaos testing.
 
 Legacy path — the pre-unified two-program engine (bucket-padded blocking
-prefill in ``admit`` + a separate decode program).  The public escape
-hatch (``legacy=True`` / ``--legacy-engine`` / env
-``REPRO_LEGACY_ENGINE=1``) was retired after its one-release window (PR 3
--> PR 4); the path now exists ONLY for families the unified step cannot
-serve — ``unified_supported`` returns False for recurrent state (ssm),
-hybrid ring buffers, whisper enc-dec and stub-frontend models, whose
-per-row state cannot mask a ragged tail — and the engine falls back to it
-automatically for exactly those configs.
+prefill in ``admit`` + a separate decode program) survives ONLY for
+families the unified step cannot serve (``unified_supported`` False:
+recurrent state, hybrid ring buffers, enc-dec/stub frontends).
 
-This is the "online stage" host of MixServe, configured by ONE object: a
-``repro.serving.api.ResolvedServeSpec`` (``Engine(cfg, params, spec=...)``)
-carrying the analyzer-selected ShardingPlan, the ``KernelPolicy`` (default
-``auto()`` = Pallas kernels on TPU backends — for MoE archs the
-``topk_gate`` / fused-permute / grouped-GEMM dropless pipeline; ``chunk ==
-1`` runs the Pallas ``flash_decode`` attention, ``chunk > 1`` the ragged
-``flash_chunk`` kernel, see docs/kernels.md), the MoE ``dispatch`` mode
-(dropless is what makes the mixed batch safe), and the
-chunk/token-budget/slot envelope the cost model resolved.  The old
-per-knob kwargs (``max_batch=``, ``chunk=``, ``kernel_policy=``, ...)
-survive one release as a deprecation shim that folds them into a spec
-internally — see docs/api.md.
+The engine is configured by ONE object: a
+``repro.serving.api.ResolvedServeSpec`` (``Engine(cfg, params, spec)``)
+carrying the analyzer-selected ShardingPlan, the ``KernelPolicy``, the MoE
+``dispatch`` mode, the chunk/token-budget/slot envelope, the overload
+policy and the fault plan.  The PR 5 per-knob kwargs shim
+(``max_batch=``, ``chunk=``, ...) has been removed after its one-release
+window — build a ``ServeSpec`` and resolve it (docs/api.md).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
+from collections import Counter
 from typing import Callable, Optional
 
 import jax
@@ -57,14 +61,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.partitioner import NULL_PLAN, ShardingPlan
-from repro.kernels.policy import KernelPolicy
 from repro.models.model import forward, init_cache
+from repro.serving.faults import FaultInjector, InjectedFault
 from repro.serving.kv_cache import insert_slot, with_lengths
 
 
 class PromptTooLongError(ValueError):
     """Prompt (+ frontend tokens + generation budget) cannot fit the cache."""
+
+
+class RequestState:
+    """Request lifecycle.  Terminal states never transition again;
+    PREEMPTED requests re-enter RUNNING when re-admitted (recompute)."""
+
+    QUEUED = "QUEUED"
+    RUNNING = "RUNNING"
+    DONE = "DONE"
+    CANCELLED = "CANCELLED"
+    SHED = "SHED"
+    FAILED = "FAILED"
+    PREEMPTED = "PREEMPTED"
+
+    TERMINAL = frozenset({DONE, CANCELLED, SHED, FAILED})
 
 
 @dataclasses.dataclass
@@ -73,7 +91,12 @@ class Request:
     prompt: np.ndarray                  # (s,) int32 token ids
     max_new_tokens: int = 32
     arrival: float = 0.0
-    # filled by the engine:
+    priority: int = 0                   # higher = more important
+    deadline_s: Optional[float] = None  # seconds after arrival; None = none
+    # filled by the engine / scheduler:
+    state: str = RequestState.QUEUED
+    error: str = ""
+    n_preempted: int = 0
     out_tokens: list = dataclasses.field(default_factory=list)
     t_admitted: float = 0.0
     t_first_token: float = 0.0
@@ -82,6 +105,17 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.out_tokens) >= self.max_new_tokens
+
+    @property
+    def terminal(self) -> bool:
+        return self.state in RequestState.TERMINAL
+
+    @property
+    def deadline(self) -> float:
+        """Absolute deadline (same clock as ``arrival``); +inf if none."""
+        if self.deadline_s is None:
+            return float("inf")
+        return self.arrival + self.deadline_s
 
     @property
     def ttft(self) -> float:
@@ -118,50 +152,18 @@ def unified_supported(cfg: ModelConfig) -> bool:
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, plan: ShardingPlan = NULL_PLAN,
-                 *, spec=None,
-                 max_batch: Optional[int] = None,
-                 max_len: Optional[int] = None,
-                 dtype=jnp.float32, temperature: Optional[float] = None,
-                 seed: Optional[int] = None,
-                 embeds_fn: Optional[Callable] = None,
-                 kernel_policy: Optional[KernelPolicy] = None,
-                 dispatch_mode: Optional[str] = None,
-                 chunk: Optional[int] = None,
-                 debug_logits: Optional[bool] = None):
+    def __init__(self, cfg: ModelConfig, params, spec=None, *,
+                 embeds_fn: Optional[Callable] = None, dtype=jnp.float32):
         # ``spec`` (a serving.api.ResolvedServeSpec) is THE configuration
-        # surface: strategy/plan, kernels, dispatch, chunk, token budget and
-        # the slot envelope all ride on it, resolved by the analyzer / cost
-        # model.  The per-knob kwargs below are a one-release deprecation
-        # shim that folds them into a spec internally.
-        legacy_kwargs = {k: v for k, v in dict(
-            max_batch=max_batch, max_len=max_len, temperature=temperature,
-            seed=seed, kernel_policy=kernel_policy,
-            dispatch_mode=dispatch_mode, chunk=chunk,
-            debug_logits=debug_logits).items() if v is not None}
-        from repro.serving.api import spec_from_engine_kwargs
+        # surface: strategy/plan, kernels, dispatch, chunk, token budget,
+        # the slot envelope, overload policy and fault plan all ride on it.
         if spec is None:
-            if legacy_kwargs:
-                warnings.warn(
-                    "Engine(max_batch=..., max_len=..., chunk=, "
-                    "kernel_policy=, dispatch_mode=, ...) kwargs are "
-                    "deprecated: build a repro.serving.api.ServeSpec and "
-                    "pass Engine(cfg, params, spec=spec.resolve(...)) — or "
-                    "use the LLM facade (docs/api.md)",
-                    DeprecationWarning, stacklevel=2)
-            spec = spec_from_engine_kwargs(cfg, plan, **legacy_kwargs)
-        else:
-            if legacy_kwargs:
-                raise ValueError(
-                    "pass knobs on the ResolvedServeSpec, not alongside it "
-                    f"(got both spec= and {sorted(legacy_kwargs)})")
-            if plan is not NULL_PLAN and plan != spec.plan:
-                raise ValueError(
-                    "the ShardingPlan rides on the spec "
-                    "(ResolvedServeSpec.plan) — don't pass both")
+            raise TypeError(
+                "Engine needs a resolved spec: Engine(cfg, params, "
+                "ServeSpec(...).resolve()) — the per-knob kwargs shim was "
+                "removed after its one-release window (docs/api.md)")
         self.spec = spec
-        plan = spec.plan
-        self.cfg, self.params, self.plan = cfg, params, plan
+        self.cfg, self.params, self.plan = cfg, params, spec.plan
         self.max_batch, self.max_len = spec.max_batch, spec.max_len
         self.temperature = spec.temperature
         self.key = jax.random.PRNGKey(spec.seed)
@@ -172,9 +174,15 @@ class Engine:
         # slot's last valid row (forward last_only)
         self.debug_logits = bool(spec.debug_logits)
 
+        # deterministic chaos harness (ServeSpec.faults); empty = inert
+        self.faults = FaultInjector(getattr(spec, "faults", ()),
+                                    seed=spec.seed)
+        # robustness event counters, merged into ServeMetrics by the
+        # scheduler: fault / preempt / cancel / deadline_miss
+        self.events: Counter = Counter()
+
         # the blocking-prefill path survives ONLY as the automatic fallback
-        # for families the unified step cannot serve (ssm/hybrid/frontend);
-        # the public legacy escape hatch was retired after PR 3's window
+        # for families the unified step cannot serve (ssm/hybrid/frontend)
         self.legacy = not unified_supported(cfg)
 
         self.cache = with_lengths(
@@ -183,10 +191,15 @@ class Engine:
         self.slots: list[Optional[Request]] = [None] * self.max_batch
         self.cur_tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
         # unified-step slot bookkeeping (host side, mirrors device lengths)
-        self._prompt_pos = [0] * self.max_batch   # prompt tokens written
+        self._pending = [None] * self.max_batch   # tokens to prefill
+        self._prompt_pos = [0] * self.max_batch   # pending tokens written
         self._last_tok = [0] * self.max_batch     # last sampled token
         self._admit_seq = [0] * self.max_batch    # admission (prefill FIFO)
         self._seq = 0
+        self._step_idx = 0                # engine step counter (fault keys)
+        self.last_step_tokens = 0         # tokens processed by the last
+        #                                   step — the watchdog's progress
+        #                                   signal (0 = the step was a no-op)
         self.last_logits = None                # (B, V) of the last step
         self.step_logits = None                # (B, chunk, V), debug_logits
 
@@ -227,9 +240,9 @@ class Engine:
         at cache offset length[i]; rows past q_lens[i] are inert.  Samples
         each slot's next token from its last valid row's logits (only
         meaningful to the host when the slot just finished its prompt or is
-        decoding; the host ignores the rest).  The LM head runs only on
-        those last rows unless ``debug_logits`` asks for every row (the
-        oracle tests).
+        decoding; the host ignores the rest).  ``bad[i]`` flags a
+        non-finite sampled-logits row on a scheduled slot — the NaN/Inf
+        quarantine signal (one extra (B,) bool in the existing host read).
         """
         out = forward(params, self.cfg, self.plan, tokens=tokens,
                       cache=cache, q_lens=q_lens,
@@ -242,11 +255,12 @@ class Engine:
         else:
             last = out.logits[:, 0]
             step_logits = None
+        bad = (q_lens > 0) & ~jnp.isfinite(last).all(axis=-1)
         if self.temperature > 0:
             nxt = jax.random.categorical(key, last / self.temperature, -1)
         else:
             nxt = jnp.argmax(last, -1)
-        return nxt.astype(jnp.int32), last, step_logits, out.cache
+        return nxt.astype(jnp.int32), last, step_logits, out.cache, bad
 
     def _prefill_impl(self, params, tokens, real_len):
         cache = init_cache(self.cfg, 1, self.max_len, self.dtype)
@@ -282,12 +296,26 @@ class Engine:
     def free_slots(self) -> list:
         return [i for i, r in enumerate(self.slots) if r is None]
 
+    def slot_of(self, rid: int) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is not None and r.rid == rid:
+                return i
+        return None
+
     def admit(self, req: Request) -> bool:
         """Admit into a free slot.  Unified path: pure bookkeeping — the
-        prompt becomes the slot's pending queue and the slot's cache length
-        is zeroed; its tokens flow through subsequent unified steps.  Legacy
-        path: the old blocking bucket-padded prefill."""
+        slot's pending buffer becomes ``prompt + out_tokens`` (the
+        recompute-on-resume stream; plain prompt for a fresh request) and
+        the slot's cache length is zeroed.  Legacy path: the old blocking
+        bucket-padded prefill.  Raises ``InjectedFault`` when an "admit"
+        fault targets this request (the scheduler sheds it)."""
         self.validate(req)
+        fault = self.faults.admit_blocked(self._step_idx, req.rid) \
+            if self.faults else None
+        if fault is not None:
+            raise InjectedFault(
+                f"request {req.rid}: injected admission failure "
+                f"({fault.describe()})")
         free = self.free_slots()
         if not free:
             return False
@@ -295,13 +323,22 @@ class Engine:
         if self.legacy:
             return self._admit_legacy(req, slot)
         self.slots[slot] = req
+        # resume replays generated-so-far tokens as a prompt suffix: the
+        # prefill of prompt+out reproduces the evicted KV exactly, and the
+        # next sampled token continues the sequence bit-for-bit (greedy)
+        self._pending[slot] = np.concatenate(
+            [np.asarray(req.prompt, np.int32),
+             np.asarray(req.out_tokens, np.int32)]) \
+            if req.out_tokens else np.asarray(req.prompt, np.int32)
         self._prompt_pos[slot] = 0
         self._last_tok[slot] = 0
         self._admit_seq[slot] = self._seq
         self._seq += 1
         self.cache = with_lengths(
             self.cache, self.cache["length"].at[slot].set(0))
-        req.t_admitted = time.perf_counter()
+        if req.t_admitted == 0.0:
+            req.t_admitted = time.perf_counter()
+        req.state = RequestState.RUNNING
         return True
 
     def _admit_legacy(self, req: Request, slot: int) -> bool:
@@ -319,8 +356,68 @@ class Engine:
         self.cur_tokens = self.cur_tokens.at[slot, 0].set(first)
         req.out_tokens.append(first)
         req.t_admitted = req.t_first_token = time.perf_counter()
+        req.state = RequestState.RUNNING
         self.slots[slot] = req
         return True
+
+    def release(self, slot: int, state: str, error: str = "",
+                reason: str = "") -> Optional[Request]:
+        """Free a slot mid-flight: deadline kill, cancel, fault quarantine.
+
+        Zeroes the slot's cache length (rows become masked stale data for
+        the next occupant) and stamps the request's terminal/transition
+        state.  ``reason`` increments the engine's event counter.
+        """
+        req = self.slots[slot]
+        if req is None:
+            return None
+        self.slots[slot] = None
+        self._pending[slot] = None
+        self.cache = with_lengths(
+            self.cache, self.cache["length"].at[slot].set(0))
+        req.state = state
+        if error:
+            req.error = error
+        if state in RequestState.TERMINAL:
+            req.t_done = time.perf_counter()
+        if reason:
+            self.events[reason] += 1
+        return req
+
+    def cancel(self, rid: int) -> Optional[Request]:
+        """Cancel a RUNNING request; frees its slot immediately."""
+        slot = self.slot_of(rid)
+        if slot is None:
+            return None
+        return self.release(slot, RequestState.CANCELLED, error="cancelled",
+                            reason="cancel")
+
+    def preempt(self, slot: int) -> Optional[Request]:
+        """Evict a slot for a higher-priority request (recompute-on-resume).
+
+        The dense per-slot cache is simply abandoned (length zeroed); on
+        re-admission the pending buffer ``prompt + out_tokens`` recomputes
+        it, so the resumed request's final output matches its
+        uninterrupted run exactly.  The same discard-and-recompute move
+        carries over verbatim to paged KV (free the pages instead).
+        """
+        req = self.release(slot, RequestState.PREEMPTED, reason="preempt")
+        if req is not None:
+            req.n_preempted += 1
+        return req
+
+    def victim_slot(self, below_priority: int) -> Optional[int]:
+        """Lowest-priority occupied slot strictly below ``below_priority``
+        — the preemption victim (youngest admission breaks ties, so the
+        request with the most sunk work keeps its slot)."""
+        best = None
+        for i, r in enumerate(self.slots):
+            if r is None or r.priority >= below_priority:
+                continue
+            key = (r.priority, -self._admit_seq[i])
+            if best is None or key < best[0]:
+                best = (key, i)
+        return None if best is None else best[1]
 
     # -- token-budget planning (Sarathi-style, decode-first) -------------
     def plan_q_lens(self, token_budget: Optional[int] = None) -> np.ndarray:
@@ -336,9 +433,9 @@ class Engine:
         q = np.zeros((self.max_batch,), np.int32)
         prefilling = []
         for i, r in enumerate(self.slots):
-            if r is None:
+            if r is None or r.terminal:
                 continue
-            if self._prompt_pos[i] < len(r.prompt):
+            if self._prompt_pos[i] < len(self._pending[i]):
                 prefilling.append(i)
             elif not r.done:
                 q[i] = 1
@@ -346,7 +443,7 @@ class Engine:
         for i in sorted(prefilling, key=lambda j: self._admit_seq[j]):
             if budget <= 0:
                 break
-            n = min(self.chunk, len(self.slots[i].prompt)
+            n = min(self.chunk, len(self._pending[i])
                     - self._prompt_pos[i], budget)
             q[i] = n
             budget -= n
@@ -354,7 +451,8 @@ class Engine:
 
     # -- stepping --------------------------------------------------------
     def step(self, token_budget: Optional[int] = None) -> list:
-        """One engine iteration.  Returns finished requests.
+        """One engine iteration.  Returns retired requests (state DONE, or
+        FAILED for NaN-quarantined slots).
 
         Unified: one mixed token-budget step over all slots.  Legacy: one
         decode step for all active (fully prefilled) slots."""
@@ -362,62 +460,123 @@ class Engine:
             return self._step_legacy()
         return self.unified_step(self.plan_q_lens(token_budget))
 
+    def _reap(self) -> list:
+        """Sweep slots already retired (terminal state set by cancel/
+        release) or trivially complete (max_new_tokens satisfied — e.g. a
+        zero-token request, which previously pinned its slot and busy-spun
+        the scheduler forever)."""
+        retired = []
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            if r.terminal:
+                self.slots[i] = None
+                self._pending[i] = None
+                retired.append(r)
+            elif r.done:
+                r.state = RequestState.DONE
+                r.t_done = r.t_done or time.perf_counter()
+                self.slots[i] = None
+                self._pending[i] = None
+                retired.append(r)
+        return retired
+
     def unified_step(self, q_lens) -> list:
         """Run the jitted unified step with an explicit per-slot plan."""
+        step_idx = self._step_idx
+        self._step_idx += 1
+        retired = self._reap()
         q_lens = np.asarray(q_lens, np.int32)
+        self.last_step_tokens = int(q_lens.sum())
+        if self.faults:
+            spike = self.faults.step_latency_s(step_idx)
+            if spike > 0:
+                time.sleep(spike)            # injected straggler
         if not q_lens.any():
-            return []
+            return retired
         toks = np.zeros((self.max_batch, self.chunk), np.int32)
         for i, r in enumerate(self.slots):
             n = int(q_lens[i])
             if r is None or n == 0:
                 continue
             pos = self._prompt_pos[i]
-            if pos < len(r.prompt):
-                toks[i, :n] = r.prompt[pos:pos + n]
+            if pos < len(self._pending[i]):
+                toks[i, :n] = self._pending[i][pos:pos + n]
             else:
                 toks[i, 0] = self._last_tok[i]
         self.key, sub = jax.random.split(self.key)
-        nxt, self.last_logits, self.step_logits, self.cache = self._unified(
-            self.params, jnp.asarray(toks), jnp.asarray(q_lens),
-            self.cache, sub)
+        nxt, self.last_logits, self.step_logits, self.cache, bad = \
+            self._unified(self.params, jnp.asarray(toks),
+                          jnp.asarray(q_lens), self.cache, sub)
         # one (B,) host read per step, for request bookkeeping + the next
         # step's token buffer (which must merge host-side prompt chunks
         # anyway — the (B, chunk) int32 upload is noise next to the model)
         nxt_host = np.asarray(nxt)
+        bad_host = np.array(bad)       # copy: fault injection writes into it
+        if self.faults:
+            live = {i: r.rid for i, r in enumerate(self.slots)
+                    if r is not None and q_lens[i] > 0}
+            for i in self.faults.nan_slots(step_idx, live):
+                bad_host[i] = True           # injected NaN-logits row
+                self.last_logits = self.last_logits.at[i].set(jnp.nan)
         now = time.perf_counter()
-        finished = []
         for i, r in enumerate(self.slots):
             n = int(q_lens[i])
             if r is None or n == 0:
                 continue
+            if bad_host[i]:
+                # quarantine exactly this slot: non-finite logits never
+                # produce a token, never touch a neighbour
+                retired.append(self.release(
+                    i, RequestState.FAILED, error="non-finite logits",
+                    reason="fault"))
+                continue
             pos = self._prompt_pos[i]
-            if pos < len(r.prompt):                    # prefill chunk
+            if pos < len(self._pending[i]):            # prefill chunk
                 self._prompt_pos[i] = pos + n
-                if self._prompt_pos[i] < len(r.prompt):
+                if self._prompt_pos[i] < len(self._pending[i]):
                     continue                           # still prefilling
-                r.t_first_token = now                  # prompt done: TTFT
+                if r.t_first_token == 0.0:
+                    r.t_first_token = now              # prompt done: TTFT
+            if r.done:                                 # zero-token budget:
+                continue                               # reaped next sweep
             tok = int(nxt_host[i])
             r.out_tokens.append(tok)
             self._last_tok[i] = tok
             r.t_done = now
             if r.done:
-                finished.append(r)
+                r.state = RequestState.DONE
+                retired.append(r)
                 self.slots[i] = None
-        return finished
+                self._pending[i] = None
+        return retired
 
     def _step_legacy(self) -> list:
+        step_idx = self._step_idx
+        self._step_idx += 1
+        if self.faults:
+            spike = self.faults.step_latency_s(step_idx)
+            if spike > 0:
+                time.sleep(spike)
+        # reap requests already complete or externally released: the
+        # blocking prefill emits the first token inside admit, so a
+        # max_new_tokens==1 request is done before its first decode step —
+        # without this sweep it would pin its slot forever (and the append
+        # loop below would push a token past its budget)
         finished = []
-        # reap requests already complete: the blocking prefill emits the
-        # first token inside admit, so a max_new_tokens==1 request is done
-        # before its first decode step — without this sweep it would pin
-        # its slot forever (and the append loop below would push a token
-        # past its budget)
         for i, r in enumerate(self.slots):
-            if r is not None and r.done:
-                finished.append(r)
+            if r is None:
+                continue
+            if r.terminal:
                 self.slots[i] = None
+                finished.append(r)
+            elif r.done:
+                r.state = RequestState.DONE
+                r.t_done = r.t_done or time.perf_counter()
+                self.slots[i] = None
+                finished.append(r)
         active = jnp.asarray([r is not None for r in self.slots])
+        self.last_step_tokens = int(sum(r is not None for r in self.slots))
         if not bool(active.any()):
             return finished
         self.key, sub = jax.random.split(self.key)
@@ -434,6 +593,7 @@ class Engine:
             r.out_tokens.append(int(nxt_host[i]))
             r.t_done = now
             if r.done:
+                r.state = RequestState.DONE
                 finished.append(r)
                 self.slots[i] = None
         return finished
@@ -443,5 +603,5 @@ class Engine:
         return sum(r is not None for r in self.slots)
 
 
-__all__ = ["Engine", "Request", "PromptTooLongError", "unified_supported",
-           "MAX_BUCKET"]
+__all__ = ["Engine", "Request", "RequestState", "PromptTooLongError",
+           "unified_supported", "MAX_BUCKET"]

@@ -1,0 +1,27 @@
+"""Shared test helper: build an Engine through the one public surface.
+
+The PR 5 per-knob ``Engine(cfg, params, max_batch=...)`` kwargs are gone;
+every test that wants a small hand-tuned engine now routes through
+``ServeSpec(...).resolve(cfg)`` like production callers do.  The defaults
+here reproduce the old engine-kwarg defaults (budget ``max_batch * chunk``)
+so ported tests keep their original scheduling behavior.
+"""
+
+from repro.core.resolve import AUTO
+from repro.serving.api import ServeSpec
+from repro.serving.engine import Engine
+
+
+def make_spec(cfg, *, max_batch=8, max_len=512, chunk=16, token_budget=0,
+              kernels=AUTO, dispatch=AUTO, debug_logits=False,
+              temperature=0.0, seed=0, faults=(), overload=AUTO, **kw):
+    return ServeSpec(
+        max_batch=max_batch, max_len=max_len, chunk=chunk,
+        token_budget=token_budget or max_batch * min(chunk, max_len),
+        kernels=kernels, dispatch=dispatch, debug_logits=debug_logits,
+        temperature=temperature, seed=seed, faults=faults,
+        overload=overload, **kw).resolve(cfg)
+
+
+def make_engine(cfg, params, **knobs):
+    return Engine(cfg, params, spec=make_spec(cfg, **knobs))

@@ -1,0 +1,226 @@
+"""Chaos suite: deterministic fault injection through the full serving stack.
+
+Acceptance criteria of ISSUE 6 (run in tier-1 AND as the CI ``chaos`` lane
+with a fixed seed):
+
+  - under injected NaN-logit and admit-failure faults, ONLY the targeted
+    requests end FAILED/SHED — every other request finishes with tokens
+    identical to a fault-free run;
+  - a preempted-then-resumed request's final output matches its
+    uninterrupted output (covered in test_robustness; re-checked here
+    under a concurrent latency fault);
+  - probabilistic faults replay bit-for-bit: same (faults, seed), same
+    firing steps;
+  - a saturating deadline-bound workload completes with zero watchdog
+    stalls and bounded deadline-miss lateness.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from _engine_helpers import make_engine, make_spec
+from repro.models.model import init_params
+from repro.serving.api import LLM
+from repro.serving.engine import Request, RequestState
+from repro.serving.faults import Fault, FaultInjector
+from repro.serving.scheduler import Scheduler, tiered_workload
+
+pytestmark = pytest.mark.chaos
+
+KEY = jax.random.PRNGKey(0)
+SEED = 7                       # the fixed chaos seed (CI lane)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = C.get_reduced("smollm-360m")
+    params = init_params(KEY, cfg, jnp.float32)
+    return cfg, params
+
+
+def _stream_all(cfg, params, faults=(), n=4, max_new=4):
+    spec = make_spec(cfg, max_batch=2, max_len=64, chunk=4, faults=faults,
+                     seed=SEED)
+    llm = LLM(cfg, params, spec)
+    rids = [llm.submit(np.arange(4 + i, dtype=np.int32), max_new)
+            for i in range(n)]
+    got = {r: [] for r in rids}
+    for rid, tok in llm.stream():
+        got[rid].append(tok)
+    return got, llm
+
+
+def test_nan_fault_quarantines_only_target(smollm):
+    """A NaN-logits fault on one request FAILs exactly that request; every
+    other request's tokens are identical to the fault-free run."""
+    cfg, params = smollm
+    clean, _ = _stream_all(cfg, params)
+    fault = Fault(kind="nan", rid=1, at=(2,))
+    faulty, llm = _stream_all(cfg, params, faults=(fault,))
+    assert len(faulty[1]) < len(clean[1])        # target cut short
+    for rid in clean:
+        if rid != 1:
+            assert faulty[rid] == clean[rid], rid
+    assert llm.engine.events["fault"] == 1
+    assert llm.engine.faults.log == [(2, "nan", "slots=[1]")]
+    assert llm.engine.n_active == 0
+
+
+def test_admit_fault_sheds_only_target(smollm):
+    """An injected admission failure sheds exactly the targeted request;
+    the rest complete with unchanged tokens."""
+    cfg, params = smollm
+    clean, _ = _stream_all(cfg, params)
+    fault = Fault(kind="admit", rid=2, every=1, n_max=1)
+    shed, llm = _stream_all(cfg, params, faults=(fault,))
+    assert shed[2] == []
+    for rid in clean:
+        if rid != 2:
+            assert shed[rid] == clean[rid], rid
+    assert llm.engine.n_active == 0
+
+
+def test_nan_fault_scheduler_path_marks_failed(smollm):
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=2, max_len=64, chunk=4,
+                      faults=(Fault(kind="nan", rid=0, at=(2,)),), seed=SEED)
+    sched = Scheduler(eng)
+    reqs = [Request(rid=i, prompt=np.arange(5 + i, dtype=np.int32),
+                    max_new_tokens=4) for i in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run()
+    assert reqs[0].state == RequestState.FAILED
+    assert "non-finite" in reqs[0].error
+    assert {r.rid for r in done} == {1, 2}
+    assert sched.failed == [reqs[0]]
+    m = sched.metrics()
+    assert m.n_faults == 1 and m.n_incomplete == 0
+
+
+def test_probabilistic_faults_replay_bit_for_bit():
+    """Same (faults, seed) -> the same firing steps, independent of wall
+    time or call interleaving (counter-based RNG)."""
+    faults = (Fault(kind="latency", p=0.3, ms=0.01),
+              Fault(kind="nan", p=0.2, rid=0),
+              Fault(kind="clock_skew", p=0.1, ms=1.0))
+
+    def replay():
+        inj = FaultInjector(faults, seed=SEED)
+        for step in range(50):
+            inj.step_latency_s(step)
+            inj.nan_slots(step, {0: 0, 1: 1})
+            inj.advance_clock(step)
+        return inj.log
+
+    a, b = replay(), replay()
+    assert a == b and len(a) > 0
+    # a different seed fires a different schedule
+    inj2 = FaultInjector(faults, seed=SEED + 1)
+    for step in range(50):
+        inj2.step_latency_s(step)
+        inj2.nan_slots(step, {0: 0, 1: 1})
+        inj2.advance_clock(step)
+    assert inj2.log != a
+
+
+def test_latency_fault_slows_exactly_the_targeted_step(smollm):
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=1, max_len=64, chunk=4,
+                      faults=(Fault(kind="latency", at=(3,), ms=80.0),),
+                      seed=SEED)
+    req = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                  max_new_tokens=8)
+    assert eng.admit(req)
+    eng.step()                                   # step 0: compile + prefill
+    times = []
+    while not req.done:
+        t0 = time.perf_counter()
+        eng.step()
+        times.append(time.perf_counter() - t0)
+    assert eng.faults.log == [(3, "latency", "latency(at=[3] ms=80)")]
+    spiked = times[2]                            # engine step index 3
+    others = times[:2] + times[3:]
+    assert spiked >= 0.08
+    assert spiked > 4 * max(others)
+
+
+def test_clock_skew_fault_expires_deadlines_early(smollm):
+    """A +10s clock jump makes the scheduler see every deadline as expired
+    — the workload degrades to deadline-miss shedding, not a hang."""
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=1, max_len=64, chunk=4,
+                      faults=(Fault(kind="clock_skew", at=(1,), ms=10_000.0),),
+                      seed=SEED)
+    sched = Scheduler(eng)
+    reqs = [Request(rid=i, prompt=np.arange(5, dtype=np.int32),
+                    max_new_tokens=4, deadline_s=5.0, arrival=0.0)
+            for i in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    sched.run()                                  # must terminate
+    assert eng.faults.skew_s == 10.0
+    m = sched.metrics()
+    # every request hit the (skewed) deadline wall
+    assert m.n_deadline_miss + m.n_requests == 3
+    assert m.n_deadline_miss >= 1
+    assert m.n_incomplete == 0
+
+
+def test_preempt_resume_exact_under_latency_fault(smollm):
+    """Recompute-on-resume stays bit-exact even with a straggler fault
+    firing during the resumed run."""
+    cfg, params = smollm
+    spec = make_spec(cfg, max_batch=1, max_len=64, chunk=4)
+    llm = LLM(cfg, params, spec)
+    base = llm.generate([np.arange(5, dtype=np.int32)], max_new_tokens=6)[0]
+
+    eng = make_engine(cfg, params, max_batch=1, max_len=64, chunk=4,
+                      faults=(Fault(kind="latency", every=3, ms=5.0),),
+                      seed=SEED)
+    req = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                  max_new_tokens=6)
+    assert eng.admit(req)
+    for _ in range(4):
+        eng.step()
+    eng.preempt(0)
+    assert eng.admit(req)
+    while not req.done:
+        eng.step()
+    assert req.out_tokens == base
+
+
+def test_saturating_deadline_workload_zero_stalls(smollm):
+    """Acceptance: a saturating two-tier deadline workload completes with
+    zero watchdog stalls, every request reaching a terminal state, and
+    deadline-miss lateness bounded (kills land within a step or two of
+    expiry, not whole requests late)."""
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=2, max_len=64, chunk=4)
+    # warm the jitted step so lateness measures steps, not compilation
+    warm = Scheduler(eng)
+    warm.submit(Request(rid=999, prompt=np.arange(5, dtype=np.int32),
+                        max_new_tokens=2))
+    warm.run()
+
+    sched = Scheduler(eng, watchdog_steps=64)
+    reqs = list(tiered_workload(12, prompt_len=12, max_new_tokens=6,
+                                vocab=cfg.vocab_size, arrival_rate=500.0,
+                                seed=SEED, hi_every=3, hi_priority=5,
+                                hi_deadline_s=0.25))
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run()                  # raises StalledEngineError on stall
+    assert all(r.terminal for r in reqs)
+    m = sched.metrics()
+    assert m.n_incomplete == 0
+    assert len(done) + m.n_deadline_miss + m.n_shed >= len(reqs) - m.n_faults
+    # lateness bound: a deadline kill lands within ~one engine iteration of
+    # expiry (the loop checks deadlines every step); allow generous CPU
+    # scheduling noise but far less than a whole request's service time
+    assert m.deadline_miss_p99 < 0.25

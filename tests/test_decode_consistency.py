@@ -109,9 +109,10 @@ def test_engine_decode_with_flash_decode_kernel():
     token per iteration through the same program."""
     import numpy as np
 
+    from _engine_helpers import make_engine
     from repro.kernels import ops
     from repro.kernels.policy import KernelPolicy
-    from repro.serving.engine import Engine, Request
+    from repro.serving.engine import Request
 
     cfg = C.get_reduced("smollm-360m")
     params = M.init_params(KEY, cfg, jnp.float32)
@@ -119,8 +120,8 @@ def test_engine_decode_with_flash_decode_kernel():
                np.asarray([2, 7, 1, 8, 2, 8], np.int32)]
 
     def run_collect(policy):
-        eng = Engine(cfg, params, max_batch=2, max_len=64,
-                     kernel_policy=policy, chunk=1)
+        eng = make_engine(cfg, params, max_batch=2, max_len=64,
+                          kernels=policy, chunk=1)
         reqs = [Request(rid=i, prompt=p, max_new_tokens=6)
                 for i, p in enumerate(prompts)]
         for r in reqs:
@@ -162,23 +163,19 @@ def test_decode_attention_idle_slot_rows_finite():
     assert err < 1e-4, err
 
 
-def test_engine_respects_plan_kernel_policy():
-    """A policy set on the plan (make_plan kernels=...) must survive Engine
-    construction when kernel_policy is omitted — not be clobbered by auto()."""
-    import dataclasses
-
-    from repro.core.partitioner import NULL_PLAN
+def test_engine_respects_spec_kernel_policy():
+    """An explicit KernelPolicy on the spec survives resolution onto the
+    engine's plan — not clobbered by auto(); an explicit "off" disables."""
+    from _engine_helpers import make_engine
     from repro.kernels.policy import KernelPolicy
-    from repro.serving.engine import Engine
 
     cfg = C.get_reduced("smollm-360m")
     params = M.init_params(KEY, cfg, jnp.float32)
-    plan = dataclasses.replace(NULL_PLAN, kernels=KernelPolicy.all_on())
-    eng = Engine(cfg, params, plan, max_batch=1, max_len=32)
+    eng = make_engine(cfg, params, max_batch=1, max_len=32,
+                      kernels=KernelPolicy.all_on())
     assert eng.plan.kernels == KernelPolicy.all_on()
-    # explicit argument still wins over the plan
-    eng2 = Engine(cfg, params, plan, max_batch=1, max_len=32,
-                  kernel_policy=KernelPolicy.off())
+    assert eng.spec.provenance["kernels"] == "explicit"
+    eng2 = make_engine(cfg, params, max_batch=1, max_len=32, kernels="off")
     assert eng2.plan.kernels == KernelPolicy.off()
 
 

@@ -147,14 +147,15 @@ def test_dropless_grads_flow():
 
 
 def test_engine_dispatch_mode_plumbs_to_plan():
-    from repro.serving.engine import Engine
+    from _engine_helpers import make_engine
 
     cfg = C.get_reduced("smollm-360m")
     params = MM.init_params(KEY, cfg, jnp.float32)
-    eng = Engine(cfg, params, max_batch=1, max_len=32)
-    assert eng.plan.dispatch_mode == "auto"      # -> dropless in moe_block
-    eng2 = Engine(cfg, params, max_batch=1, max_len=32,
-                  dispatch_mode="capacity")
+    eng = make_engine(cfg, params, max_batch=1, max_len=32)
+    # resolution pins the inference default: count-independent dropless
+    assert eng.plan.dispatch_mode == eng.spec.dispatch == "dropless"
+    eng2 = make_engine(cfg, params, max_batch=1, max_len=32,
+                       dispatch="capacity")
     assert eng2.plan.dispatch_mode == "capacity"
 
 

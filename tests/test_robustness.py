@@ -1,0 +1,344 @@
+"""Request lifecycle, overload shedding, preemption, and the watchdog.
+
+The serving tier's graceful-degradation contract (ISSUE 6 tentpole):
+
+  - requests carry a terminal lifecycle state and can be cancelled
+    mid-stream without corrupting neighbours;
+  - per-request deadlines are enforced (queued AND mid-decode);
+  - the bounded admission queue sheds instead of queueing unboundedly;
+  - priority preemption evicts the lowest-priority slot and the resumed
+    request's output is bit-identical to its uninterrupted run
+    (recompute-on-resume on the dense per-slot cache);
+  - a stalled serving loop raises ``StalledEngineError`` instead of
+    silently busy-spinning to ``max_steps``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from _engine_helpers import make_engine, make_spec
+from repro.core.resolve import OverloadPolicy
+from repro.models.model import init_params
+from repro.serving.api import LLM, ServeSpec
+from repro.serving.engine import (Engine, PromptTooLongError, Request,
+                                  RequestState)
+from repro.serving.scheduler import (Scheduler, StalledEngineError,
+                                     synthetic_workload)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = C.get_reduced("smollm-360m")
+    params = init_params(KEY, cfg, jnp.float32)
+    return cfg, params
+
+
+def _llm(cfg, params, **kw):
+    spec = make_spec(cfg, max_batch=2, max_len=64, chunk=4,
+                     prompt_len=16, max_new_tokens=4, **kw)
+    return LLM(cfg, params, spec)
+
+
+# -- lifecycle ----------------------------------------------------------
+
+
+def test_request_lifecycle_states(smollm):
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=1, max_len=64, chunk=4)
+    req = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                  max_new_tokens=3)
+    assert req.state == RequestState.QUEUED and not req.terminal
+    assert eng.admit(req)
+    assert req.state == RequestState.RUNNING
+    while not req.done:
+        eng.step()
+    eng.step()                                   # reap sweep
+    assert req.state == RequestState.DONE and req.terminal
+    assert eng.n_active == 0
+
+
+def test_cancel_mid_stream_frees_slot_later_rids_complete(smollm):
+    """Cancel one of three requests mid-stream: its tokens stop, its slot
+    frees, and the remaining rids finish with unchanged tokens."""
+    cfg, params = smollm
+    prompts = [np.arange(4 + i, dtype=np.int32) for i in range(3)]
+
+    # clean reference run
+    llm0 = _llm(cfg, params)
+    rids0 = [llm0.submit(p, 6) for p in prompts]
+    clean = {r: [] for r in rids0}
+    for rid, tok in llm0.stream():
+        clean[rid].append(tok)
+
+    llm1 = _llm(cfg, params)
+    rids1 = [llm1.submit(p, 6) for p in prompts]
+    got = {r: [] for r in rids1}
+    cancelled = rids1[1]
+    stream = llm1.stream()
+    for rid, tok in stream:
+        got[rid].append(tok)
+        if rid == cancelled and len(got[cancelled]) == 2:
+            assert llm1.cancel(cancelled)
+    assert len(got[cancelled]) == 2              # stopped early
+    # the OTHER requests are unperturbed (slot isolation + dropless MoE)
+    assert got[rids1[0]] == clean[rids0[0]]
+    assert got[rids1[2]] == clean[rids0[2]]
+    assert llm1.engine.n_active == 0
+    assert llm1.engine.events["cancel"] == 1
+
+
+def test_cancel_queued_and_unknown_rid(smollm):
+    cfg, params = smollm
+    llm = _llm(cfg, params)
+    rid = llm.submit(np.arange(5, dtype=np.int32), 4)
+    assert llm.cancel(rid) is True               # still queued
+    assert llm.cancel(rid) is False              # already gone
+    assert llm.cancel(999) is False
+    assert not llm._queue
+
+
+def test_overlong_submit_raises_without_corrupting_queue(smollm):
+    """PromptTooLongError from submit() must not disturb queued rids."""
+    cfg, params = smollm
+    llm = _llm(cfg, params)
+    ok = [llm.submit(np.arange(5, dtype=np.int32), 3),
+          llm.submit(np.arange(7, dtype=np.int32), 3)]
+    with pytest.raises(PromptTooLongError):
+        llm.submit(np.zeros(80, np.int32), 4)    # 80 + 4 > max_len=64
+    got = {r: [] for r in ok}
+    for rid, tok in llm.stream():
+        got[rid].append(tok)
+    assert all(len(got[r]) == 3 for r in ok)
+    assert llm.engine.n_active == 0
+
+
+def test_zero_token_request_completes(smollm):
+    """max_new_tokens=0 retires instead of pinning its slot forever
+    (the old busy-spin)."""
+    cfg, params = smollm
+    llm = _llm(cfg, params)
+    rid0 = llm.submit(np.arange(5, dtype=np.int32), 0)
+    rid1 = llm.submit(np.arange(6, dtype=np.int32), 3)
+    got = {rid0: [], rid1: []}
+    for rid, tok in llm.stream():
+        got[rid].append(tok)
+    assert got[rid0] == [] and len(got[rid1]) == 3
+    assert llm.engine.n_active == 0
+
+
+# -- deadlines ----------------------------------------------------------
+
+
+def test_deadline_expired_in_queue_is_shed(smollm):
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=1, max_len=64, chunk=4)
+    sched = Scheduler(eng)
+    # an already-expired deadline: arrival offset 0, deadline_s negative
+    dead = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                   max_new_tokens=4, deadline_s=-1.0)
+    live = Request(rid=1, prompt=np.arange(6, dtype=np.int32),
+                   max_new_tokens=4)
+    sched.submit(dead)
+    sched.submit(live)
+    done = sched.run()
+    assert [r.rid for r in done] == [1]
+    assert dead.state == RequestState.SHED
+    m = sched.metrics()
+    assert m.n_shed == 1 and m.n_deadline_miss == 1
+    assert m.deadline_miss_p99 > 0
+
+
+def test_deadline_expired_mid_decode_frees_slot(smollm):
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=1, max_len=64, chunk=4)
+    # warm the jitted step so the deadline clock isn't eaten by compile
+    warm = Scheduler(eng)
+    warm.submit(Request(rid=99, prompt=np.arange(5, dtype=np.int32),
+                        max_new_tokens=2))
+    warm.run()
+    sched = Scheduler(eng)
+    req = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                  max_new_tokens=50, deadline_s=0.02)
+    follow = Request(rid=1, prompt=np.arange(6, dtype=np.int32),
+                     max_new_tokens=3)
+    sched.submit(req)
+    sched.submit(follow)
+    done = sched.run()
+    # the long request was killed at its deadline, the follower ran
+    assert req.state == RequestState.CANCELLED
+    assert "deadline" in req.error
+    assert len(req.out_tokens) < 50
+    assert [r.rid for r in done] == [1]
+    assert sched.metrics().n_deadline_miss == 1
+
+
+def test_llm_stream_enforces_deadlines(smollm):
+    cfg, params = smollm
+    llm = _llm(cfg, params)
+    llm.generate([np.arange(5, dtype=np.int32)], max_new_tokens=2)  # warm jit
+    rid = llm.submit(np.arange(5, dtype=np.int32), 50, deadline_s=0.02)
+    toks = [t for r, t in llm.stream() if r == rid]
+    assert len(toks) < 50
+    assert llm.engine.n_active == 0
+    assert llm.engine.events["deadline_miss"] == 1
+
+
+# -- overload shedding --------------------------------------------------
+
+
+def test_bounded_queue_sheds_reject_newest(smollm):
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=1, max_len=64, chunk=4,
+                      overload=OverloadPolicy(queue_cap=2,
+                                              shed="reject-newest"))
+    sched = Scheduler(eng)
+    reqs = list(synthetic_workload(4, prompt_len=8, max_new_tokens=2,
+                                   vocab=cfg.vocab_size))
+    accepted = [sched.submit(r) for r in reqs]
+    assert accepted == [True, True, False, False]
+    assert [r.state for r in reqs[2:]] == [RequestState.SHED] * 2
+    done = sched.run()
+    assert len(done) == 2
+    assert sched.metrics().n_shed == 2
+
+
+def test_bounded_queue_sheds_deadline_infeasible_first(smollm):
+    """deadline-first: the overflow victim is the queued request whose
+    deadline cannot be met anyway, not the incoming one."""
+    cfg, params = smollm
+    pol = OverloadPolicy(queue_cap=2, shed="deadline-first",
+                         est_request_s=10.0)   # everything looks slow
+    eng = make_engine(cfg, params, max_batch=1, max_len=64, chunk=4,
+                      overload=pol)
+    sched = Scheduler(eng)
+    infeasible = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                         max_new_tokens=2, deadline_s=0.5)   # < est 10s
+    r1 = Request(rid=1, prompt=np.arange(5, dtype=np.int32), max_new_tokens=2)
+    r2 = Request(rid=2, prompt=np.arange(5, dtype=np.int32), max_new_tokens=2)
+    assert sched.submit(infeasible) and sched.submit(r1)
+    assert sched.submit(r2)            # r2 accepted; infeasible shed instead
+    assert infeasible.state == RequestState.SHED
+    assert "deadline" in infeasible.error
+    assert [r.rid for r in sched.waiting] == [1, 2]
+
+
+# -- priority preemption ------------------------------------------------
+
+
+def test_preempt_resume_output_exact(smollm):
+    """THE recompute-on-resume property: preempted mid-decode, re-admitted,
+    the final output equals the uninterrupted run bit-for-bit."""
+    cfg, params = smollm
+    spec = make_spec(cfg, max_batch=1, max_len=64, chunk=4)
+
+    eng0 = Engine(cfg, params, spec=spec)
+    base = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                   max_new_tokens=6)
+    assert eng0.admit(base)
+    while not base.done:
+        eng0.step()
+
+    eng = Engine(cfg, params, spec=spec)
+    req = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                  max_new_tokens=6)
+    assert eng.admit(req)
+    for _ in range(4):                           # prefill + a few decodes
+        eng.step()
+    assert 0 < len(req.out_tokens) < 6
+    victim = eng.preempt(0)
+    assert victim is req and req.state == RequestState.PREEMPTED
+    assert req.n_preempted == 1 and eng.n_active == 0
+    assert eng.admit(req)                        # recompute-on-resume
+    assert req.state == RequestState.RUNNING
+    while not req.done:
+        eng.step()
+    assert req.out_tokens == base.out_tokens
+    assert eng.events["preempt"] == 1
+
+
+def test_scheduler_preempts_lower_priority_for_higher(smollm):
+    """A high-priority arrival evicts the lowest-priority running slot;
+    the victim re-queues and still completes with full output."""
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=1, max_len=64, chunk=4)
+    sched = Scheduler(eng)
+    lo = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                 max_new_tokens=40, priority=0)
+    hi = Request(rid=1, prompt=np.arange(6, dtype=np.int32),
+                 max_new_tokens=3, priority=5, arrival=0.05)
+    sched.submit(lo)
+    sched.submit(hi)
+    done = sched.run()
+    assert {r.rid for r in done} == {0, 1}
+    assert lo.n_preempted >= 1                  # evicted at least once
+    assert len(lo.out_tokens) == 40 and len(hi.out_tokens) == 3
+    # hi finished BEFORE the (longer) low-priority request
+    assert hi.t_done < lo.t_done
+    m = sched.metrics()
+    assert m.n_preempted >= 1 and m.n_incomplete == 0
+
+
+def test_victim_slot_picks_strictly_lower_priority(smollm):
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=2, max_len=64, chunk=4)
+    a = Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                max_new_tokens=4, priority=1)
+    b = Request(rid=1, prompt=np.arange(5, dtype=np.int32),
+                max_new_tokens=4, priority=3)
+    assert eng.admit(a) and eng.admit(b)
+    assert eng.victim_slot(2) == 0              # only a (prio 1) outranked
+    assert eng.victim_slot(1) is None           # nothing STRICTLY below 1
+    assert eng.victim_slot(5) == 0              # lowest priority first
+
+
+# -- watchdog -----------------------------------------------------------
+
+
+def test_watchdog_raises_on_stalled_engine(smollm, monkeypatch):
+    """An engine that stops planning work (q_lens always zero — the old
+    silent busy-spin) now raises StalledEngineError with a diagnosis."""
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=1, max_len=64, chunk=4)
+    monkeypatch.setattr(
+        eng, "plan_q_lens",
+        lambda budget=None: np.zeros((eng.max_batch,), np.int32))
+    sched = Scheduler(eng, watchdog_steps=16)
+    sched.submit(Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                         max_new_tokens=4))
+    with pytest.raises(StalledEngineError, match="no progress"):
+        sched.run()
+
+
+def test_watchdog_quiet_on_healthy_idle_arrivals(smollm):
+    """Waiting for a future arrival is NOT a stall: a sparse open-loop
+    workload (gaps far longer than a step) completes without tripping."""
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=1, max_len=64, chunk=4)
+    sched = Scheduler(eng, watchdog_steps=16)
+    for r in synthetic_workload(3, prompt_len=8, max_new_tokens=2,
+                                vocab=cfg.vocab_size, arrival_rate=8.0,
+                                seed=5):
+        sched.submit(r)
+    done = sched.run()
+    assert len(done) == 3
+
+
+def test_metrics_row_includes_robustness_counters(smollm):
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=1, max_len=64, chunk=4)
+    sched = Scheduler(eng)
+    sched.submit(Request(rid=0, prompt=np.arange(5, dtype=np.int32),
+                         max_new_tokens=2))
+    sched.run()
+    m = sched.metrics()
+    row = m.row()
+    for k in ("shed=", "preempt=", "cancel=", "dmiss=", "fault="):
+        assert k in row, row
+    rb = m.robustness()
+    assert set(rb) == {"n_shed", "n_preempted", "n_cancelled",
+                       "n_deadline_miss", "n_faults", "deadline_miss_p99"}

@@ -7,7 +7,8 @@
 - the resolved spec — not Engine flag defaults — is what reaches the
   engine (the acceptance criterion of the redesign);
 - the old per-knob ``Engine(...)`` / ``Scheduler(token_budget=)`` kwargs
-  still work for their one-release window, but warn.
+  and ``spec_from_engine_kwargs`` are fully retired (their one-release
+  deprecation window closed) — construction without a spec is a TypeError.
 """
 
 import dataclasses
@@ -126,24 +127,63 @@ def test_resolved_spec_reaches_engine(smollm):
     assert sched.token_budget != eng.max_batch * eng.chunk
 
 
-def test_engine_kwargs_deprecation_shim(smollm):
-    """Old per-knob kwargs still work — and warn — for one release."""
+def test_engine_kwargs_shim_retired(smollm):
+    """The PR 5 deprecation window is closed: per-knob Engine kwargs, the
+    Scheduler(token_budget=) kwarg and spec_from_engine_kwargs are gone."""
     cfg, params = smollm
-    with pytest.warns(DeprecationWarning):
-        eng = Engine(cfg, params, max_batch=3, max_len=48, chunk=4)
-    assert (eng.max_batch, eng.max_len, eng.chunk) == (3, 48, 4)
-    assert eng.spec.token_budget == 12          # the legacy B*chunk default
-    assert eng.spec.provenance["max_batch"].startswith("engine-kwargs")
-    with pytest.warns(DeprecationWarning):
-        sched = Scheduler(eng, token_budget=7)
-    assert sched.token_budget == 7              # deprecated kwarg still wins
+    with pytest.raises(TypeError):
+        Engine(cfg, params, max_batch=3, max_len=48, chunk=4)
+    with pytest.raises(TypeError):
+        Engine(cfg, params)                      # a spec is mandatory
+    r = ServeSpec(arch="smollm-360m", max_batch=2, max_len=64,
+                  prompt_len=8, max_new_tokens=2).resolve()
+    eng = Engine(cfg, params, spec=r)
+    with pytest.raises(TypeError):
+        Scheduler(eng, token_budget=7)
+    import repro.serving.api as api
+    assert not hasattr(api, "spec_from_engine_kwargs")
 
 
-def test_engine_rejects_spec_plus_kwargs(smollm):
-    cfg, params = smollm
-    r = ServeSpec(arch="smollm-360m", max_batch=2, max_len=64).resolve()
+def test_overload_resolves_from_cost_model():
+    """The "auto" overload knob becomes a concrete bounded-admission policy
+    priced by the Eq. 4-6 token-time estimates, with provenance; an explicit
+    OverloadPolicy passes through untouched."""
+    from repro.core.resolve import OverloadPolicy
+
+    r = ServeSpec(arch="smollm-360m", prompt_len=16, max_new_tokens=4).resolve()
+    assert isinstance(r.overload, OverloadPolicy)
+    assert r.overload.queue_cap >= 2 * r.max_batch
+    assert r.overload.est_request_s > 0
+    assert r.overload.shed == "deadline-first"
+    assert r.provenance["overload"].startswith("auto:cost-model")
+    assert "overload" in r.describe()
+
+    pol = OverloadPolicy(queue_cap=3, shed="reject-newest")
+    r2 = ServeSpec(arch="smollm-360m", overload=pol).resolve()
+    assert r2.overload is pol
+    assert r2.provenance["overload"] == "explicit"
+    # validation
     with pytest.raises(ValueError):
-        Engine(cfg, params, spec=r, max_batch=4)
+        OverloadPolicy(queue_cap=0)
+    with pytest.raises(ValueError):
+        OverloadPolicy(queue_cap=4, shed="bogus")
+    with pytest.raises(ValueError):
+        ServeSpec(arch="smollm-360m", overload="bogus")
+
+
+def test_faults_field_validated_and_in_meta():
+    from repro.serving.faults import Fault
+
+    f = Fault(kind="latency", at=(3,), ms=5.0)
+    r = ServeSpec(arch="smollm-360m", faults=[f]).resolve()
+    assert r.faults == (f,)                     # normalized to a tuple
+    assert r.as_meta()["faults"] == [f.describe()]
+    with pytest.raises(ValueError):
+        ServeSpec(arch="smollm-360m", faults=("nan",))   # not a Fault
+    with pytest.raises(ValueError):
+        Fault(kind="bogus", at=(1,))
+    with pytest.raises(ValueError):
+        Fault(kind="nan")                       # never fires
 
 
 def test_llm_generate_and_stream_agree(smollm):

@@ -7,7 +7,8 @@ import pytest
 
 import repro.configs as C
 from repro.models.model import init_params
-from repro.serving.engine import Engine, Request
+from _engine_helpers import make_engine
+from repro.serving.engine import Request
 from repro.serving.scheduler import Scheduler, synthetic_workload
 
 
@@ -20,7 +21,7 @@ def smollm():
 
 def test_engine_completes_all_requests(smollm):
     cfg, params = smollm
-    eng = Engine(cfg, params, max_batch=3, max_len=96)
+    eng = make_engine(cfg, params, max_batch=3, max_len=96)
     sched = Scheduler(eng)
     reqs = list(synthetic_workload(7, prompt_len=16, max_new_tokens=5,
                                    vocab=cfg.vocab_size))
@@ -46,14 +47,14 @@ def test_continuous_batching_matches_isolated_generation(smollm):
     # isolated: one request at a time, fresh engine
     isolated = []
     for p in prompts:
-        eng = Engine(cfg, params, max_batch=1, max_len=64)
+        eng = make_engine(cfg, params, max_batch=1, max_len=64)
         s = Scheduler(eng)
         s.submit(Request(rid=0, prompt=p, max_new_tokens=6))
         done = s.run()
         isolated.append(done[0].out_tokens)
 
     # contended: all five through a 2-slot engine
-    eng = Engine(cfg, params, max_batch=2, max_len=64)
+    eng = make_engine(cfg, params, max_batch=2, max_len=64)
     s = Scheduler(eng)
     for i, p in enumerate(prompts):
         s.submit(Request(rid=i, prompt=p, max_new_tokens=6))
@@ -65,7 +66,7 @@ def test_continuous_batching_matches_isolated_generation(smollm):
 
 def test_slot_reuse_after_retirement(smollm):
     cfg, params = smollm
-    eng = Engine(cfg, params, max_batch=1, max_len=64)
+    eng = make_engine(cfg, params, max_batch=1, max_len=64)
     sched = Scheduler(eng)
     for r in synthetic_workload(3, prompt_len=8, max_new_tokens=3,
                                 vocab=cfg.vocab_size):
@@ -79,7 +80,7 @@ def test_greedy_determinism(smollm):
     p = np.arange(10, dtype=np.int32) % cfg.vocab_size
     outs = []
     for _ in range(2):
-        eng = Engine(cfg, params, max_batch=1, max_len=64)
+        eng = make_engine(cfg, params, max_batch=1, max_len=64)
         s = Scheduler(eng)
         s.submit(Request(rid=0, prompt=p, max_new_tokens=8))
         outs.append(s.run()[0].out_tokens)

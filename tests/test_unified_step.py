@@ -21,6 +21,7 @@ import pytest
 
 import repro.configs as C
 from repro.models import model as M
+from _engine_helpers import make_engine
 from repro.serving.engine import Engine, PromptTooLongError, Request
 from repro.serving.scheduler import Scheduler, mixed_workload, \
     synthetic_workload
@@ -56,7 +57,7 @@ def test_unified_decode_only_matches_decode_program(smollm):
     cfg, params = smollm
     prompt = np.asarray([3, 1, 4, 1, 5, 9, 2, 6], np.int32)
 
-    uni = Engine(cfg, params, max_batch=2, max_len=64, chunk=8)
+    uni = make_engine(cfg, params, max_batch=2, max_len=64, chunk=8)
     r_u = Request(rid=0, prompt=prompt, max_new_tokens=6)
     _drive_prefill(uni, r_u)   # first token sampled from the last chunk
 
@@ -93,7 +94,7 @@ def test_engine_chunked_prefill_matches_oneshot_logits(arch):
     one = M.forward(params, cfg, tokens=jnp.asarray(prompt)[None],
                     cache=M.init_cache(cfg, 1, 64, jnp.float32))
 
-    eng = Engine(cfg, params, max_batch=2, max_len=64, chunk=4,
+    eng = make_engine(cfg, params, max_batch=2, max_len=64, chunk=4,
                  debug_logits=True)
     steps = _drive_prefill(eng, Request(rid=0, prompt=prompt,
                                         max_new_tokens=4))
@@ -115,7 +116,7 @@ def test_decode_unperturbed_by_neighbour_prefill(arch):
     p1 = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
 
     def run(with_neighbour: bool):
-        eng = Engine(cfg, params, max_batch=2, max_len=64, chunk=8)
+        eng = make_engine(cfg, params, max_batch=2, max_len=64, chunk=8)
         r0 = Request(rid=0, prompt=p0, max_new_tokens=5)
         _drive_prefill(eng, r0)
         if with_neighbour:
@@ -138,7 +139,7 @@ def test_no_starvation_under_poisson_load(smollm):
     """Every admitted request finishes: long prompts chunk through without
     starving decodes, short ones aren't starved by the long ones."""
     cfg, params = smollm
-    eng = Engine(cfg, params, max_batch=2, max_len=96, chunk=8)
+    eng = make_engine(cfg, params, max_batch=2, max_len=96, chunk=8)
     sched = Scheduler(eng)
     reqs = list(mixed_workload(6, short_len=10, n_long=2, long_len=48,
                                max_new_tokens=5, vocab=cfg.vocab_size,
@@ -158,7 +159,7 @@ def test_max_steps_reports_incomplete(smollm):
     """max_steps exits surface in-flight work instead of dropping it, and
     metrics() is well-defined with zero finished requests."""
     cfg, params = smollm
-    eng = Engine(cfg, params, max_batch=2, max_len=96, chunk=4)
+    eng = make_engine(cfg, params, max_batch=2, max_len=96, chunk=4)
     sched = Scheduler(eng)
     for r in synthetic_workload(4, prompt_len=16, max_new_tokens=8,
                                 vocab=cfg.vocab_size):
@@ -174,7 +175,7 @@ def test_prompt_overflow_rejected(smollm):
     """Silent prompt overflow is gone: an impossible request raises at
     submit/admit."""
     cfg, params = smollm
-    eng = Engine(cfg, params, max_batch=1, max_len=32)
+    eng = make_engine(cfg, params, max_batch=1, max_len=32)
     bad = Request(rid=0, prompt=np.zeros(40, np.int32), max_new_tokens=4)
     with pytest.raises(PromptTooLongError):
         eng.admit(bad)
@@ -190,7 +191,7 @@ def test_prompt_overflow_rejected_on_legacy_fallback():
     the BUCKET, not just the prompt."""
     cfg = C.get_reduced("rwkv6-1.6b")
     params = M.init_params(KEY, cfg, jnp.float32)
-    eng = Engine(cfg, params, max_batch=1, max_len=24)
+    eng = make_engine(cfg, params, max_batch=1, max_len=24)
     assert eng.legacy       # auto-fallback: ssm family
     # a 20-token prompt + 2 new tokens fits 24 cache positions, but the
     # blocking prefill writes the whole 32-wide bucket — rejected
@@ -202,7 +203,7 @@ def test_prompt_overflow_rejected_on_legacy_fallback():
 def test_token_budget_caps_prefill(smollm):
     """A sub-default budget throttles prefill chunks but never decode."""
     cfg, params = smollm
-    eng = Engine(cfg, params, max_batch=3, max_len=96, chunk=8)
+    eng = make_engine(cfg, params, max_batch=3, max_len=96, chunk=8)
     # slot 0 decoding, slots 1-2 prefilling
     r0 = Request(rid=0, prompt=np.arange(6, dtype=np.int32), max_new_tokens=8)
     _drive_prefill(eng, r0)
@@ -223,16 +224,16 @@ def test_unified_auto_fallback_for_recurrent_family(smollm):
     gone and ``REPRO_LEGACY_ENGINE`` is ignored."""
     cfg = C.get_reduced("rwkv6-1.6b")
     params = M.init_params(KEY, cfg, jnp.float32)
-    assert Engine(cfg, params, max_batch=1, max_len=32).legacy
+    assert make_engine(cfg, params, max_batch=1, max_len=32).legacy
     cfg_s, params_s = smollm
     with pytest.raises(TypeError):
-        Engine(cfg_s, params_s, max_batch=1, max_len=32, legacy=True)
+        Engine(cfg_s, params_s, legacy=True)
 
 
 def test_legacy_env_escape_hatch_retired(smollm, monkeypatch):
     cfg, params = smollm
     monkeypatch.setenv("REPRO_LEGACY_ENGINE", "1")
-    assert not Engine(cfg, params, max_batch=1, max_len=32).legacy
+    assert not make_engine(cfg, params, max_batch=1, max_len=32).legacy
 
 
 def test_engine_chunked_prefill_flash_chunk_kernel(smollm):
@@ -249,8 +250,8 @@ def test_engine_chunked_prefill_flash_chunk_kernel(smollm):
                     cache=M.init_cache(cfg, 1, 64, jnp.float32))
 
     def run(policy):
-        eng = Engine(cfg, params, max_batch=2, max_len=64, chunk=4,
-                     kernel_policy=policy, debug_logits=True)
+        eng = make_engine(cfg, params, max_batch=2, max_len=64, chunk=4,
+                     kernels=policy, debug_logits=True)
         req = Request(rid=0, prompt=prompt, max_new_tokens=3)
         steps = _drive_prefill(eng, req)
         while eng.n_active:
