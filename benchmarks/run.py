@@ -40,6 +40,9 @@ QUICK = {
     "kernels": kernel_bench.run,
     "serve_quick": serve_micro.run_quick,
     "serve_mixed": serve_micro.run_mixed_quick,
+    # paged-KV shared-prefix gate: prefix hits + paged==dense bit-identity
+    # + warm-TTFT and pool-footprint wins (docs/kv_cache.md)
+    "serve_prefix": serve_micro.run_prefix,
 }
 
 

@@ -43,7 +43,10 @@ from repro.serving.scheduler import (mixed_workload, synthetic_workload,
 # every scenario's meta must carry these graceful-degradation counters —
 # ``benchmarks.run --quick`` FAILS if they go missing from the artifact
 ROBUSTNESS_KEYS = ("n_shed", "n_preempted", "n_cancelled",
-                   "n_deadline_miss", "n_faults", "deadline_miss_p99")
+                   "n_deadline_miss", "n_faults", "deadline_miss_p99",
+                   # KV-cache efficiency (paged backend; docs/kv_cache.md)
+                   "kv_occupancy", "n_prefix_hits", "prefix_hit_tokens",
+                   "n_evictions")
 
 
 def run_quick() -> list:
@@ -52,14 +55,17 @@ def run_quick() -> list:
     Builds every engine through ``ServeSpec`` (explicit chunk/dispatch, the
     rest resolved), forces ``KernelPolicy.all_on()`` through a tiny MoE
     engine and FAILS unless the jitted graphs actually traced every
-    hot-path kernel.  Three runs of the ONE-program unified mixed step:
-      chunk=4 / dropless + chunk=4 / capacity — the mixed ragged batch must
-        trace topk_gate, the expert GEMM (grouped under dropless, batched
-        under capacity), the fused permute/unpermute pair AND the ragged
-        ``flash_chunk`` attention kernel;
-      chunk=1 / dropless — a pure-decode-shaped budget degenerates the
-        program to sq == 1, whose attention is the ``flash_decode``
-        specialization of the same kernel family.
+    hot-path kernel.  Four runs of the ONE-program unified mixed step:
+      chunk=4 / dropless + chunk=4 / capacity (kv auto -> paged) — the
+        mixed ragged batch must trace topk_gate, the expert GEMM (grouped
+        under dropless, batched under capacity), the fused
+        permute/unpermute pair AND the paged ragged attention kernel
+        ``flash_chunk_paged`` (the block-table path is the default);
+      chunk=4 / dropless / kv=dense — the dense cache keeps the original
+        ``flash_chunk`` routing alive;
+      chunk=1 / dropless / kv=dense — a pure-decode-shaped budget
+        degenerates the dense program to sq == 1, whose attention is the
+        ``flash_decode`` specialization of the same kernel family.
     """
     from repro.kernels import ops
     from repro.kernels.policy import KernelPolicy
@@ -68,15 +74,20 @@ def run_quick() -> list:
     cfg = C.get_reduced(arch)
     params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
     rows = []
-    cases = [("chunk4", "dropless", 4, {"grouped_gemm", "flash_chunk"}),
-             ("chunk4", "capacity", 4, {"moe_gemm", "flash_chunk"}),
-             ("chunk1", "dropless", 1, {"grouped_gemm", "flash_decode"})]
-    for mode, dispatch, chunk, extras in cases:
+    cases = [("chunk4", "dropless", 4, "auto",
+              {"grouped_gemm", "flash_chunk_paged"}),
+             ("chunk4", "capacity", 4, "auto",
+              {"moe_gemm", "flash_chunk_paged"}),
+             ("chunk4-dense", "dropless", 4, "dense",
+              {"grouped_gemm", "flash_chunk"}),
+             ("chunk1-dense", "dropless", 1, "dense",
+              {"grouped_gemm", "flash_decode"})]
+    for mode, dispatch, chunk, kv, extras in cases:
         ops.reset_counters()
         resolved = ServeSpec(
             arch=arch, kernels=KernelPolicy.all_on(), dispatch=dispatch,
             chunk=chunk, max_batch=2, max_len=64, prompt_len=8,
-            max_new_tokens=4).resolve()
+            max_new_tokens=4, kv=kv).resolve()
         llm = LLM.from_spec(resolved, cfg=cfg, params=params)
         sched = llm.serve(synthetic_workload(
             3, prompt_len=8, max_new_tokens=4, vocab=cfg.vocab_size,
@@ -186,12 +197,14 @@ def run_mixed(quick: bool = False):
     m = llm.serve(list(mixed_workload(
         3, short_len=10, n_long=1, long_len=24, max_new_tokens=4,
         vocab=cfg.vocab_size, arrival_rate=32.0, seed=1))).metrics()
-    n_flash = ops.counters["flash_chunk"]
+    n_flash = ops.counters["flash_chunk_paged"]
     if n_flash <= 0:
         raise RuntimeError(
-            "unified mixed step did not trace flash_chunk — silent jnp "
-            f"attention fallback (counters: {dict(ops.counters)})")
-    rows.append((f"serve_mixed/{arch}/kernels/flash_chunk", float(n_flash),
+            "unified mixed step (paged KV default) did not trace "
+            "flash_chunk_paged — silent jnp attention fallback "
+            f"(counters: {dict(ops.counters)})")
+    rows.append((f"serve_mixed/{arch}/kernels/flash_chunk_paged",
+                 float(n_flash),
                  f"traced call sites (all_on engine) "
                  f"incomplete={m.n_incomplete}"))
     return {"rows": rows,
@@ -200,6 +213,82 @@ def run_mixed(quick: bool = False):
 
 def run_mixed_quick():
     return run_mixed(quick=True)
+
+
+def run_prefix():
+    """Shared-prefix scenario: the paged KV cache's radix index must turn a
+    common system prompt into measured wins (``benchmarks.run --quick``).
+
+    One cold request seeds the prefix index with the system prompt's full
+    pages; a warm batch sharing that prompt then admits with most of its
+    prefill already cached.  FAILS unless (a) the warm batch scores prefix
+    hits, (b) the paged engine's greedy token streams are bit-identical to
+    a dense-backend twin, (c) warm TTFT p50 < 0.2x the cold TTFT, and
+    (d) the paged pool is strictly smaller than the dense footprint.
+    """
+    import numpy as np
+
+    from repro.serving.engine import Request
+
+    arch = "smollm-360m"
+    cfg = C.get_reduced(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(7)
+    system = rng.integers(0, cfg.vocab_size, size=176).astype(np.int32)
+    tails = [rng.integers(0, cfg.vocab_size, size=7).astype(np.int32)
+             for _ in range(5)]
+    prompts = [np.concatenate([system, t]) for t in tails]
+    warmup = rng.integers(0, cfg.vocab_size, size=183).astype(np.int32)
+
+    def mk(rid, prompt):
+        return Request(rid=rid, prompt=prompt, max_new_tokens=8, arrival=0.0)
+
+    outs = {}
+    llms = {}
+    for kv in ("paged", "dense"):
+        # budget 32 lets every warm prefill tail land in ONE step (4 slots
+        # x 7 uncached tokens); the cold prefill stays chunk-capped at 8
+        resolved = ServeSpec(
+            arch=arch, kv=kv, chunk=8, token_budget=32, max_batch=4,
+            max_len=256, prompt_len=183, max_new_tokens=8).resolve()
+        llm = LLM.from_spec(resolved, cfg=cfg, params=params)
+        llms[kv] = llm
+        llm.generate([warmup], max_new_tokens=2)       # absorb compile time
+        cold = llm.serve([mk(0, prompts[0])]).finished
+        warm = llm.serve([mk(i, p) for i, p in
+                          enumerate(prompts[1:], start=1)]).finished
+        assert len(cold) == 1 and len(warm) == 4, \
+            f"prefix scenario ({kv}): {len(cold)}+{len(warm)} completed"
+        outs[kv] = ({r.rid: list(r.out_tokens) for r in cold + warm},
+                    cold[0].ttft,
+                    float(np.median([r.ttft for r in warm])))
+
+    if outs["paged"][0] != outs["dense"][0]:
+        raise RuntimeError(
+            "paged and dense greedy token streams diverged: "
+            f"{outs['paged'][0]} vs {outs['dense'][0]}")
+    stats = llms["paged"].engine.kv.stats
+    if stats.n_prefix_hits < 4 or stats.prefix_hit_tokens < 4 * len(system):
+        raise RuntimeError(
+            f"shared system prompt scored no prefix reuse: {stats}")
+    cold_ttft, warm_p50 = outs["paged"][1], outs["paged"][2]
+    ratio = warm_p50 / max(cold_ttft, 1e-9)
+    if ratio >= 0.2:
+        raise RuntimeError(
+            f"warm TTFT p50 {warm_p50*1e3:.1f}ms is not < 0.2x the cold "
+            f"TTFT {cold_ttft*1e3:.1f}ms (ratio {ratio:.2f})")
+    paged_b = llms["paged"].engine.kv.kv_bytes()
+    dense_b = llms["dense"].engine.kv.kv_bytes()
+    if paged_b >= dense_b:
+        raise RuntimeError(
+            f"paged pool ({paged_b}B) is not below the dense (B, max_len) "
+            f"footprint ({dense_b}B)")
+    return [(f"serve_prefix/{arch}/cold_ttft", cold_ttft * 1e6,
+             f"{len(system)}-token shared system prompt, chunk=8"),
+            (f"serve_prefix/{arch}/warm_ttft_p50", warm_p50 * 1e6,
+             f"ratio={ratio:.2f} hits={stats.n_prefix_hits} "
+             f"hit_tokens={stats.prefix_hit_tokens} "
+             f"kv_bytes={paged_b}/{dense_b} (paged/dense)")]
 
 
 def run():
@@ -217,6 +306,7 @@ def run():
                      f"thr={m.throughput_tok_s:.1f}tok/s n={m.n_requests}"))
     mixed = run_mixed()
     rows.extend(mixed["rows"])
+    rows.extend(run_prefix())
     return {"rows": rows, "meta": mixed["meta"]}
 
 

@@ -13,12 +13,17 @@ high-priority with a deadline, the rest best-effort), so the run also
 exercises the robustness tier — priority preemption, deadline
 enforcement, overload shedding — and prints the shed/preempt/deadline
 counters next to the latency indicators (docs/serving.md, "Robustness &
-degradation").
+degradation").  Every request additionally shares a SYSTEM PROMPT, so the
+paged KV cache serves its pages once and re-matches them from the prefix
+index on later admissions — the cache stats printed at the end show the
+reuse (docs/kv_cache.md).
 
 Run:  PYTHONPATH=src python examples/serve_moe.py [--arch phi3.5-moe-42b]
 """
 
 import argparse
+
+import numpy as np
 
 import repro.configs as C
 from repro.core.topology import ASCEND_910B_CLUSTER, H20_CLUSTER
@@ -34,10 +39,13 @@ def main():
     ap.add_argument("--rate", type=float, default=4.0)
     ap.add_argument("--deadline", type=float, default=5.0,
                     help="deadline (s) carried by the high-priority tier")
+    ap.add_argument("--system-len", type=int, default=48,
+                    help="length of the shared system prompt every request "
+                         "carries (paged-KV prefix-reuse showcase)")
     args = ap.parse_args()
 
-    spec = ServeSpec(arch=args.arch, prompt_len=32, max_new_tokens=12,
-                     arrival_rate=args.rate)
+    spec = ServeSpec(arch=args.arch, prompt_len=args.system_len + 32,
+                     max_new_tokens=12, arrival_rate=args.rate)
 
     print("== offline stage: the spec resolved on the paper's clusters ==")
     for cl in (H20_CLUSTER, ASCEND_910B_CLUSTER):
@@ -56,21 +64,33 @@ def main():
     print("\n== resolved serving spec (provenance) ==")
     print(resolved.describe())
     llm = LLM.from_spec(resolved)
+    system = np.random.default_rng(7).integers(
+        0, llm.cfg.vocab_size, args.system_len).astype(np.int32)
     reqs = list(tiered_workload(
         args.requests, prompt_len=32, max_new_tokens=12,
         vocab=llm.cfg.vocab_size, arrival_rate=args.rate,
-        hi_every=3, hi_priority=10, hi_deadline_s=args.deadline))
+        hi_every=3, hi_priority=10, hi_deadline_s=args.deadline,
+        system=system))
     n_hi = sum(1 for r in reqs if r.priority > 0)
     print(f"\n== online stage: {len(reqs)} requests "
           f"({n_hi} high-priority w/ {args.deadline:.1f}s deadline, "
-          f"{len(reqs) - n_hi} best-effort) ==")
+          f"{len(reqs) - n_hi} best-effort; shared {args.system_len}-token "
+          "system prompt) ==")
     sched = llm.serve(reqs)
     m = sched.metrics()
     print(f"\n== measured on this host (reduced {llm.cfg.name}) ==")
     print(m.row())
     rb = m.robustness()
     print("robustness: " + " ".join(f"{k}={v}" for k, v in rb.items()))
+    kv = llm.engine.kv
+    print(f"kv cache: backend={kv.backend} peak_occupancy="
+          f"{m.kv_occupancy:.0%} prefix_hits={m.n_prefix_hits} "
+          f"({m.prefix_hit_tokens} tok reused) evictions={m.n_evictions} "
+          f"pool_bytes={kv.kv_bytes()}")
     assert m.n_incomplete == 0, "every request must reach a terminal state"
+    # the index seeds at retirement, so reuse needs a second admission wave
+    if kv.backend == "paged" and len(reqs) > llm.engine.max_batch:
+        assert m.n_prefix_hits > 0, "shared system prompt must re-match"
 
 
 if __name__ == "__main__":

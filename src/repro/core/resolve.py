@@ -215,8 +215,105 @@ def auto_max_len(l_in: int, l_out: int, front: int = 0,
                f"{l_out} new tokens, {granule}-row granule)")
 
 
+# paged KV: tokens per fixed-size cache page (the block-table granule).
+# Must divide max_len; auto_kv degrades to the largest power-of-two divisor.
+KV_PAGE_SIZE = 16
+_KV_BACKENDS = ("dense", "paged")
+
+
+@dataclasses.dataclass(frozen=True)
+class KVConfig:
+    """KV-cache layout policy: how the engine stores per-slot KV state.
+
+    ``dense`` is the per-slot ``(B, max_len, ...)`` buffer; ``paged`` is
+    block/page indirection — fixed ``page_size``-token pages in a global
+    ``pool_pages``-page pool, a per-slot block table, and (when
+    ``prefix_cache``) a radix index that lets requests sharing a prompt
+    prefix reference the same pages (docs/kv_cache.md).  ``pool_pages == 0``
+    means "auto": the resolver sizes the pool from the Eq. 8 workload
+    envelope instead of the dense worst case.
+    """
+
+    backend: str = "paged"
+    page_size: int = KV_PAGE_SIZE
+    pool_pages: int = 0               # 0 = auto (resolver fills from Eq. 8)
+    prefix_cache: bool = True
+
+    def __post_init__(self):
+        if self.backend not in _KV_BACKENDS:
+            raise ValueError(f"kv backend must be one of {_KV_BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.pool_pages < 0:
+            raise ValueError(f"pool_pages must be >= 0, got {self.pool_pages}")
+
+    def describe(self) -> str:
+        if self.backend == "dense":
+            return "dense"
+        pc = "on" if self.prefix_cache else "off"
+        return (f"paged(page={self.page_size}, pool={self.pool_pages}p, "
+                f"prefix_cache={pc})")
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """KV bytes one cached token costs across all layers (the Eq. 8
+    per-token memory term): MLA caches the compressed latent + rope key,
+    GQA caches k/v heads."""
+    if getattr(cfg, "attention", "gqa") == "mla":
+        per = cfg.kv_lora_rank + cfg.rope_head_dim
+    else:
+        per = 2 * cfg.n_kv_heads * cfg.head_dim
+    return cfg.n_layers * per * dtype_bytes
+
+
+def auto_kv(cfg: ModelConfig, *, max_batch: int, max_len: int, l_in: int,
+            l_out: int, front: int = 0, paged_ok: bool = True,
+            backend: Union[str, None] = None, page_size: Union[int, None] = None,
+            pool_pages: int = 0, prefix_cache: Union[bool, None] = None
+            ) -> tuple[KVConfig, str]:
+    """Resolve the ``kv`` knob: backend, page size, pool size, prefix cache.
+
+    Explicit values (``backend``/``page_size``/``pool_pages``/
+    ``prefix_cache``) pass through; auto fills the rest.  The pool is sized
+    from the Eq. 8 memory bound instantiated on the workload envelope —
+    ``max_batch`` concurrent requests each holding ``front + l_in + l_out``
+    tokens of KV — instead of the dense worst case ``max_batch * max_len``,
+    which is what makes paging a capacity lever (pages the envelope does
+    not need stay free for more slots or longer prompts; exhaustion
+    degrades to cache-preserving preemption, not OOM).
+    """
+    if backend is None and not paged_ok:
+        return (KVConfig(backend="dense"),
+                "auto:family(legacy blocking path keeps the dense cache)")
+    if backend == "dense":
+        return KVConfig(backend="dense"), "explicit"
+    # page size must divide max_len (block tables address max_len//page rows)
+    ps = page_size or KV_PAGE_SIZE
+    while ps > 1 and max_len % ps:
+        ps //= 2
+    dense_pages = max_batch * (max_len // ps)
+    if pool_pages:
+        pool = pool_pages
+    else:
+        envelope = max(front + l_in + l_out, 1)
+        per_slot = -(-envelope // ps)
+        # floor: one slot must always be able to reach max_len
+        pool = max(max_batch * per_slot, max_len // ps)
+        pool = min(pool, dense_pages)
+    pc = True if prefix_cache is None else prefix_cache
+    kv = KVConfig(backend="paged", page_size=ps, pool_pages=pool,
+                  prefix_cache=pc)
+    src = "explicit" if backend == "paged" else "auto"
+    bpt = kv_bytes_per_token(cfg)
+    return kv, (f"{src}:cost-model(Eq. 8 envelope {front}+{l_in}+{l_out} tok "
+                f"x {max_batch} slots @ {bpt}B/tok -> {pool} pages vs "
+                f"{dense_pages} dense)")
+
+
 __all__ = ["AUTO", "ITL_SLACK", "CHUNK_CANDIDATES", "AUTO_BATCH_CAP",
-           "LEN_GRANULE", "OVERLOAD_WAIT_BOUND_S", "OverloadPolicy",
+           "LEN_GRANULE", "OVERLOAD_WAIT_BOUND_S", "KV_PAGE_SIZE",
+           "OverloadPolicy", "KVConfig", "kv_bytes_per_token", "auto_kv",
            "resolve_cluster", "plan_name_for", "auto_max_batch",
            "token_times", "auto_chunk", "auto_token_budget", "auto_overload",
            "auto_max_len"]

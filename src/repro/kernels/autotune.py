@@ -57,7 +57,9 @@ _CACHE: dict[KernelKey, dict] = {}
 
 # v2: added the "flash_chunk" op key ({bq, bs} block dicts) — v1 files
 # predate the ragged mixed-chunk kernel and are invalidated wholesale.
-CACHE_VERSION = 2
+# v3: added "flash_chunk_paged" (bs must divide the KV page size, so its
+# defaults differ from flash_chunk's) — v2 files invalidated wholesale.
+CACHE_VERSION = 3
 _persist_loaded = False
 
 
@@ -246,6 +248,21 @@ def _default_blocks(op: str, shape: tuple, dtype: str) -> dict:
         while bs * 2 <= s and bs <= 1024:
             bs *= 2
         return {"bq": min(bq, 128), "bs": min(bs, 2048)}
+    if op == "flash_chunk_paged":
+        # key is q.shape + (P, page) = (B, sq, nq, hd, P, page): q tile as
+        # flash_chunk; the KV tile must DIVIDE the page size (the block
+        # table routes whole tiles), so take the largest power-of-two
+        # divisor of the page up to the flash_chunk cap
+        _b, sq, _nq, _hd, _p, page = shape
+        bq = 8
+        while bq * 2 <= sq and bq <= 64:
+            bq *= 2
+        bs = 1
+        while bs * 2 <= min(page, 2048) and page % (bs * 2) == 0:
+            bs *= 2
+        if page % bs:                 # odd page size: one tile per page
+            bs = page
+        return {"bq": min(bq, 128), "bs": bs}
     raise KeyError(op)
 
 
@@ -277,6 +294,8 @@ def _key_shape(op: str, args: tuple) -> tuple:
         return tuple(args[1].shape)
     if op == "flash_chunk":               # (q, k, v, ...) -> q.shape + (S,)
         return tuple(args[0].shape) + (args[1].shape[1],)
+    if op == "flash_chunk_paged":         # (q, kp, vp, bt, ...) -> q + (P, page)
+        return tuple(args[0].shape) + (args[1].shape[0], args[1].shape[1])
     return tuple(args[0].shape)           # topk_gate: logits.shape
 
 

@@ -166,4 +166,98 @@ def flash_chunk(q, k, v, q_offset, q_len, kv_len, *, bq: int = 128,
     return out[:, :sq].reshape(b, sq, nq, hdv)
 
 
-__all__ = ["flash_chunk"]
+# ---------------------------------------------------------------------------
+# Paged variant: KV tiles fetched through a per-slot block table
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(meta_ref, bt_ref, *rest, **kw):
+    # the block table is consumed by the index maps only; the kernel body is
+    # the DENSE body verbatim (rows/positions are logical) — which is what
+    # makes the paged output bit-identical to flash_chunk at equal (bq, bs)
+    _flash_chunk_kernel(meta_ref, *rest, **kw)
+
+
+def _paged_kv_tile_index(bi, hi, qi, j, m, bt, *, bq: int, bs: int, ps: int):
+    """Frontier-clamped logical KV tile ``j`` -> (page, tile-in-page).
+
+    Same causal-frontier clamp as ``_kv_tile_index`` (dead tiles re-request
+    the resident block), then the logical tile routes through the slot's
+    block table: page ``bt[bi, tile // (ps // bs)]``.  Unallocated entries
+    (−1, beyond the slot's length by the host allocator's invariant) clamp
+    to page 0 — their keys sit past ``kv_len`` and are masked in-kernel.
+    """
+    row_hi = jnp.minimum(m[1, bi] - qi * bq, bq)
+    kv_limit = jnp.minimum(m[2, bi], m[0, bi] + qi * bq + row_hi)
+    last = jnp.maximum((kv_limit - 1) // bs, 0)
+    jj = jnp.minimum(j, last)
+    tpp = ps // bs                    # KV tiles per page
+    page = jnp.maximum(bt[bi, jj // tpp], 0)
+    return page, jj % tpp, hi, 0
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bs", "scale", "interpret"))
+def flash_chunk_paged(q, k_pages, v_pages, block_tables, q_offset, q_len,
+                      kv_len, *, bq: int = 128, bs: int = None,
+                      scale: float = None, interpret: bool = False):
+    """``flash_chunk`` against a PAGED cache: q (B, sq, nq, hd);
+    k_pages (P, page, nkv, hd); v_pages (P, page, nkv, hdv);
+    block_tables (B, max_blocks) int32 -> (B, sq, nq, hdv).
+
+    Slot ``i``'s logical KV row ``t`` lives at
+    ``pages[block_tables[i, t // page], t % page]``; the indirection is
+    resolved entirely in the BlockSpec index map (scalar-prefetched block
+    tables), so the kernel body — and therefore the arithmetic, the online
+    softmax order, and the result bits — is ``flash_chunk``'s verbatim.
+    ``bs`` must divide the page size (default: one tile per page).
+    """
+    b, sq, nq, hd = q.shape
+    n_pages, page = k_pages.shape[0], k_pages.shape[1]
+    nkv = k_pages.shape[2]
+    hdv = v_pages.shape[-1]
+    nb = block_tables.shape[1]
+    g = nq // nkv
+    if scale is None:
+        scale = hd ** -0.5
+    bs = page if bs is None else min(bs, page)
+    if page % bs:
+        raise ValueError(f"bs {bs} must divide the page size {page}")
+    bq = min(bq, sq)
+    pq = (-sq) % bq
+    qg = q.reshape(b, sq, nkv, g, hd)
+    if pq:
+        qg = jnp.pad(qg, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    sqp = sq + pq
+
+    meta = jnp.stack([
+        jnp.broadcast_to(jnp.atleast_1d(q_offset), (b,)),
+        jnp.broadcast_to(jnp.atleast_1d(q_len), (b,)),
+        jnp.broadcast_to(jnp.atleast_1d(kv_len), (b,)),
+    ]).astype(jnp.int32)                                  # (3, B)
+
+    kv_index = functools.partial(_paged_kv_tile_index, bq=bq, bs=bs, ps=page)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,        # meta (3, B) + block tables (B, nb)
+        grid=(b, nkv, sqp // bq, nb * (page // bs)),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, g, hd),
+                         lambda bi, hi, qi, j, m, bt: (bi, qi, hi, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), kv_index),
+            pl.BlockSpec((1, bs, 1, hdv), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, g, hdv),
+                               lambda bi, hi, qi, j, m, bt: (bi, qi, hi, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bq * g, 1), jnp.float32),
+                        pltpu.VMEM((bq * g, 1), jnp.float32),
+                        pltpu.VMEM((bq * g, hdv), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, bq=bq, bs=bs, g=g, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sqp, nkv, g, hdv), q.dtype),
+        interpret=interpret,
+    )(meta, block_tables.astype(jnp.int32), qg, k_pages, v_pages)
+    return out[:, :sq].reshape(b, sq, nq, hdv)
+
+
+__all__ = ["flash_chunk", "flash_chunk_paged"]

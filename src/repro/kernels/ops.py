@@ -21,6 +21,7 @@ import jax
 
 from repro.kernels import autotune, ref
 from repro.kernels.flash_chunk import flash_chunk as _flash_chunk
+from repro.kernels.flash_chunk import flash_chunk_paged as _flash_chunk_paged
 from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.moe_gemm import grouped_gemm as _grouped_gemm
 from repro.kernels.moe_gemm import moe_gemm as _moe_gemm
@@ -88,6 +89,18 @@ def flash_chunk(q, k, v, q_offset, q_len, kv_len, **kw):
     return _flash_chunk(q, k, v, q_offset, q_len, kv_len, **kw)
 
 
+def flash_chunk_paged(q, k_pages, v_pages, block_tables, q_offset, q_len,
+                      kv_len, **kw):
+    counters["flash_chunk_paged"] += 1
+    kw.setdefault("interpret", _interpret())
+    if not {"bq", "bs"} & kw.keys():
+        kw.update(autotune.select_blocks(
+            "flash_chunk_paged",
+            tuple(q.shape) + (k_pages.shape[0], k_pages.shape[1]), q.dtype))
+    return _flash_chunk_paged(q, k_pages, v_pages, block_tables,
+                              q_offset, q_len, kv_len, **kw)
+
+
 def permute_tokens(x, src_tok, **kw):
     counters["permute_tokens"] += 1
     kw.setdefault("interpret", _interpret())
@@ -121,12 +134,13 @@ grouped_gemm_ref = ref.grouped_gemm_ref
 topk_gate_ref = ref.topk_gate_ref
 flash_decode_ref = ref.flash_decode_ref
 flash_chunk_ref = ref.flash_chunk_ref
+flash_chunk_paged_ref = ref.flash_chunk_paged_ref
 permute_tokens_ref = ref.permute_tokens_ref
 unpermute_tokens_ref = ref.unpermute_tokens_ref
 
 __all__ = ["moe_gemm", "grouped_gemm", "topk_gate", "flash_decode",
-           "flash_chunk", "permute_tokens", "permute_tokens_ragged",
-           "unpermute_tokens", "moe_gemm_ref", "grouped_gemm_ref",
-           "topk_gate_ref", "flash_decode_ref", "flash_chunk_ref",
-           "permute_tokens_ref", "unpermute_tokens_ref",
-           "counters", "reset_counters"]
+           "flash_chunk", "flash_chunk_paged", "permute_tokens",
+           "permute_tokens_ragged", "unpermute_tokens", "moe_gemm_ref",
+           "grouped_gemm_ref", "topk_gate_ref", "flash_decode_ref",
+           "flash_chunk_ref", "flash_chunk_paged_ref", "permute_tokens_ref",
+           "unpermute_tokens_ref", "counters", "reset_counters"]

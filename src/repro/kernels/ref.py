@@ -88,6 +88,26 @@ def flash_chunk_ref(q, k, v, q_offset, q_len, kv_len, scale=None):
     return o.reshape(b, sq, nq, v.shape[-1]).astype(q.dtype)
 
 
+def flash_chunk_paged_ref(q, k_pages, v_pages, block_tables, q_offset, q_len,
+                          kv_len, scale=None):
+    """Paged ragged mixed-chunk attention.  q (B, sq, nq, hd);
+    k_pages (P, page, nkv, hd); v_pages (P, page, nkv, hdv);
+    block_tables (B, max_blocks) int32 (−1 = unallocated).
+
+    Gathers each slot's pages into a dense (B, max_blocks*page, ...) view —
+    unallocated blocks read page 0, whose rows sit past ``kv_len`` and are
+    masked — then defers to ``flash_chunk_ref``.
+    """
+    n_pages, page = k_pages.shape[0], k_pages.shape[1]
+    b, nb = block_tables.shape
+    bt = jnp.clip(block_tables, 0, n_pages - 1)
+    k = jnp.take(k_pages, bt, axis=0).reshape(b, nb * page,
+                                              *k_pages.shape[2:])
+    v = jnp.take(v_pages, bt, axis=0).reshape(b, nb * page,
+                                              *v_pages.shape[2:])
+    return flash_chunk_ref(q, k, v, q_offset, q_len, kv_len, scale)
+
+
 def permute_tokens_ref(x, src_tok):
     """x (T, h), src_tok (N,) int32 -> (N, h); src_tok[i] < 0 yields a 0 row."""
     rows = jnp.take(x, jnp.maximum(src_tok, 0), axis=0)
@@ -108,5 +128,5 @@ def unpermute_tokens_ref(buf, src_slot, weights):
 
 
 __all__ = ["moe_gemm_ref", "grouped_gemm_ref", "topk_gate_ref",
-           "flash_decode_ref", "flash_chunk_ref", "permute_tokens_ref",
-           "unpermute_tokens_ref"]
+           "flash_decode_ref", "flash_chunk_ref", "flash_chunk_paged_ref",
+           "permute_tokens_ref", "unpermute_tokens_ref"]

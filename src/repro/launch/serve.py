@@ -78,6 +78,11 @@ def parse_args(argv=None) -> argparse.Namespace:
                     help="total tokens per unified iteration across all "
                          "slots; auto = max_batch decode tokens + one "
                          "prefill chunk (decode is scheduled first)")
+    ap.add_argument("--kv", default=AUTO, choices=(AUTO, "dense", "paged"),
+                    help="KV cache backend: auto = paged with shared-"
+                         "prefix reuse for unified-step families (pool "
+                         "sized from the Eq. 8 envelope), dense for "
+                         "legacy-path families (docs/kv_cache.md)")
     ap.add_argument("--seed", type=int, default=0)
     return ap.parse_args(argv)
 
@@ -88,10 +93,10 @@ def build_spec(args: argparse.Namespace) -> ServeSpec:
         arch=args.arch, reduced=args.reduced, cluster=args.cluster,
         strategy=args.strategy, kernels=args.kernels,
         dispatch=args.dispatch, chunk=args.chunk,
-        token_budget=args.token_budget, max_batch=args.max_batch,
-        max_len=args.max_len, prompt_len=args.prompt_len,
-        max_new_tokens=args.max_new, arrival_rate=args.rate,
-        objective=args.objective, seed=args.seed)
+        token_budget=args.token_budget, kv=args.kv,
+        max_batch=args.max_batch, max_len=args.max_len,
+        prompt_len=args.prompt_len, max_new_tokens=args.max_new,
+        arrival_rate=args.rate, objective=args.objective, seed=args.seed)
 
 
 def main(argv=None):

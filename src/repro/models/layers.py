@@ -237,6 +237,45 @@ def write_cache(buf, new, idx, valid_len=None):
     return buf.at[bi, rows].set(new.astype(buf.dtype), mode="drop")
 
 
+def write_cache_paged(pool, new, idx, block_table, valid_len=None):
+    """Write ``new`` (b, s, ...) into the paged pool (P, page, ...) at the
+    slots' logical offsets ``idx`` (b,), routed through ``block_table``
+    (b, max_blocks) — logical block ``pos // page`` maps to a physical page.
+
+    Same ragged-tail contract as ``write_cache``: rows past ``valid_len[i]``
+    (and rows whose logical block is unallocated, table entry < 0) are
+    parked out of bounds and dropped by the scatter, so an idle slot — or a
+    slot whose pages the host allocator withheld — never touches the pool.
+    Shared prefix pages are never written either: the host hands a slot a
+    cache offset past its shared full blocks, so ``pos`` starts beyond them.
+    """
+    P, ps = pool.shape[0], pool.shape[1]
+    b, s = new.shape[:2]
+    nb = block_table.shape[1]
+    pos = idx[:, None] + jnp.arange(s, dtype=jnp.int32)[None]    # (b, s)
+    blk = jnp.clip(pos // ps, 0, nb - 1)
+    page = jnp.take_along_axis(block_table, blk, axis=1)         # (b, s)
+    ok = page >= 0
+    if valid_len is not None:
+        ok = ok & (jnp.arange(s)[None] < valid_len[:, None])
+    page = jnp.where(ok, page, P)      # park invalid rows out of bounds
+    return pool.at[page, pos % ps].set(new.astype(pool.dtype), mode="drop")
+
+
+def gather_pages(pool, block_table):
+    """Materialize a slot-major dense view (b, max_blocks*page, ...) of the
+    paged pool through the block tables.  ``max_blocks * page == max_len``,
+    so the view is shape-identical to the dense cache buffer — unallocated
+    blocks (table entry < 0) read page 0's garbage, which sits at logical
+    positions >= the slot's length and is masked by ``kv_len`` exactly like
+    a dense buffer's stale tail.  The jnp fallback of the paged attention
+    path is therefore *the same computation* as the dense path."""
+    P, ps = pool.shape[0], pool.shape[1]
+    b, nb = block_table.shape
+    pages = jnp.take(pool, jnp.clip(block_table, 0, P - 1), axis=0)
+    return pages.reshape(b, nb * ps, *pool.shape[2:])
+
+
 def decode_attention(q, k, v, *, kv_len=None, q_positions=None, window: int = 0,
                      k_positions: Optional[jax.Array] = None,
                      scale: Optional[float] = None,
@@ -323,10 +362,16 @@ def gqa_spec(cfg: ModelConfig) -> dict:
 
 @dataclasses.dataclass
 class KVView:
-    """Either fresh K/V (prefill/train) or a cache to read+update (decode)."""
+    """Either fresh K/V (prefill/train) or a cache to read+update (decode).
+
+    With ``block_table`` set, k/v are paged POOLS (P, page, nkv, hd) and the
+    table (b, max_blocks) maps each slot's logical blocks to physical pages
+    (docs/kv_cache.md); without it they are dense (b, max_len, nkv, hd)
+    per-slot buffers."""
     k: jax.Array
     v: jax.Array
     length: Optional[jax.Array] = None  # valid prefix length of the cache
+    block_table: Optional[jax.Array] = None
 
 
 def gqa_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
@@ -369,6 +414,37 @@ def gqa_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
         out = chunked_attention(q, k, v, causal=True, window=window,
                                 chunk_size=chunk_size)
         new_kv = (k, v)
+    elif cache.block_table is not None:   # paged cache (pool + block table)
+        if q_lens is None:
+            raise NotImplementedError(
+                "paged KV cache requires the unified mixed step (q_lens)")
+        if window:
+            raise NotImplementedError("paged KV cache with sliding window")
+        bt = cache.block_table
+        kc = write_cache_paged(cache.k, k, idx, bt, valid_len=q_lens)
+        vc = write_cache_paged(cache.v, v, idx, bt, valid_len=q_lens)
+        # no plan.constrain on the pools: they carry no batch axis and stay
+        # replicated for now (seq-sharding a page pool is a follow-up)
+        kv_len = idx + q_lens
+        pol = plan.kernels
+        if pol is not None and pol.flash_chunk:
+            from repro.kernels import ops as _kops
+            out = _kops.flash_chunk_paged(q, kc, vc, bt, idx, q_lens, kv_len,
+                                          scale=float(q.shape[-1] ** -0.5))
+        else:
+            # gathered view is shape-identical to the dense buffer, so the
+            # jnp fallback routes EXACTLY like the dense path (bit-identical
+            # streams — the engine-level paged-vs-dense oracle relies on it)
+            kd, vd = gather_pages(kc, bt), gather_pages(vc, bt)
+            if s == 1:
+                out = decode_attention(q, kd, vd, kv_len=kv_len,
+                                       q_positions=positions_from(idx, s),
+                                       policy=pol)
+            else:
+                out = chunked_attention(q, kd, vd, q_offset=idx,
+                                        kv_len=kv_len, causal=True,
+                                        chunk_size=chunk_size, policy=pol)
+        new_kv = (kc, vc)
     else:
         kc = write_cache(cache.k, k, idx, valid_len=q_lens)
         vc = write_cache(cache.v, v, idx, valid_len=q_lens)
@@ -435,8 +511,15 @@ def _mla_qkr(p, x, cfg, positions):
 
 def mla_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
                   positions=None, cache=None, chunk_size: Optional[int] = None,
-                  absorb: Optional[bool] = None, q_lens=None):
+                  absorb: Optional[bool] = None, q_lens=None,
+                  block_table=None):
     """MLA attention.  cache = (c_cache, kr_cache, length) for decode.
+
+    ``block_table`` (b, max_blocks) marks a paged latent cache: c/kr are
+    pools (P, page, r|rd) and attention reads them through a gathered
+    slot-major view (the latent is rank-r compressed, so the gather is
+    cheap — both MLA regimes materialize latent-sized tensors anyway; the
+    dedicated paged kernel is reserved for the GQA path).
 
     ``absorb=None`` auto-selects the regime (the DeepSeek serving recipe):
       s > 1 (train / prefill)  expanded — K/V up-projected per head, standard
@@ -467,7 +550,22 @@ def mla_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
         # buffer so chunk i attends to chunks 0..i (DeepSeek's recipe:
         # recompute per-head K/V from the latent cache).
         q = jnp.concatenate([q_nope, q_rope], axis=-1)
-        if cache is not None:
+        if cache is not None and block_table is not None:   # paged latent
+            if q_lens is None:
+                raise NotImplementedError(
+                    "paged KV cache requires the unified mixed step (q_lens)")
+            c_cache, kr_cache, idx = cache
+            cc = write_cache_paged(c_cache, c, idx, block_table,
+                                   valid_len=q_lens)
+            krc = write_cache_paged(kr_cache, k_rope, idx, block_table,
+                                    valid_len=q_lens)
+            src_c = gather_pages(cc, block_table)
+            src_kr = gather_pages(krc, block_table)
+            skv = src_c.shape[1]
+            off = idx
+            kv_len = idx + q_lens
+            new_cache = (cc, krc)
+        elif cache is not None:
             c_cache, kr_cache, idx = cache
             cc = write_cache(c_cache, c, idx, valid_len=q_lens)
             krc = write_cache(kr_cache, k_rope, idx, valid_len=q_lens)
@@ -505,6 +603,20 @@ def mla_attention(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
         if cache is None:
             cc, krc, off, kv_len = c, k_rope, 0, None
             new_cache = (c, k_rope)
+        elif block_table is not None:    # paged latent cache
+            if q_lens is None:
+                raise NotImplementedError(
+                    "paged KV cache requires the unified mixed step (q_lens)")
+            c_cache, kr_cache, idx = cache
+            cc_pool = write_cache_paged(c_cache, c, idx, block_table,
+                                        valid_len=q_lens)
+            krc_pool = write_cache_paged(kr_cache, k_rope, idx, block_table,
+                                         valid_len=q_lens)
+            cc = gather_pages(cc_pool, block_table)
+            krc = gather_pages(krc_pool, block_table)
+            off = idx
+            kv_len = idx + q_lens
+            new_cache = (cc_pool, krc_pool)
         else:
             c_cache, kr_cache, idx = cache
             cc = write_cache(c_cache, c, idx, valid_len=q_lens)
@@ -565,4 +677,5 @@ __all__ = [
     "rms_norm", "activate", "apply_rope", "apply_mrope", "chunked_attention",
     "gqa_spec", "gqa_attention", "mla_spec", "mla_attention",
     "mlp_spec", "mlp", "KVView", "NEG_INF",
+    "write_cache", "write_cache_paged", "gather_pages",
 ]

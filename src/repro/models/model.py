@@ -248,6 +248,45 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {"groups": groups, "length": length}
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                     page_size: int, pool_pages: int, dtype=jnp.bfloat16):
+    """Paged KV cache: per-group KV *pools* + per-slot block tables.
+
+    Pools are ``(count, pool_pages, page_size, ...)`` — page 0..P-1 of a
+    global free pool instead of ``(count, batch, max_len, ...)`` per-slot
+    rows.  ``block_tables`` (batch, max_len // page_size) int32 maps a
+    slot's logical block b to its physical page (−1 = unallocated); the
+    host-side allocator (``serving.kv_cache.PagedKVCache``) owns the
+    tables, refcounts and the prefix index.  Attention-cached kinds only —
+    recurrent/ring state has no page structure to share.
+    """
+    if max_len % page_size:
+        raise ValueError(f"page_size {page_size} must divide "
+                         f"max_len {max_len}")
+    max_blocks = max_len // page_size
+    groups = []
+    for g in layer_plan(cfg):
+        if g.kind not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"paged KV cache unsupported for layer kind {g.kind!r} — "
+                "this family serves through the dense legacy path")
+        if cfg.attention == "mla":
+            c = {"c": jnp.zeros((g.count, pool_pages, page_size,
+                                 cfg.kv_lora_rank), dtype),
+                 "kr": jnp.zeros((g.count, pool_pages, page_size,
+                                  cfg.rope_head_dim), dtype)}
+        else:
+            nkv, hd = cfg.n_kv_heads, cfg.head_dim
+            c = {"k": jnp.zeros((g.count, pool_pages, page_size, nkv, hd),
+                                dtype),
+                 "v": jnp.zeros((g.count, pool_pages, page_size, nkv, hd),
+                                dtype)}
+        groups.append(c)
+    return {"groups": groups,
+            "length": jnp.zeros((batch,), jnp.int32),
+            "block_tables": jnp.full((batch, max_blocks), -1, jnp.int32)}
+
+
 def cache_axes(cfg: ModelConfig, batch: int, max_len: int):
     """Logical axes matching init_cache's pytree (for shardings)."""
     def mk(shape, dt):
@@ -358,13 +397,15 @@ def _cross_attn(p, x, cfg: ModelConfig, plan: ShardingPlan, xk, xv):
 
 def apply_sublayer(kind: str, p, x, c, *, cfg: ModelConfig,
                    plan: ShardingPlan, positions, length, enc_out=None,
-                   q_lens=None):
+                   q_lens=None, block_tables=None):
     """One residual layer.  Returns (x, new_cache_or_None, aux).
 
     ``q_lens`` (b,) marks the unified mixed prefill/decode serving step:
     per-slot ragged query counts against per-slot cache offsets.  Only
     attention-cached kinds support it — the recurrent/ring kinds advance
-    their state by every row and cannot mask a ragged tail."""
+    their state by every row and cannot mask a ragged tail.
+    ``block_tables`` (b, max_blocks) marks a paged cache: ``c`` holds KV
+    *pools* and reads/writes go through the per-slot page indirection."""
     aux = jnp.zeros((), jnp.float32)
     if q_lens is not None and kind not in ("dense", "moe"):
         raise NotImplementedError(
@@ -376,10 +417,12 @@ def apply_sublayer(kind: str, p, x, c, *, cfg: ModelConfig,
             mla_cache = None if c is None else (c["c"], c["kr"], length)
             a_out, new_kv = L.mla_attention(p["attn"], x, cfg, plan,
                                             positions=positions,
-                                            cache=mla_cache, q_lens=q_lens)
+                                            cache=mla_cache, q_lens=q_lens,
+                                            block_table=block_tables)
             new_c = None if c is None else {"c": new_kv[0], "kr": new_kv[1]}
         else:
-            kv_view = None if c is None else L.KVView(c["k"], c["v"], length)
+            kv_view = None if c is None else L.KVView(c["k"], c["v"], length,
+                                                      block_tables)
             a_out, new_kv = L.gqa_attention(p["attn"], x, cfg, plan,
                                             positions=positions,
                                             cache=kv_view, q_lens=q_lens)
@@ -505,6 +548,10 @@ def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
     if last_only and q_lens is None:
         raise ValueError("last_only requires q_lens (the unified mixed step)")
     length = None if cache is None else cache["length"]
+    block_tables = None if cache is None else cache.get("block_tables")
+    if block_tables is not None and q_lens is None:
+        raise ValueError("a paged cache (block_tables) requires the unified "
+                         "mixed step (q_lens)")
     idx = 0 if cache is None else length
 
     parts = []
@@ -546,7 +593,8 @@ def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
                                               cfg=cfg, plan=plan,
                                               positions=positions,
                                               length=length, enc_out=enc_out,
-                                              q_lens=q_lens)
+                                              q_lens=q_lens,
+                                              block_tables=block_tables)
                     aux = aux + a
                     if nc is not None:
                         new_c_l[f"l{i}"] = nc
@@ -556,7 +604,8 @@ def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
                                                cfg=cfg, plan=plan,
                                                positions=positions,
                                                length=length, enc_out=enc_out,
-                                               q_lens=q_lens)
+                                               q_lens=q_lens,
+                                               block_tables=block_tables)
                 aux = aux + a
             # Megatron-style sequence parallelism on the residual stream:
             # the scan carry (saved for backward, x n_layers) lives
@@ -585,10 +634,12 @@ def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
     if cache is not None:
         adv = s if q_lens is None else q_lens     # per-slot ragged advance
         new_cache = {"groups": new_groups, "length": length + adv}
+        if block_tables is not None:    # host-owned mapping rides through
+            new_cache["block_tables"] = block_tables
     return Output(logits=logits, cache=new_cache, aux=aux_total)
 
 
 __all__ = ["Group", "layer_plan", "model_spec", "init_params",
            "abstract_params", "param_axes", "count_params", "init_cache",
-           "cache_axes", "forward", "Output", "encode_audio",
-           "apply_sublayer", "sublayer_spec"]
+           "init_paged_cache", "cache_axes", "forward", "Output",
+           "encode_audio", "apply_sublayer", "sublayer_spec"]

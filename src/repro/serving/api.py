@@ -42,10 +42,11 @@ from repro.core import analyzer
 from repro.core import cost_model as cm
 from repro.core import resolve as R
 from repro.core.partitioner import NULL_PLAN, ShardingPlan, make_plan
-from repro.core.resolve import AUTO, OverloadPolicy
+from repro.core.resolve import AUTO, KVConfig, OverloadPolicy
 from repro.core.topology import ClusterSpec
 from repro.kernels.policy import KernelPolicy
-from repro.serving.engine import Engine, Request, RequestState
+from repro.serving.engine import Engine, Request, RequestState, \
+    unified_supported
 from repro.serving.faults import Fault, InjectedFault
 from repro.serving.scheduler import Scheduler
 
@@ -89,6 +90,9 @@ class ServeSpec:
     # deadline-first shedding) and the deterministic chaos-fault plan
     overload: Union[str, OverloadPolicy] = AUTO
     faults: tuple = ()
+    # KV cache backend: "auto" (-> paged from the Eq. 8 envelope for
+    # unified families, dense for legacy) | "dense" | "paged" | a KVConfig
+    kv: Union[str, KVConfig] = AUTO
     # sampling / debug
     temperature: float = 0.0
     seed: int = 0
@@ -110,6 +114,10 @@ class ServeSpec:
                 and self.overload != AUTO:
             raise ValueError("overload must be 'auto' or an OverloadPolicy, "
                              f"got {self.overload!r}")
+        if not isinstance(self.kv, KVConfig) \
+                and self.kv not in (AUTO, "dense", "paged"):
+            raise ValueError("kv must be 'auto'|'dense'|'paged' or a "
+                             f"KVConfig, got {self.kv!r}")
         object.__setattr__(self, "faults", tuple(self.faults))
         for f in self.faults:
             if not isinstance(f, Fault):
@@ -235,6 +243,27 @@ class ServeSpec:
                 cfg, cost_strat, cluster_spec, batch=max_batch,
                 l_in=l_in, l_out=l_out)
 
+        # ---- KV cache: Eq. 8 memory envelope -> paged pool sizing ----
+        paged_ok = unified_supported(cfg)
+        if isinstance(self.kv, KVConfig):
+            if self.kv.backend == "paged" and not paged_ok:
+                raise ValueError(
+                    f"kv backend 'paged' needs the unified step, which "
+                    f"cannot serve {cfg.name} (family {cfg.family}) — use "
+                    "kv='dense' or kv='auto'")
+            kv, prov["kv"] = self.kv, "explicit"
+        else:
+            backend = None if self.kv == AUTO else self.kv
+            if backend == "paged" and not paged_ok:
+                raise ValueError(
+                    f"kv='paged' needs the unified step, which cannot "
+                    f"serve {cfg.name} (family {cfg.family}) — use "
+                    "kv='dense' or kv='auto'")
+            kv, prov["kv"] = R.auto_kv(
+                cfg, max_batch=max_batch, max_len=max_len, l_in=l_in,
+                l_out=l_out, front=front, paged_ok=paged_ok,
+                backend=backend)
+
         plan = make_plan(name, mesh, comm_algo=comm_algo, fsdp=fsdp, sp=sp,
                          kernels=kernels, dispatch=dispatch)
 
@@ -245,7 +274,7 @@ class ServeSpec:
             token_budget=token_budget, max_batch=max_batch, max_len=max_len,
             prompt_len=l_in, max_new_tokens=l_out,
             arrival_rate=self.arrival_rate, objective=self.objective,
-            overload=overload, faults=self.faults,
+            overload=overload, faults=self.faults, kv=kv,
             temperature=self.temperature, seed=self.seed,
             debug_logits=self.debug_logits, plan=plan, report=report,
             provenance=prov)
@@ -280,13 +309,14 @@ class ResolvedServeSpec:
     seed: int
     debug_logits: bool
     faults: tuple = ()
+    kv: KVConfig = dataclasses.field(default_factory=KVConfig)
     plan: ShardingPlan = NULL_PLAN
     report: Optional[analyzer.AnalyzerReport] = dataclasses.field(
         default=None, compare=False, repr=False)
     provenance: dict = dataclasses.field(default_factory=dict)
 
     _KNOBS = ("strategy", "kernels", "dispatch", "chunk", "token_budget",
-              "max_batch", "max_len", "cluster", "overload")
+              "max_batch", "max_len", "cluster", "overload", "kv")
 
     def describe(self) -> str:
         """The provenance report: every knob, its value, and its source."""
@@ -301,7 +331,7 @@ class ResolvedServeSpec:
             v = getattr(self, f)
             if f == "strategy" and self.strategy_detail:
                 v = f"{v} ({self.strategy_detail})"
-            elif isinstance(v, (KernelPolicy, OverloadPolicy)):
+            elif isinstance(v, (KernelPolicy, OverloadPolicy, KVConfig)):
                 v = v.describe()
             rows.append((f, str(v), self.provenance.get(f, "?")))
         w0 = max(len(r[0]) for r in rows)
@@ -316,7 +346,8 @@ class ResolvedServeSpec:
         for f in self._KNOBS:
             v = getattr(self, f)
             resolved[f] = v.describe() \
-                if isinstance(v, (KernelPolicy, OverloadPolicy)) else v
+                if isinstance(v, (KernelPolicy, OverloadPolicy, KVConfig)) \
+                else v
         return {
             "resolved": resolved,
             "provenance": dict(self.provenance),
@@ -449,7 +480,12 @@ class LLM:
                             slot, RequestState.CANCELLED,
                             error="deadline expired mid-flight",
                             reason="deadline_miss")
-            self.engine.step(self.spec.token_budget)
+            retired = self.engine.step(self.spec.token_budget)
+            for req in retired:
+                # pool-pressure preemption: back to the head of the queue
+                # (recompute-on-resume; prefix index keeps its full pages)
+                if req is not None and req.state == RequestState.PREEMPTED:
+                    self._queue.appendleft(req)
             for req in list(live.values()):
                 if req.terminal and req.state != RequestState.DONE:
                     del live[req.rid]       # cancelled / failed / shed
@@ -487,4 +523,4 @@ class LLM:
 
 
 __all__ = ["AUTO", "ServeSpec", "ResolvedServeSpec", "OverloadPolicy",
-           "Fault", "LLM"]
+           "KVConfig", "Fault", "LLM"]

@@ -63,7 +63,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models.model import forward, init_cache
 from repro.serving.faults import FaultInjector, InjectedFault
-from repro.serving.kv_cache import insert_slot, with_lengths
+from repro.serving.kv_cache import insert_slot, make_kv_cache, with_lengths
 
 
 class PromptTooLongError(ValueError):
@@ -185,9 +185,15 @@ class Engine:
         # for families the unified step cannot serve (ssm/hybrid/frontend)
         self.legacy = not unified_supported(cfg)
 
-        self.cache = with_lengths(
-            init_cache(cfg, self.max_batch, self.max_len, dtype),
-            jnp.zeros((self.max_batch,), jnp.int32))
+        # ONE KVCache owns the device KV state (docs/kv_cache.md): the
+        # resolved ``spec.kv`` picks dense per-slot buffers or the paged
+        # pool + block tables + prefix index.  The legacy path's insert_slot
+        # prefill only understands dense buffers, so it pins that backend.
+        kvcfg = getattr(spec, "kv", None)
+        if self.legacy and kvcfg is not None and kvcfg.backend != "dense":
+            kvcfg = None
+        self.kv = make_kv_cache(cfg, kvcfg, self.max_batch, self.max_len,
+                                dtype)
         self.slots: list[Optional[Request]] = [None] * self.max_batch
         self.cur_tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
         # unified-step slot bookkeeping (host side, mirrors device lengths)
@@ -207,6 +213,16 @@ class Engine:
         self._decode = jax.jit(self._decode_impl)
         self._unified = jax.jit(self._unified_impl)
         self.dtype = dtype
+
+    # -- KV state --------------------------------------------------------
+    @property
+    def cache(self):
+        """The live device KV pytree (owned by ``self.kv``)."""
+        return self.kv.cache
+
+    @cache.setter
+    def cache(self, value):
+        self.kv.cache = value
 
     # -- validation ------------------------------------------------------
     def validate(self, req: Request) -> None:
@@ -230,6 +246,11 @@ class Engine:
                 f"needs {need} cache positions but max_len={self.max_len} "
                 f"(prompt cap {MAX_BUCKET}) — raise max_len, shorten the "
                 "prompt, or lower max_new_tokens")
+        if self.kv.pool_tokens is not None and need > self.kv.pool_tokens:
+            raise PromptTooLongError(
+                f"request {req.rid}: needs {need} cache positions but the "
+                f"paged KV pool holds {self.kv.pool_tokens} tokens — raise "
+                "ServeSpec.kv pool_pages (or leave kv='auto')")
 
     # -- jitted programs -------------------------------------------------
     def _unified_impl(self, params, tokens, q_lens, cache, key):
@@ -330,12 +351,14 @@ class Engine:
             [np.asarray(req.prompt, np.int32),
              np.asarray(req.out_tokens, np.int32)]) \
             if req.out_tokens else np.asarray(req.prompt, np.int32)
-        self._prompt_pos[slot] = 0
+        # paged KV: ``begin`` matches the pending stream against the prefix
+        # index and returns how many leading tokens are already cached —
+        # prefill starts past them (a warm restart / shared system prompt
+        # skips straight to its unique tail).  Dense: always 0.
+        self._prompt_pos[slot] = self.kv.begin(slot, self._pending[slot])
         self._last_tok[slot] = 0
         self._admit_seq[slot] = self._seq
         self._seq += 1
-        self.cache = with_lengths(
-            self.cache, self.cache["length"].at[slot].set(0))
         if req.t_admitted == 0.0:
             req.t_admitted = time.perf_counter()
         req.state = RequestState.RUNNING
@@ -373,8 +396,9 @@ class Engine:
             return None
         self.slots[slot] = None
         self._pending[slot] = None
-        self.cache = with_lengths(
-            self.cache, self.cache["length"].at[slot].set(0))
+        # free the slot's KV; a quarantined slot's pages may hold the very
+        # NaNs we are quarantining, so they never enter the prefix index
+        self.kv.free(slot, keep_prefix=state != RequestState.FAILED)
         req.state = state
         if error:
             req.error = error
@@ -398,8 +422,10 @@ class Engine:
         The dense per-slot cache is simply abandoned (length zeroed); on
         re-admission the pending buffer ``prompt + out_tokens`` recomputes
         it, so the resumed request's final output matches its
-        uninterrupted run exactly.  The same discard-and-recompute move
-        carries over verbatim to paged KV (free the pages instead).
+        uninterrupted run exactly.  Paged KV makes the eviction
+        cache-preserving: ``kv.free`` parks the victim's computed full
+        pages in the prefix index, so the resume's ``begin`` re-matches
+        them and only the uncached tail is recomputed.
         """
         req = self.release(slot, RequestState.PREEMPTED, reason="preempt")
         if req is not None:
@@ -427,6 +453,11 @@ class Engine:
         prefill work); the remaining budget — default ``max_batch * chunk``
         — is filled with prefill chunks in admission (FIFO) order, each
         capped at ``chunk``.
+
+        Every grant passes through ``kv.reserve`` so the paged backend can
+        shrink it to what the pool can hold (dense grants everything) — a
+        slot the pool cannot extend simply sits out the step; ``step``
+        breaks a full deadlock by preempting.
         """
         budget = int(token_budget) if token_budget else \
             self.max_batch * self.chunk
@@ -438,13 +469,14 @@ class Engine:
             if self._prompt_pos[i] < len(self._pending[i]):
                 prefilling.append(i)
             elif not r.done:
-                q[i] = 1
+                q[i] = self.kv.reserve(i, 1)
         budget -= int(q.sum())
         for i in sorted(prefilling, key=lambda j: self._admit_seq[j]):
             if budget <= 0:
                 break
             n = min(self.chunk, len(self._pending[i])
                     - self._prompt_pos[i], budget)
+            n = self.kv.reserve(i, n)
             q[i] = n
             budget -= n
         return q
@@ -458,7 +490,23 @@ class Engine:
         decode step for all active (fully prefilled) slots."""
         if self.legacy:
             return self._step_legacy()
-        return self.unified_step(self.plan_q_lens(token_budget))
+        q = self.plan_q_lens(token_budget)
+        preempted = []
+        # paged-pool deadlock breaker: live slots exist but the pool could
+        # not extend ANY of them — free a victim's pages (cache-preserving:
+        # its prompt pages drop into the prefix index) and replan.  Never
+        # fires on dense (reserve always grants) and never preempts the
+        # last live slot (validate bounds a lone request by the pool).
+        while (not q.any()
+               and any(r is not None and not r.terminal and not r.done
+                       for r in self.slots)
+               and self.n_active > 1):
+            victim = self.victim_slot(1 << 30)
+            if victim is None:
+                break
+            preempted.append(self.preempt(victim))
+            q = self.plan_q_lens(token_budget)
+        return preempted + self.unified_step(q)
 
     def _reap(self) -> list:
         """Sweep slots already retired (terminal state set by cancel/
@@ -472,12 +520,14 @@ class Engine:
             if r.terminal:
                 self.slots[i] = None
                 self._pending[i] = None
+                self.kv.free(i)
                 retired.append(r)
             elif r.done:
                 r.state = RequestState.DONE
                 r.t_done = r.t_done or time.perf_counter()
                 self.slots[i] = None
                 self._pending[i] = None
+                self.kv.free(i)
                 retired.append(r)
         return retired
 
@@ -505,9 +555,11 @@ class Engine:
             else:
                 toks[i, 0] = self._last_tok[i]
         self.key, sub = jax.random.split(self.key)
+        self.kv.flush()          # push dirty block tables to device
         nxt, self.last_logits, self.step_logits, self.cache, bad = \
             self._unified(self.params, jnp.asarray(toks),
                           jnp.asarray(q_lens), self.cache, sub)
+        self.kv.advance(q_lens)  # host length mirror follows the device
         # one (B,) host read per step, for request bookkeeping + the next
         # step's token buffer (which must merge host-side prompt chunks
         # anyway — the (B, chunk) int32 upload is noise next to the model)
@@ -549,6 +601,7 @@ class Engine:
                 retired.append(r)
                 self.slots[i] = None
                 self._pending[i] = None
+                self.kv.free(i)
         return retired
 
     def _step_legacy(self) -> list:

@@ -79,6 +79,11 @@ class ServeMetrics:
     n_faults: int = 0            # NaN/Inf-quarantined slots
     deadline_miss_p99: float = 0.0   # p99 lateness of deadline-carrying
     #                                  requests (0 = every deadline met)
+    # KV-cache efficiency (docs/kv_cache.md; dense backend: hits stay 0)
+    kv_occupancy: float = 0.0    # PEAK fraction of KV capacity in use
+    n_prefix_hits: int = 0       # admissions that reused shared pages
+    prefix_hit_tokens: int = 0   # prompt tokens served from shared pages
+    n_evictions: int = 0         # prefix-index pages evicted under pressure
 
     def row(self) -> str:
         r = (f"n={self.n_requests} ttft={self.ttft_mean*1e3:.1f}ms "
@@ -87,7 +92,10 @@ class ServeMetrics:
              f"wq={self.queue_wait_mean*1e3:.1f}ms "
              f"shed={self.n_shed} preempt={self.n_preempted} "
              f"cancel={self.n_cancelled} dmiss={self.n_deadline_miss} "
-             f"fault={self.n_faults}")
+             f"fault={self.n_faults} "
+             f"kv={self.kv_occupancy*100:.0f}% "
+             f"pfxhit={self.n_prefix_hits}({self.prefix_hit_tokens}tok) "
+             f"evict={self.n_evictions}")
         if self.n_incomplete:
             r += f" INCOMPLETE={self.n_incomplete}"
         return r
@@ -98,7 +106,11 @@ class ServeMetrics:
                 "n_cancelled": self.n_cancelled,
                 "n_deadline_miss": self.n_deadline_miss,
                 "n_faults": self.n_faults,
-                "deadline_miss_p99": self.deadline_miss_p99}
+                "deadline_miss_p99": self.deadline_miss_p99,
+                "kv_occupancy": self.kv_occupancy,
+                "n_prefix_hits": self.n_prefix_hits,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "n_evictions": self.n_evictions}
 
 
 class Scheduler:
@@ -118,6 +130,7 @@ class Scheduler:
         self.cancelled: list[Request] = []
         self.wall = 0.0
         self.n_incomplete = 0
+        self.kv_peak = 0.0           # peak KV occupancy over the run
 
     # -- admission-side bookkeeping --------------------------------------
     def _shed_req(self, req: Request, error: str) -> None:
@@ -255,6 +268,7 @@ class Scheduler:
             progress = self._enforce_deadlines(now) > 0
             progress |= self._admit_due(now) > 0
             if self.engine.n_active:
+                self.kv_peak = max(self.kv_peak, self.engine.kv.occupancy())
                 retired = self.engine.step(self.token_budget)
                 self._classify(retired)
                 progress |= bool(retired) or self.engine.last_step_tokens > 0
@@ -288,6 +302,10 @@ class Scheduler:
                 self.finished.append(r)
             elif r.state == RequestState.FAILED:
                 self.failed.append(r)
+            elif r.state == RequestState.PREEMPTED:
+                # pool-pressure eviction from Engine.step: recompute-on-
+                # resume — back into the queue at its original arrival
+                self.waiting.append(r)
             elif r not in self.cancelled:
                 self.cancelled.append(r)
 
@@ -319,6 +337,10 @@ class Scheduler:
             n_deadline_miss=ev.get("deadline_miss", 0),
             n_faults=ev.get("fault", 0),
             deadline_miss_p99=float(np.percentile(late, 99)) if late else 0.0,
+            kv_occupancy=self.kv_peak,
+            n_prefix_hits=self.engine.kv.stats.n_prefix_hits,
+            prefix_hit_tokens=self.engine.kv.stats.prefix_hit_tokens,
+            n_evictions=self.engine.kv.stats.n_evictions,
         )
 
 
@@ -371,12 +393,17 @@ def tiered_workload(n_requests: int, *, prompt_len: int = 24,
                     max_new_tokens: int = 8, vocab: int = 256,
                     arrival_rate: float = 16.0, seed: int = 0,
                     hi_every: int = 3, hi_priority: int = 10,
-                    hi_deadline_s: Optional[float] = 2.0
+                    hi_deadline_s: Optional[float] = 2.0,
+                    system: Optional[np.ndarray] = None
                     ) -> Iterable[Request]:
     """Two-tier traffic: every ``hi_every``-th request is a high-priority,
     deadline-bound "interactive" request riding a best-effort background
     stream — the mix where priority preemption + deadline enforcement earn
-    their keep (examples/serve_moe.py, chaos tests)."""
+    their keep (examples/serve_moe.py, chaos tests).
+
+    ``system`` prepends a shared system prompt to every request — the
+    paged KV backend serves it once and re-matches its full pages from
+    the prefix index on every later admission (docs/kv_cache.md)."""
     rng = np.random.default_rng(seed)
     t = 0.0
     for rid in range(n_requests):
@@ -384,8 +411,10 @@ def tiered_workload(n_requests: int, *, prompt_len: int = 24,
             t += rng.exponential(1.0 / arrival_rate)
         s = max(4, int(rng.integers(prompt_len // 2, prompt_len + 1)))
         hi = hi_every > 0 and rid % hi_every == 0
-        yield Request(rid=rid,
-                      prompt=rng.integers(0, vocab, size=s).astype(np.int32),
+        tail = rng.integers(0, vocab, size=s).astype(np.int32)
+        prompt = (tail if system is None
+                  else np.concatenate([np.asarray(system, np.int32), tail]))
+        yield Request(rid=rid, prompt=prompt,
                       max_new_tokens=max_new_tokens, arrival=t,
                       priority=hi_priority if hi else 0,
                       deadline_s=hi_deadline_s if hi else None)

@@ -17,14 +17,18 @@ from repro.core.partitioner import make_plan
 from repro.models import model as M
 
 # Per-arch max-abs-error gates.  The default is the strict 2e-4 every arch
-# held at the seed; whisper-tiny is a KNOWN failure at ~3e-3 (encoder
-# bidirectional chunked-attention resharding numerics — see the ROADMAP
-# "known seed failure #2" investigation item).  Its loose gate makes the
-# subprocess green-or-legitimately-red in CI: green at the known error,
-# red only if the encoder path regresses further.
+# held at the seed; whisper-tiny sits at ~3e-3 for a ROOT-CAUSED reason
+# (investigated PR 7, see ROADMAP): the sharded encoder itself is clean
+# (1.2e-5), but the reduced random-init config is intrinsically
+# ill-conditioned at this seed — the UNSHARDED forward amplifies a 1e-7
+# input perturbation into ~9e-2 logits at the same worst token position
+# (local amplification ~1e5-1e6), so the sharded run's different fp32
+# reduction order alone explains 3e-3 (greedy argmax is unaffected).
+# The loose gate stays as the regression tripwire: green at the
+# conditioning-limited error, red only if the sharded path regresses.
 DEFAULT_TOL = 2e-4
 TOLERANCES = {
-    "whisper-tiny": 5e-3,    # expected failure vs DEFAULT_TOL; ROADMAP item
+    "whisper-tiny": 5e-3,    # conditioning-limited, not a sharding bug
 }
 
 

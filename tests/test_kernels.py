@@ -162,6 +162,118 @@ def test_flash_chunk_matches_chunked_attention_oracle():
                                    np.asarray(jnp_out[i, :ql]), atol=2e-5)
 
 
+def _paged_case(rng, b, sq, nkv, hd, hdv, page, nb, pool, dtype,
+                *, scatter=True):
+    """Random paged-attention instance: dense k/v plus an equivalent page
+    pool reached through a (scattered) block table."""
+    q = jax.random.normal(KEY, (b, sq, nkv * 2, hd), dtype)
+    s = nb * page
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, nkv, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, nkv, hdv), dtype)
+    qlen = rng.integers(0, sq + 1, b).astype(np.int32)
+    qlen[0] = 0                                     # always one idle slot
+    off = np.asarray([rng.integers(0, s - ql + 1) for ql in qlen], np.int32)
+    kvlen = off + qlen
+    # scatter each slot's nb logical blocks to distinct pool pages
+    perm = (rng.permutation(pool) if scatter
+            else np.arange(pool))[:b * nb].reshape(b, nb).astype(np.int32)
+    kp = jnp.zeros((pool, page, nkv, hd), dtype)
+    vp = jnp.zeros((pool, page, nkv, hdv), dtype)
+    for i in range(b):
+        for j in range(nb):
+            kp = kp.at[perm[i, j]].set(k[i, j * page:(j + 1) * page])
+            vp = vp.at[perm[i, j]].set(v[i, j * page:(j + 1) * page])
+    # unallocated blocks past the frontier are -1 in the real table
+    bt = np.where(np.arange(nb)[None] * page < np.maximum(kvlen, 1)[:, None],
+                  perm, -1).astype(np.int32)
+    return (q, k, v, kp, vp, jnp.asarray(bt), jnp.asarray(off),
+            jnp.asarray(qlen), jnp.asarray(kvlen))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,sq,nkv,hd,hdv,page,nb,pool", [
+    (3, 8, 2, 64, 64, 32, 4, 16),    # GQA, scattered pages + slack pool
+    (2, 16, 1, 40, 24, 16, 4, 8),    # MLA-absorbed-like: nkv=1, hdv != hd
+    (4, 1, 4, 32, 32, 16, 3, 12),    # decode shape (sq == 1)
+    (2, 5, 3, 32, 32, 16, 2, 4),     # exactly-full pool, ragged heads
+])
+def test_flash_chunk_paged_sweep(b, sq, nkv, hd, hdv, page, nb, pool, dtype):
+    """Paged kernel == paged jnp oracle across slot mixes and SCATTERED
+    (permuted) block tables, GQA and MLA-absorbed head shapes."""
+    rng = np.random.default_rng(b * sq + page)
+    (q, _k, _v, kp, vp, bt, off, qlen, kvlen) = _paged_case(
+        rng, b, sq, nkv, hd, hdv, page, nb, pool, dtype)
+    got = ops.flash_chunk_paged(q, kp, vp, bt, off, qlen, kvlen,
+                                bq=4, bs=page)
+    want = ops.flash_chunk_paged_ref(q, kp, vp, bt, off, qlen, kvlen)
+    assert got.shape == (b, sq, nkv * 2, hdv) and got.dtype == dtype
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+    tail = np.asarray(got, np.float32)[
+        np.arange(sq)[None] >= np.asarray(qlen)[:, None]]
+    assert np.all(tail == 0.0)
+
+
+@pytest.mark.parametrize("scatter", [False, True])
+def test_flash_chunk_paged_bit_identical_to_dense(scatter):
+    """THE paging correctness bar: page indirection (contiguous AND
+    permuted tables) changes where tiles are read, never the arithmetic —
+    outputs are bitwise equal to dense flash_chunk at the same bq/bs."""
+    b, sq, nkv, hd, page, nb, pool = 3, 8, 2, 32, 32, 3, 12
+    rng = np.random.default_rng(7 if scatter else 8)
+    (q, k, v, kp, vp, bt, off, qlen, kvlen) = _paged_case(
+        rng, b, sq, nkv, hd, hd, page, nb, pool, jnp.float32,
+        scatter=scatter)
+    dense = ops.flash_chunk(q, k, v, off, qlen, kvlen, bq=4, bs=page)
+    paged = ops.flash_chunk_paged(q, kp, vp, bt, off, qlen, kvlen,
+                                  bq=4, bs=page)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(paged))
+    # sub-page KV tiles route through the same table: still bitwise equal
+    half = ops.flash_chunk_paged(q, kp, vp, bt, off, qlen, kvlen,
+                                 bq=4, bs=page // 2)
+    dense_half = ops.flash_chunk(q, k, v, off, qlen, kvlen,
+                                 bq=4, bs=page // 2)
+    np.testing.assert_array_equal(np.asarray(dense_half), np.asarray(half))
+
+
+def test_flash_chunk_paged_shared_prefix_page():
+    """Two slots whose block tables alias the SAME pool page (a shared
+    prompt prefix) both read it correctly — no copy, same bits."""
+    b, sq, nkv, hd, page, nb, pool = 2, 4, 2, 32, 16, 2, 4
+    q = jax.random.normal(KEY, (b, sq, nkv * 2, hd), jnp.float32)
+    kp = jax.random.normal(jax.random.PRNGKey(1), (pool, page, nkv, hd))
+    vp = jax.random.normal(jax.random.PRNGKey(2), (pool, page, nkv, hd))
+    bt = jnp.asarray([[3, 1], [3, 2]], jnp.int32)   # page 3 shared
+    off = jnp.asarray([page + 2, page + 5], jnp.int32)
+    qlen = jnp.asarray([sq, sq], jnp.int32)
+    kvlen = off + qlen
+    got = ops.flash_chunk_paged(q, kp, vp, bt, off, qlen, kvlen,
+                                bq=4, bs=page)
+    want = ops.flash_chunk_paged_ref(q, kp, vp, bt, off, qlen, kvlen)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+    # each slot == its own dense gather (prefix aliasing is transparent)
+    for i in range(b):
+        ki = kp[bt[i]].reshape(1, nb * page, nkv, hd)
+        vi = vp[bt[i]].reshape(1, nb * page, nkv, hd)
+        solo = ops.flash_chunk(q[i:i + 1], ki, vi, off[i:i + 1],
+                               qlen[i:i + 1], kvlen[i:i + 1],
+                               bq=4, bs=page)
+        np.testing.assert_array_equal(np.asarray(solo[0]),
+                                      np.asarray(got[i]))
+
+
+def test_flash_chunk_paged_rejects_non_dividing_bs():
+    q = jnp.zeros((1, 4, 2, 16), jnp.float32)
+    kp = jnp.zeros((2, 16, 1, 16), jnp.float32)
+    vp = jnp.zeros((2, 16, 1, 16), jnp.float32)
+    bt = jnp.zeros((1, 2), jnp.int32)
+    z = jnp.zeros((1,), jnp.int32)
+    with pytest.raises(ValueError, match="divide"):
+        ops.flash_chunk_paged(q, kp, vp, bt, z, z, z, bq=4, bs=12)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("t,h,n,frac", [
     (16, 32, 40, 0.5), (100, 64, 256, 0.9), (7, 48, 7, 1.0),
@@ -366,6 +478,25 @@ def test_autotune_flash_chunk_blocks():
     long = autotune.select_blocks("flash_chunk", (4, 256, 16, 64, 4096),
                                   jnp.float32)
     assert long["bq"] == 128 and long["bs"] == 2048
+    autotune.clear_cache()
+
+
+def test_autotune_flash_chunk_paged_bs_divides_page():
+    """The paged flash default: the KV tile is the largest power-of-two
+    divisor of the page (the block table routes whole tiles), the q tile
+    tracks the chunk like flash_chunk's."""
+    autotune.clear_cache()
+    got = autotune.select_blocks("flash_chunk_paged", (4, 8, 16, 64, 28, 16),
+                                 jnp.float32)
+    assert got == {"bq": 8, "bs": 16}
+    # big pages cap the KV tile at a power-of-two divisor
+    big = autotune.select_blocks("flash_chunk_paged",
+                                 (4, 128, 16, 64, 64, 4096), jnp.float32)
+    assert big["bs"] <= 2048 and 4096 % big["bs"] == 0
+    # odd page sizes degrade to one tile per page
+    odd = autotune.select_blocks("flash_chunk_paged", (2, 8, 8, 64, 8, 24),
+                                 jnp.float32)
+    assert odd["bs"] in (8, 24) and 24 % odd["bs"] == 0
     autotune.clear_cache()
 
 

@@ -1,0 +1,261 @@
+"""serving.kv_cache unit tests: the legacy slot helpers and the paged
+allocator (free list, refcounts, radix prefix index, LRU eviction)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.resolve import KVConfig, auto_kv, kv_bytes_per_token
+from repro.serving import kv_cache as KV
+
+
+@pytest.fixture(scope="module")
+def gqa_cfg():
+    return C.get_reduced("smollm-360m")
+
+
+# ---------------------------------------------------------------------------
+# legacy slot helpers
+# ---------------------------------------------------------------------------
+
+def _fill(cache, value):
+    return jax.tree.map(lambda x: jnp.full_like(x, value), cache)
+
+
+def test_insert_slot_gqa_shapes(gqa_cfg):
+    big = KV.make_batched_cache(gqa_cfg, 3, 32, jnp.float32)
+    small = _fill(KV.make_batched_cache(gqa_cfg, 1, 32, jnp.float32), 7)
+    out = KV.insert_slot(big, small, 1)
+    k = out["groups"][0]["k"]
+    assert k.shape == big["groups"][0]["k"].shape
+    assert bool((k[:, 1] == 7).all()) and bool((k[:, 0] == 0).all())
+    assert out["length"].shape == (3,) and int(out["length"][1]) == 7
+
+
+def test_insert_slot_ring_shapes():
+    """Hybrid ring-buffer caches (kpos position arrays) insert along the
+    batch axis too — the legacy path serves this family."""
+    cfg = C.get_reduced("recurrentgemma-9b")
+    big = KV.make_batched_cache(cfg, 2, 32, jnp.float32)
+    small = _fill(KV.make_batched_cache(cfg, 1, 32, jnp.float32), 3)
+    out = KV.insert_slot(big, small, 0)
+    for b, o in zip(jax.tree.leaves(big), jax.tree.leaves(out)):
+        assert b.shape == o.shape
+    assert int(out["length"][0]) == 3 and int(out["length"][1]) == 0
+
+
+def test_insert_slot_latent_shapes():
+    """MLA caches carry latent (c) + rope-key (kr) buffers per group."""
+    cfg = C.get_reduced("minicpm3-4b")
+    big = KV.make_batched_cache(cfg, 2, 32, jnp.float32)
+    small = _fill(KV.make_batched_cache(cfg, 1, 32, jnp.float32), 5)
+    out = KV.insert_slot(big, small, 1)
+    g = out["groups"][0]
+    assert {"c", "kr"} <= set(g)
+    assert bool((g["c"][:, 1] == 5).all()) and bool((g["c"][:, 0] == 0).all())
+
+
+def test_with_lengths_and_batched_lengths(gqa_cfg):
+    c = KV.make_batched_cache(gqa_cfg, 2, 16, jnp.float32)
+    c2 = KV.with_lengths(c, jnp.asarray([3, 9], jnp.int32))
+    assert list(np.asarray(KV.batched_lengths(c2))) == [3, 9]
+    assert c2["groups"] is c["groups"]          # only length replaced
+
+
+# ---------------------------------------------------------------------------
+# paged allocator
+# ---------------------------------------------------------------------------
+
+def _paged(cfg, *, batch=2, max_len=64, pool=6, prefix=True):
+    return KV.PagedKVCache(cfg, batch, max_len, page_size=16,
+                           pool_pages=pool, prefix_cache=prefix,
+                           dtype=jnp.float32)
+
+
+def _toks(seed, n):
+    return np.random.default_rng(seed).integers(0, 99, n).astype(np.int32)
+
+
+def test_begin_reserve_advance_free_cycle(gqa_cfg):
+    kv = _paged(gqa_cfg)
+    t = _toks(0, 20)
+    assert kv.begin(0, t) == 0                  # cold: nothing cached
+    assert kv.reserve(0, 20) == 20              # 2 pages
+    assert int(kv.n_blocks[0]) == 2
+    assert kv.occupancy() == pytest.approx(2 / 6)
+    kv.advance(np.asarray([20, 0]))
+    assert int(kv.lengths[0]) == 20
+    kv.free(0)
+    # 1 full prompt page enters the index (held), the partial page frees
+    assert kv.occupancy() == pytest.approx(1 / 6)
+    assert int(kv.ref.sum()) == 0
+    assert int(kv.n_blocks[0]) == 0 and int(kv.lengths[0]) == 0
+
+
+def test_prefix_match_refcounts_shared_page(gqa_cfg):
+    kv = _paged(gqa_cfg)
+    t = _toks(0, 20)
+    kv.begin(0, t), kv.reserve(0, 20), kv.advance(np.asarray([20, 0]))
+    kv.free(0)
+    cached = kv.begin(1, t)                     # same prompt: full-page hit
+    assert cached == 16
+    assert kv.stats.n_prefix_hits == 1
+    assert kv.stats.prefix_hit_tokens == 16
+    shared = int(kv.bt[1, 0])
+    assert int(kv.ref[shared]) == 1             # slot 1 references it
+    kv.free(1)
+    assert int(kv.ref[shared]) == 0             # back to index-held only
+
+
+def test_prefix_never_serves_the_last_token(gqa_cfg):
+    """A prompt that is exactly one page long still computes its last token
+    (its logits sample the first output) — match caps at len(tokens)-1."""
+    kv = _paged(gqa_cfg)
+    t = _toks(1, 16)
+    kv.begin(0, t), kv.reserve(0, 16), kv.advance(np.asarray([16, 0]))
+    kv.free(0)                                  # full page IS indexed...
+    assert kv.begin(1, t) == 0                  # ...but never fully served
+    assert kv.stats.n_prefix_hits == 0
+
+
+def test_identical_free_dedupes_into_one_chain(gqa_cfg):
+    kv = _paged(gqa_cfg)
+    t = _toks(2, 20)
+    # both slots admitted cold (no index yet): private pages each
+    kv.begin(0, t), kv.reserve(0, 20)
+    kv.begin(1, t), kv.reserve(1, 20)
+    kv.advance(np.asarray([20, 20]))
+    assert kv.occupancy() == pytest.approx(4 / 6)
+    kv.free(0)                                  # seeds the chain
+    kv.free(1)                                  # dedupes: same key bytes
+    assert len(kv._node_of_page) == 1           # ONE indexed page survives
+    assert kv.occupancy() == pytest.approx(1 / 6)
+
+
+def test_lru_leaf_eviction_under_pressure(gqa_cfg):
+    kv = _paged(gqa_cfg)
+    for seed in (10, 11, 12):                   # three 2-page chains
+        t = _toks(seed, 32)
+        kv.begin(0, t), kv.reserve(0, 32), kv.advance(np.asarray([32, 0]))
+        kv.free(0)
+    assert len(kv._free) == 0 and len(kv._node_of_page) == 6
+    # a cold request must steal pages: LRU leaves go first, then their
+    # parents (which become leaves) — oldest chain drains before newer ones
+    kv.begin(0, _toks(13, 40))
+    assert kv.reserve(0, 40) == 40
+    assert kv.stats.n_evictions == 3
+    assert len(kv._node_of_page) == 3
+    # the freshest chain (seed 12) must have survived intact
+    survivor = kv._match(np.concatenate([_toks(12, 32), _toks(99, 1)]))
+    assert len(survivor) == 2
+
+
+def test_reserve_exhaustion_grants_partial_then_zero(gqa_cfg):
+    kv = _paged(gqa_cfg, pool=2)
+    kv.begin(0, _toks(3, 40))
+    assert kv.reserve(0, 40) == 32              # pool is only 2 pages
+    kv.advance(np.asarray([32, 0]))
+    assert kv.reserve(0, 8) == 0                # and now it is exhausted
+    assert kv.reserve(1, 1) == 0
+    kv.free(0, keep_prefix=False)
+    assert kv.reserve(1, 1) == 1                # freed pages recirculate
+
+
+def test_free_without_prefix_returns_every_page(gqa_cfg):
+    kv = _paged(gqa_cfg)
+    kv.begin(0, _toks(4, 32)), kv.reserve(0, 32)
+    kv.advance(np.asarray([32, 0]))
+    kv.free(0, keep_prefix=False)
+    assert len(kv._free) == 6 and not kv._node_of_page
+
+
+def test_prefix_cache_off_never_matches(gqa_cfg):
+    kv = _paged(gqa_cfg, prefix=False)
+    t = _toks(5, 32)
+    kv.begin(0, t), kv.reserve(0, 32), kv.advance(np.asarray([32, 0]))
+    kv.free(0)
+    assert kv.begin(1, t) == 0 and kv.stats.n_prefix_hits == 0
+
+
+def test_flush_pushes_block_tables_to_device(gqa_cfg):
+    kv = _paged(gqa_cfg)
+    kv.begin(0, _toks(6, 20)), kv.reserve(0, 20)
+    kv.flush()
+    assert np.array_equal(np.asarray(kv.cache["block_tables"]), kv.bt)
+    assert not kv._dirty
+
+
+def test_page_size_must_divide_max_len(gqa_cfg):
+    with pytest.raises(ValueError):
+        KV.PagedKVCache(gqa_cfg, 2, 60, page_size=16, pool_pages=4)
+
+
+def test_dense_backend_interface(gqa_cfg):
+    kv = KV.DenseKVCache(gqa_cfg, 2, 32, jnp.float32)
+    assert kv.begin(0, _toks(7, 8)) == 0
+    assert kv.reserve(0, 999) == 999            # a slot owns its rows
+    assert kv.pool_tokens is None
+    kv.cache = KV.with_lengths(kv.cache, jnp.asarray([16, 16], jnp.int32))
+    assert kv.occupancy() == pytest.approx(0.5)
+    kv.free(0)
+    assert int(kv.cache["length"][0]) == 0
+
+
+def test_make_kv_cache_factory(gqa_cfg):
+    assert KV.make_kv_cache(gqa_cfg, None, 2, 32).backend == "dense"
+    assert KV.make_kv_cache(gqa_cfg, KVConfig(backend="dense"),
+                            2, 32).backend == "dense"
+    kv = KV.make_kv_cache(gqa_cfg, KVConfig(), 2, 64)
+    assert kv.backend == "paged" and kv.pool_tokens == 2 * 64
+    # non-dividing page size degrades like the resolver: halve until it fits
+    kv = KV.make_kv_cache(gqa_cfg, KVConfig(page_size=16), 2, 40)
+    assert kv.ps == 8
+
+
+# ---------------------------------------------------------------------------
+# resolution (core.resolve.auto_kv)
+# ---------------------------------------------------------------------------
+
+def test_auto_kv_pool_from_envelope(gqa_cfg):
+    kv, src = auto_kv(gqa_cfg, max_batch=4, max_len=192, l_in=96, l_out=8)
+    assert kv.backend == "paged" and kv.page_size == 16
+    assert kv.pool_pages == 4 * 7               # ceil(104/16) pages x slots
+    assert kv.pool_pages < 4 * (192 // 16)      # strictly below dense
+    assert "Eq. 8" in src
+
+
+def test_auto_kv_dense_for_legacy_families(gqa_cfg):
+    kv, src = auto_kv(gqa_cfg, max_batch=2, max_len=64, l_in=8, l_out=4,
+                      paged_ok=False)
+    assert kv.backend == "dense" and "legacy" in src
+
+
+def test_auto_kv_page_halves_to_divide(gqa_cfg):
+    kv, _ = auto_kv(gqa_cfg, max_batch=2, max_len=72, l_in=8, l_out=4)
+    assert kv.page_size == 8 and 72 % kv.page_size == 0
+
+
+def test_auto_kv_pool_capped_at_dense(gqa_cfg):
+    kv, _ = auto_kv(gqa_cfg, max_batch=2, max_len=32, l_in=400, l_out=400)
+    assert kv.pool_pages <= 2 * (32 // kv.page_size)
+
+
+def test_kv_bytes_per_token_mla_vs_gqa(gqa_cfg):
+    mla = C.get_reduced("minicpm3-4b")
+    per_mla = kv_bytes_per_token(mla)
+    assert per_mla == mla.n_layers * (mla.kv_lora_rank
+                                      + mla.rope_head_dim) * 2
+    per_gqa = kv_bytes_per_token(gqa_cfg)
+    assert per_gqa == gqa_cfg.n_layers * 2 * gqa_cfg.n_kv_heads \
+        * gqa_cfg.head_dim * 2
+
+
+def test_kvconfig_validation_and_describe():
+    assert KVConfig(backend="dense").describe() == "dense"
+    assert "page=16" in KVConfig(pool_pages=8).describe()
+    with pytest.raises(ValueError):
+        KVConfig(backend="ring")
+    with pytest.raises(ValueError):
+        KVConfig(page_size=0)

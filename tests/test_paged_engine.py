@@ -1,0 +1,204 @@
+"""Paged-KV engine integration: the bit-identity oracle, prefix reuse,
+cache-preserving preemption, and pool-exhaustion progress.
+
+THE correctness property of the paged backend: under greedy decoding the
+token streams must be bit-identical to the dense backend's — page
+indirection, prefix sharing and pool-pressure preemption are allowed to
+change WHEN work happens, never WHAT comes out (docs/kv_cache.md)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from _engine_helpers import make_engine
+from repro.core.resolve import KVConfig
+from repro.models.model import init_params
+from repro.serving.engine import PromptTooLongError, Request
+from repro.serving.scheduler import Scheduler, synthetic_workload
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = C.get_reduced("smollm-360m")
+    return cfg, init_params(KEY, cfg, jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def mla():
+    cfg = C.get_reduced("minicpm3-4b")
+    return cfg, init_params(KEY, cfg, jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def moe():
+    cfg = C.get_reduced("phi3.5-moe-42b")
+    return cfg, init_params(KEY, cfg, jnp.float32)
+
+
+def _streams(cfg, params, kv, *, n=5, prompt_len=16, out=5, batch=2,
+             max_len=64, chunk=8, **kw):
+    # declare the workload envelope so kv="auto" sizes its pool from Eq. 8
+    eng = make_engine(cfg, params, max_batch=batch, max_len=max_len,
+                      chunk=chunk, kv=kv, prompt_len=prompt_len,
+                      max_new_tokens=out, **kw)
+    assert eng.kv.backend == ("dense" if kv == "dense" else "paged")
+    sched = Scheduler(eng)
+    for r in synthetic_workload(n, prompt_len=prompt_len,
+                                max_new_tokens=out, vocab=cfg.vocab_size):
+        sched.submit(r)
+    done = sched.run()
+    assert len(done) == n
+    return {r.rid: list(r.out_tokens) for r in done}, eng
+
+
+@pytest.mark.parametrize("fixture", ["smollm", "mla", "moe"])
+def test_paged_streams_bit_identical_to_dense(fixture, request):
+    """GQA, MLA (latent cache) and MoE engines: paged == dense, greedy."""
+    cfg, params = request.getfixturevalue(fixture)
+    kw = dict(n=4, prompt_len=12, out=4) if fixture != "smollm" else {}
+    dense, _ = _streams(cfg, params, "dense", **kw)
+    paged, eng = _streams(cfg, params, "auto", **kw)
+    assert eng.kv.backend == "paged"
+    assert paged == dense
+
+
+def test_paged_pool_strictly_below_dense_footprint(smollm):
+    """With a declared workload envelope well under max_len, the resolved
+    pool (Eq. 8) allocates strictly fewer KV bytes than the dense cache."""
+    cfg, params = smollm
+    kw = dict(n=2, out=2, prompt_len=16)
+    d, dense_eng = _streams(cfg, params, "dense", **kw)
+    p, paged_eng = _streams(cfg, params, "auto", **kw)
+    assert paged_eng.kv.kv_bytes() < dense_eng.kv.kv_bytes()
+    assert p == d
+
+
+def test_shared_prefix_reuse_is_exact(smollm):
+    """Warm requests sharing a system prompt skip its full pages at
+    admission AND still produce the dense engine's exact tokens."""
+    cfg, params = smollm
+    rng = np.random.default_rng(3)
+    system = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    prompts = [np.concatenate(
+        [system, rng.integers(0, cfg.vocab_size, 5).astype(np.int32)])
+        for _ in range(3)]
+
+    outs = {}
+    for kv in ("auto", "dense"):
+        eng = make_engine(cfg, params, max_batch=2, max_len=64, chunk=8,
+                          kv=kv)
+        sched = Scheduler(eng)
+        sched.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=4))
+        sched.run()                              # cold: seeds the index
+        sched2 = Scheduler(eng)
+        for i, p in enumerate(prompts[1:], 1):
+            sched2.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+        done = sched2.run()
+        assert len(done) == 2
+        outs[kv] = {r.rid: list(r.out_tokens) for r in done}
+        if kv == "auto":
+            assert eng.kv.stats.n_prefix_hits == 2
+            assert eng.kv.stats.prefix_hit_tokens == 2 * 32
+    assert outs["auto"] == outs["dense"]
+
+
+def test_cache_preserving_preemption_resumes_from_prefix(smollm):
+    """A preempted slot's computed prompt pages park in the prefix index;
+    its resume re-matches them (cache-preserving) and the final stream
+    equals an uninterrupted run."""
+    cfg, params = smollm
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+
+    eng = make_engine(cfg, params, max_batch=1, max_len=128, chunk=8,
+                      kv="auto")
+    r = Request(rid=0, prompt=prompt, max_new_tokens=8)
+    assert eng.admit(r)
+    for _ in range(7):                           # 5 prefill + 2 decode steps
+        eng.step()
+    assert 1 <= len(r.out_tokens) < 8
+    assert eng.preempt(0) is r
+    assert eng.admit(r)                          # recompute-on-resume
+    # the 2 full prompt pages (32 tokens) came back from the prefix index
+    assert eng._prompt_pos[0] == 32
+    assert eng.kv.stats.n_prefix_hits == 1
+    while not r.done:
+        eng.step()
+
+    fresh = make_engine(cfg, params, max_batch=1, max_len=128, chunk=8,
+                        kv="auto")
+    r2 = Request(rid=1, prompt=prompt, max_new_tokens=8)
+    assert fresh.admit(r2)
+    while not r2.done:
+        fresh.step()
+    assert list(r.out_tokens) == list(r2.out_tokens)
+
+
+def test_pool_exhaustion_preempts_and_completes(smollm):
+    """A pool too small for both slots' decode growth must not deadlock:
+    the engine preempts a victim (recompute-on-resume via the scheduler)
+    and every request still completes with the dense engine's tokens."""
+    cfg, params = smollm
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+               for _ in range(2)]
+
+    def run(kv):
+        eng = make_engine(cfg, params, max_batch=2, max_len=64, chunk=16,
+                          kv=kv)
+        sched = Scheduler(eng)
+        for i, p in enumerate(prompts):
+            sched.submit(Request(rid=i, prompt=p, max_new_tokens=20))
+        done = sched.run()
+        assert len(done) == 2
+        return {r.rid: list(r.out_tokens) for r in done}, eng
+
+    # 3 pages x 16 = 48 pooled tokens < 2 slots x 36-token envelope
+    tight = KVConfig(page_size=16, pool_pages=3)
+    paged, eng = run(tight)
+    assert eng.events["preempt"] >= 1
+    dense, _ = run("dense")
+    assert paged == dense
+
+
+def test_validate_rejects_request_bigger_than_pool(smollm):
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=2, max_len=64, chunk=8,
+                      kv=KVConfig(page_size=16, pool_pages=2))
+    with pytest.raises(PromptTooLongError, match="pool"):
+        eng.validate(Request(rid=0, prompt=np.arange(30, dtype=np.int32),
+                             max_new_tokens=8))
+
+
+def test_paged_kernel_policy_traces_paged_kernel(smollm):
+    """With kernels on, the paged engine's jitted step must contain
+    flash_chunk_paged (no silent jnp fallback on the hot path)."""
+    from repro.kernels import ops
+    from repro.kernels.policy import KernelPolicy
+    cfg, params = smollm
+
+    def run(kv):
+        eng = make_engine(cfg, params, max_batch=2, max_len=64, chunk=8,
+                          kv=kv, kernels=KernelPolicy.all_on())
+        sched = Scheduler(eng)
+        for r in synthetic_workload(2, prompt_len=12, max_new_tokens=3,
+                                    vocab=cfg.vocab_size):
+            sched.submit(r)
+        done = sched.run()
+        assert len(done) == 2
+        return {r.rid: list(r.out_tokens) for r in done}
+
+    ops.reset_counters()
+    dense = run("dense")
+    assert ops.counters["flash_chunk_paged"] == 0
+    assert ops.counters["flash_chunk"] > 0
+    ops.reset_counters()
+    paged = run("auto")
+    assert ops.counters["flash_chunk_paged"] > 0
+    # both kernelized: the paged kernel reuses the dense body, so the
+    # streams match bitwise (the paper's correctness bar for paging)
+    assert paged == dense

@@ -337,8 +337,11 @@ def test_metrics_row_includes_robustness_counters(smollm):
     sched.run()
     m = sched.metrics()
     row = m.row()
-    for k in ("shed=", "preempt=", "cancel=", "dmiss=", "fault="):
+    for k in ("shed=", "preempt=", "cancel=", "dmiss=", "fault=", "kv=",
+              "pfxhit="):
         assert k in row, row
     rb = m.robustness()
     assert set(rb) == {"n_shed", "n_preempted", "n_cancelled",
-                       "n_deadline_miss", "n_faults", "deadline_miss_p99"}
+                       "n_deadline_miss", "n_faults", "deadline_miss_p99",
+                       "kv_occupancy", "n_prefix_hits", "prefix_hit_tokens",
+                       "n_evictions"}

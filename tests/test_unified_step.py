@@ -57,7 +57,11 @@ def test_unified_decode_only_matches_decode_program(smollm):
     cfg, params = smollm
     prompt = np.asarray([3, 1, 4, 1, 5, 9, 2, 6], np.int32)
 
-    uni = make_engine(cfg, params, max_batch=2, max_len=64, chunk=8)
+    # dense KV: the decode-program oracle below drives forward() on a raw
+    # snapshot of the engine cache (the paged twin of this oracle is
+    # tests/test_paged_engine.py's stream-identity test)
+    uni = make_engine(cfg, params, max_batch=2, max_len=64, chunk=8,
+                      kv="dense")
     r_u = Request(rid=0, prompt=prompt, max_new_tokens=6)
     _drive_prefill(uni, r_u)   # first token sampled from the last chunk
 
@@ -250,8 +254,11 @@ def test_engine_chunked_prefill_flash_chunk_kernel(smollm):
                     cache=M.init_cache(cfg, 1, 64, jnp.float32))
 
     def run(policy):
+        # dense KV: this asserts the flash_chunk counter specifically (the
+        # paged engine traces flash_chunk_paged — covered in
+        # tests/test_paged_engine.py's kernel-policy test)
         eng = make_engine(cfg, params, max_batch=2, max_len=64, chunk=4,
-                     kernels=policy, debug_logits=True)
+                     kernels=policy, debug_logits=True, kv="dense")
         req = Request(rid=0, prompt=prompt, max_new_tokens=3)
         steps = _drive_prefill(eng, req)
         while eng.n_active:
