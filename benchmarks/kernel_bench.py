@@ -141,6 +141,40 @@ def run() -> list:
     _pair(rows, f"permute_ragged/{nbuf}x{hh}fill{fill}", us_ref, us_krn,
           "dropless EP exchange gather")
 
+    # ---- paged-KV page-size sweep (the resolver-tier "kv_page" tune) ----
+    # times the paged ragged-attention kernel across page sizes for one
+    # slot envelope and registers the winner under the SAME key the
+    # ServeSpec resolver's ``auto_kv`` looks up (resolve.kv_page_key) — a
+    # subsequent resolve on this machine reports the page as
+    # ``autotune:measured`` instead of the analytic default.
+    import repro.configs as C
+    from repro.core import resolve as R
+
+    kv_cfg = C.get_reduced("smollm-360m")
+    b, sq, max_len = 4, 8, 512
+    nqp, nkvp, hdp = 8, 4, 64
+    qp = jax.random.normal(key, (b, sq, nqp, hdp), jnp.float32)
+    offp = jnp.asarray([256, 120, 64, 0], jnp.int32)
+    qlenp = jnp.asarray([sq, 1, 5, 0], jnp.int32)
+    best_page, best_us = None, float("inf")
+    for page in (8, 16, 32, 64):
+        n_pages = b * max_len // page
+        kp = jax.random.normal(key, (n_pages, page, nkvp, hdp), jnp.float32)
+        vp = jax.random.normal(key, (n_pages, page, nkvp, hdp), jnp.float32)
+        bt = jnp.arange(n_pages, dtype=jnp.int32).reshape(b, -1)
+        us = time_fn(functools.partial(ops.flash_chunk_paged, qp, kp, vp,
+                                       bt, offp, qlenp, offp + qlenp))
+        rows.append((f"kernel/kv_page/page{page}", us,
+                     f"flash_chunk_paged b{b}sq{sq}len{max_len}"))
+        if us < best_us:
+            best_page, best_us = page, us
+    key_shape = R.kv_page_key(kv_cfg, max_len)
+    autotune.register("kv_page", key_shape, "bfloat16",
+                      {"page": best_page})
+    rows.append(("kernel/kv_page/tuned", float(best_page),
+                 f"registered for key {key_shape} ({kv_cfg.name}) -> "
+                 "auto_kv resolves it as autotune:measured"))
+
     rows.append(("kernel/autotune_cache_entries", float(
         len(autotune.cache_info())), "shape-keyed block selections"))
     return rows

@@ -43,6 +43,9 @@ QUICK = {
     # paged-KV shared-prefix gate: prefix hits + paged==dense bit-identity
     # + warm-TTFT and pool-footprint wins (docs/kv_cache.md)
     "serve_prefix": serve_micro.run_prefix,
+    # micro-chunked EP-exchange gate: chunked price <= monolithic,
+    # count-bounded rows < worst-case, analyzer flip (docs/dispatch.md)
+    "overlap": overlap_ablation.run_quick,
 }
 
 

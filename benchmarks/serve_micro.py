@@ -46,7 +46,11 @@ ROBUSTNESS_KEYS = ("n_shed", "n_preempted", "n_cancelled",
                    "n_deadline_miss", "n_faults", "deadline_miss_p99",
                    # KV-cache efficiency (paged backend; docs/kv_cache.md)
                    "kv_occupancy", "n_prefix_hits", "prefix_hit_tokens",
-                   "n_evictions")
+                   "n_evictions",
+                   # expert-load skew + EP-exchange byte ledger (MoE;
+                   # dense archs report zeros — docs/dispatch.md)
+                   "ep_rank_max_tokens", "ep_rank_mean_tokens",
+                   "a2a_bytes_moved", "a2a_bytes_worst")
 
 
 def run_quick() -> list:
@@ -102,6 +106,12 @@ def run_quick() -> list:
                 f"kernelized serve path ({mode}/{dispatch}) did not trace "
                 f"{sorted(missing)} (counters: {dict(ops.counters)})")
         m = sched.metrics()
+        # the MoE engine must surface expert-load observability: routed
+        # slots landed somewhere, and the EP ledger priced the exchange
+        if m.ep_rank_max_tokens <= 0:
+            raise RuntimeError(
+                f"MoE serve gate ({mode}/{dispatch}): expert-load counters "
+                f"stayed zero ({m.robustness()})")
         rows.append((f"serve_quick/{cfg.name}/{mode}-{dispatch}/kernels",
                      float(sum(ops.counters[k] for k in required)),
                      f"traced={sorted(required)} "

@@ -62,9 +62,11 @@ class AnalyzerReport:
 
 def evaluate(model: ModelConfig, strat: cm.Strategy, cluster: ClusterSpec, *,
              batch: int, l_in: int, l_out: int,
-             arrival_rate: float = 0.0) -> Candidate:
+             arrival_rate: float = 0.0,
+             ep_overlap: Optional[cm.EpOverlap] = None) -> Candidate:
     ind = cm.indicators(model, strat, cluster, batch=batch, l_in=l_in,
-                        l_out=l_out, arrival_rate=arrival_rate)
+                        l_out=l_out, arrival_rate=arrival_rate,
+                        ep_overlap=ep_overlap)
     mem = cm.memory_per_device(model, strat, batch=batch, seq_len=l_in + l_out)
     # MoE experts must be integrally assignable to EP ranks.
     feasible = mem < cluster.hbm_bytes
@@ -82,13 +84,20 @@ def select(model: ModelConfig, cluster: ClusterSpec, *,
            arrival_rate: float = 0.0, objective: Objective = "balanced",
            max_pp: int = 8,
            comm_algos: tuple[cm.CommAlgo, ...] = ("fused", "unfused"),
+           ep_overlap: Optional[cm.EpOverlap] = None,
            ) -> AnalyzerReport:
-    """The automatic analyzer: enumerate, score, rank, pick."""
+    """The automatic analyzer: enumerate, score, rank, pick.
+
+    ``ep_overlap``: price every candidate's MoE exchange with the
+    micro-chunked pipeline estimate (stops penalizing EP degrees whose
+    A2A the overlapped schedule can hide behind expert compute).
+    """
     cands = []
     for strat in enumerate_strategies(cluster, model_is_moe=model.is_moe,
                                       max_pp=max_pp, comm_algos=comm_algos):
         cands.append(evaluate(model, strat, cluster, batch=batch, l_in=l_in,
-                              l_out=l_out, arrival_rate=arrival_rate))
+                              l_out=l_out, arrival_rate=arrival_rate,
+                              ep_overlap=ep_overlap))
     if not cands:
         raise RuntimeError("strategy grammar produced no candidates")
     ranked = tuple(sorted(cands, key=lambda c: c.score(objective)))

@@ -151,6 +151,79 @@ class Strategy:
 
 
 # ---------------------------------------------------------------------------
+# EP-exchange overlap (micro-chunked dispatch/GEMM/combine pipeline)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EpOverlap:
+    """Micro-chunked EP-exchange schedule for the dropless MoE path.
+
+    The local token batch is split into ``chunks`` micro-chunks; chunk i's
+    dispatch A2A is issued before chunk i-1's grouped GEMM so XLA's async
+    scheduler can overlap wire and MXU time, and each chunk's exchange
+    buffers are **count-bounded**: a soft per-rank row cap instead of the
+    worst-case ``T_chunk*k`` extent, with a bit-exact recompute-at-worst-case
+    fallback when a chunk overflows the cap (models.moe).
+
+    ``cap_rows``: per-rank rows per chunk.  ``0`` = the statistical rule
+    (mean + ``cap_sigma``·std of uniform multinomial routing, rounded up to
+    a multiple of 8); ``-1`` = worst-case extent (count-bounding off);
+    ``> 0`` = an explicit row cap.
+    """
+
+    chunks: int = 1            # C; 1 = monolithic schedule
+    cap_rows: int = 0          # 0 = auto rule, -1 = worst case, >0 explicit
+    cap_sigma: float = 4.0     # auto-rule margin over the routing mean
+
+    def __post_init__(self):
+        if self.chunks < 1:
+            raise ValueError(f"chunks must be >= 1, got {self.chunks}")
+        if self.cap_rows < -1:
+            raise ValueError(f"cap_rows must be >= -1, got {self.cap_rows}")
+        if self.cap_sigma <= 0:
+            raise ValueError(f"cap_sigma must be > 0, got {self.cap_sigma}")
+
+    @property
+    def off(self) -> bool:
+        """True for the monolithic worst-case-extent schedule."""
+        return self.chunks <= 1 and self.cap_rows == -1
+
+    def describe(self) -> str:
+        if self.off:
+            return "off (monolithic worst-case exchange)"
+        if self.cap_rows == -1:
+            cap = "cap=worst-case"
+        elif self.cap_rows > 0:
+            cap = f"cap={self.cap_rows} rows/rank"
+        else:
+            cap = f"cap=auto(mean+{self.cap_sigma:g}sigma)"
+        return f"C={self.chunks}, {cap}"
+
+
+# the monolithic schedule (what the pre-overlap exchange always ran)
+EP_OVERLAP_OFF = EpOverlap(chunks=1, cap_rows=-1)
+
+
+def cap_rows_for(n_chunk: int, ep: int, overlap: EpOverlap) -> int:
+    """Static per-destination-rank row cap for one micro-chunk.
+
+    ``n_chunk`` is the chunk's slot count (tokens * top_k).  The auto rule
+    prices the cap from the routing distribution: near-uniform multinomial
+    routing puts mean = n/ep rows on a rank with std sqrt(n/ep * (1-1/ep));
+    ``cap_sigma`` standard deviations of headroom make overflow (and the
+    worst-case-extent fallback recompute) rare without paying worst case.
+    """
+    if ep <= 1 or overlap.cap_rows == -1:
+        return n_chunk
+    if overlap.cap_rows > 0:
+        return max(1, min(overlap.cap_rows, n_chunk))
+    mean = n_chunk / ep
+    cap = mean + overlap.cap_sigma * math.sqrt(mean * (1.0 - 1.0 / ep))
+    cap = -(-int(math.ceil(cap)) // 8) * 8          # round up to 8 rows
+    return max(1, min(cap, n_chunk))
+
+
+# ---------------------------------------------------------------------------
 # Workload
 # ---------------------------------------------------------------------------
 
@@ -311,9 +384,61 @@ def _moe_lambda_hybrid(model: ModelConfig, strat: Strategy, work: Workload,
     return dispatch + combine
 
 
+def _routed_expert_seconds(model: ModelConfig, strat: Strategy,
+                           work: Workload, cluster: ClusterSpec) -> float:
+    """Per-rank routed-expert GEMM seconds (the Eq. 4 routed term alone).
+
+    This is the compute the micro-chunked pipeline can overlap against the
+    EP exchange: same sharding/efficiency model as ``compute_latency``'s
+    MoE branch, restricted to the routed experts (shared experts and
+    attention run outside the dispatch-FFN-combine window).
+    """
+    if not model.is_moe or model.top_k < 1:
+        return 0.0
+    global_tokens = work.batch * work.seq_len
+    n_stage = strat.attn_tp * strat.attn_dp
+    ffn_flops = 2 * model.expert_params() * model.top_k * global_tokens \
+        / n_stage
+    instances = max(1, n_stage // (strat.moe_ep * strat.moe_tp))
+    tok_per_expert = global_tokens * model.top_k / (
+        max(model.n_experts, 1) * instances)
+    gemm_eff = tok_per_expert / (tok_per_expert + GEMM_RAMP_TOKENS)
+    return ffn_flops / max(gemm_eff, 1e-2) / (cluster.peak_flops * MFU)
+
+
+def moe_overlap_lambda(lam_moe: float, tau_expert: float, overlap: EpOverlap,
+                       chunk_alpha: float = 0.0) -> float:
+    """Visible MoE comm under the micro-chunked pipeline.
+
+    With C micro-chunks, chunk i's dispatch A2A runs concurrently with
+    chunk i-1's grouped GEMM and chunk i-2's combine A2A, so the pipelined
+    makespan is max(lam, tau) + (lam + tau)/C for the fill/drain chunks
+    instead of lam + tau.  Expressed as an *effective comm* term (so
+    ``service_latency`` keeps adding tau separately):
+
+        lam_eff = lam - (1 - 1/C) * min(lam, tau) + (C - 1) * chunk_alpha
+
+    C=1 reproduces the serial sum; comm-bound (lam > tau) hides tau of
+    wire time behind compute; compute-bound hides (almost) all of lam.
+    ``chunk_alpha`` is the fixed launch latency each extra chunk's pair of
+    A2As pays (the Eq. 3 alpha rounds do not shrink with payload) — it is
+    what bounds the useful chunk count from above.
+    """
+    C = overlap.chunks
+    if C <= 1:
+        return lam_moe
+    return (lam_moe - (1.0 - 1.0 / C) * min(lam_moe, tau_expert)
+            + (C - 1) * chunk_alpha)
+
+
 def comm_latency(model: ModelConfig, strat: Strategy, work: Workload,
-                 cluster: ClusterSpec) -> float:
-    """lambda(d_TP, d_EP, d_DP): per-rank per-layer comm latency (Eq. 5)."""
+                 cluster: ClusterSpec, *,
+                 ep_overlap: EpOverlap | None = None) -> float:
+    """lambda(d_TP, d_EP, d_DP): per-rank per-layer comm latency (Eq. 5).
+
+    ``ep_overlap``: price the micro-chunked dispatch/GEMM/combine pipeline
+    (models.moe) instead of the serial sum-of-phases exchange.
+    """
     bw_intra, a_intra = tp_link(cluster, strat.attn_tp)
     # fabric contention: attn_tp < n_proc -> several attention TP groups
     # share one node's NVLink/HCCS fabric
@@ -329,7 +454,19 @@ def comm_latency(model: ModelConfig, strat: Strategy, work: Workload,
         if strat.attn_tp > 1 else 0.0
 
     if model.is_moe:
-        lam += _moe_lambda_hybrid(model, strat, work, cluster)
+        lam_moe = _moe_lambda_hybrid(model, strat, work, cluster)
+        if (ep_overlap is not None and ep_overlap.chunks > 1
+                and strat.moe_ep > 1):
+            tau_e = _routed_expert_seconds(model, strat, work, cluster)
+            # each extra chunk pays the payload-independent alpha rounds of
+            # its own dispatch + combine A2A (pairwise: ep_degree - 1 rounds)
+            a_ep = cluster.latency(strat.ep_inter_node)
+            ep_degree = min(strat.moe_ep, strat.attn_dp) \
+                if strat.attn_dp > 1 else strat.moe_ep
+            chunk_alpha = 2 * a_ep * max(ep_degree - 1, 1)
+            lam_moe = moe_overlap_lambda(lam_moe, tau_e, ep_overlap,
+                                         chunk_alpha)
+        lam += lam_moe
         if strat.attn_tp != strat.moe_tp and strat.moe_tp > 1:
             # layout resync between the attention TP group and the MoE TP
             # group (hidden states re-gathered on entry + exit)
@@ -356,10 +493,11 @@ def lambda_pure_ep(model: ModelConfig, strat: Strategy, work: Workload,
 # ---------------------------------------------------------------------------
 
 def service_latency(model: ModelConfig, strat: Strategy, work: Workload,
-                    cluster: ClusterSpec) -> float:
+                    cluster: ClusterSpec, *,
+                    ep_overlap: EpOverlap | None = None) -> float:
     """Delta t_svc (Eq. 6)."""
     tau = compute_latency(model, strat, work, cluster)
-    lam = comm_latency(model, strat, work, cluster)
+    lam = comm_latency(model, strat, work, cluster, ep_overlap=ep_overlap)
     t = model.n_layers * (tau + lam)
     if strat.d_pp > 1:
         tokens = work.batch * work.seq_len / strat.attn_dp
@@ -390,7 +528,8 @@ class Indicators:
 
 def indicators(model: ModelConfig, strat: Strategy, cluster: ClusterSpec, *,
                batch: int, l_in: int, l_out: int,
-               arrival_rate: float = 0.0) -> Indicators:
+               arrival_rate: float = 0.0,
+               ep_overlap: EpOverlap | None = None) -> Indicators:
     """TTFT (Eq. 9), ITL (Eq. 10), throughput Theta (Eq. 11).
 
     The M/M/1 service rate is batch-level: one continuous-batching "wave"
@@ -401,10 +540,11 @@ def indicators(model: ModelConfig, strat: Strategy, cluster: ClusterSpec, *,
     flagging ``stable=False``.
     """
     prf = service_latency(model, strat,
-                          Workload(batch=batch, seq_len=l_in), cluster)
+                          Workload(batch=batch, seq_len=l_in), cluster,
+                          ep_overlap=ep_overlap)
     dec = service_latency(model, strat,
                           Workload(batch=batch, seq_len=1, kv_len=l_in + l_out),
-                          cluster)
+                          cluster, ep_overlap=ep_overlap)
     t_request = (prf + l_out * dec) / max(batch, 1)
     w_q = queuing_delay(t_request, arrival_rate)
     stable = math.isfinite(w_q)
@@ -454,6 +594,7 @@ def fits_memory(model: ModelConfig, strat: Strategy, cluster: ClusterSpec, *,
 
 __all__ = [
     "BYTES", "MFU", "Strategy", "Workload", "Indicators",
+    "EpOverlap", "EP_OVERLAP_OFF", "cap_rows_for", "moe_overlap_lambda",
     "rs_cost", "ag_cost", "ar_cost", "a2a_cost", "p2p_cost",
     "compute_latency", "comm_latency", "lambda_pure_ep",
     "service_latency", "queuing_delay", "indicators",

@@ -24,7 +24,7 @@ from typing import Optional
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-from repro.core.cost_model import Strategy
+from repro.core.cost_model import EpOverlap, Strategy
 from repro.kernels.policy import NULL_POLICY, KernelPolicy
 
 # Logical axis vocabulary used by the models.
@@ -55,6 +55,10 @@ class ShardingPlan:
     # (ragged sorted-by-expert buffers, count-independent numerics).
     # Like ``kernels``, honored with mesh=None too (models.moe.moe_block).
     dispatch_mode: str = "auto"
+    # Micro-chunked EP-exchange schedule for the dropless path (models.moe):
+    # None = monolithic worst-case exchange (the pre-overlap graph, bit-exact
+    # default); an EpOverlap prices the chunk count + per-rank row cap.
+    ep_overlap: Optional[EpOverlap] = None
 
     @property
     def enabled(self) -> bool:
@@ -181,7 +185,8 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
               comm_algo: str = "fused", *, fsdp: bool = False,
               sp: bool = True,
               kernels: Optional[KernelPolicy] = None,
-              dispatch: str = "auto") -> ShardingPlan:
+              dispatch: str = "auto",
+              ep_overlap: Optional[EpOverlap] = None) -> ShardingPlan:
     """Build the ShardingPlan for a named strategy on a given mesh.
 
     ``strategy`` ∈ {"mixserve", "pure_tp", "pure_ep", "dp_ep"} or a
@@ -196,6 +201,10 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
     resolves to dropless — count-independent ragged inference dispatch),
     "dropless", or "capacity" (training keeps this: train_step.loss_fn pins
     it regardless of the plan).
+
+    ``ep_overlap`` selects the micro-chunked, count-bounded EP-exchange
+    schedule for the dropless path (models.moe); None keeps the monolithic
+    worst-case exchange.
 
     ``fsdp=True`` (training only): parameter/optimizer tensors shard their
     embed axis over the data axis (ZeRO-3 style), gathered on use.  Lowest
@@ -214,6 +223,8 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
             plan = dataclasses.replace(plan, kernels=kernels)
         if dispatch != NULL_PLAN.dispatch_mode:
             plan = dataclasses.replace(plan, dispatch_mode=dispatch)
+        if ep_overlap is not None:
+            plan = dataclasses.replace(plan, ep_overlap=ep_overlap)
         return plan
     names = mesh.axis_names
     pod = ("pod",) if "pod" in names else ()
@@ -242,7 +253,7 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
             },
             tp_axes=model, ep_axes=data, dp_axes=pod + data,
             comm_algo=comm_algo, kernels=kernels,
-            dispatch_mode=dispatch,
+            dispatch_mode=dispatch, ep_overlap=ep_overlap,
         )
     if strategy == "pure_tp":
         # vLLM TP[+PP]-style: everything TP over model axis; data/pod = DP.
@@ -259,7 +270,7 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
             },
             tp_axes=model, ep_axes=(), dp_axes=pod + data,
             comm_algo="unfused", kernels=kernels,
-            dispatch_mode=dispatch,
+            dispatch_mode=dispatch, ep_overlap=ep_overlap,
         )
     if strategy in ("pure_ep", "dp_ep"):
         # vLLM DP+EP-style: attention TP over model, experts sharded over
@@ -277,7 +288,7 @@ def make_plan(strategy: str | Strategy, mesh: Optional[Mesh],
             },
             tp_axes=model, ep_axes=data + model, dp_axes=pod + data,
             comm_algo="unfused", kernels=kernels,
-            dispatch_mode=dispatch,
+            dispatch_mode=dispatch, ep_overlap=ep_overlap,
         )
     raise KeyError(f"unknown strategy {strategy!r}")
 

@@ -27,6 +27,14 @@ instead of user homework:
                 the Eq. 4-6 predicted per-request service time, plus the
                 shed policy (deadline-infeasible-first) — priced
                 *degradation*, not just priced performance
+  kv            paged-KV layout; the page size consults the shape-keyed
+                autotune cache ("kv_page" op) before the divisibility-
+                degraded constant, so a measured sweep on this machine
+                overrides the 16-token default
+  ep_overlap    micro-chunked dispatch/GEMM/combine pipeline for the MoE
+                EP exchange (models.moe): chunk count picked by pricing
+                the overlapped schedule (moe_overlap_lambda) per candidate
+                C, count-bounded buffers on by default
 
 Everything here is deterministic: same (spec, model, cluster) in, same
 resolved knobs out.  No serving imports — ``serving.api`` composes these
@@ -43,6 +51,7 @@ from repro.core import analyzer
 from repro.core import cost_model as cm
 from repro.core.topology import (CLUSTERS, TPU_V5E_MULTIPOD, TPU_V5E_POD,
                                  ClusterSpec)
+from repro.kernels import autotune
 
 AUTO = "auto"
 
@@ -217,8 +226,19 @@ def auto_max_len(l_in: int, l_out: int, front: int = 0,
 
 # paged KV: tokens per fixed-size cache page (the block-table granule).
 # Must divide max_len; auto_kv degrades to the largest power-of-two divisor.
+# The constant is only the analytic floor — auto_kv first consults the
+# shape-keyed "kv_page" autotune entry (kernels.autotune), so a measured
+# sweep (benchmarks/kernel_bench.py --tune) overrides it per envelope.
 KV_PAGE_SIZE = 16
 _KV_BACKENDS = ("dense", "paged")
+
+
+def kv_page_key(cfg: ModelConfig, max_len: int) -> tuple:
+    """Autotune cache-key shape for the "kv_page" op: (length envelope,
+    per-layer KV row elements).  ``auto_kv`` and the kernel_bench sweep MUST
+    build the same key or the tuned page never reaches the resolver."""
+    per_tok = kv_bytes_per_token(cfg, 1) // max(cfg.n_layers, 1)
+    return (int(max_len), int(per_tok))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -288,8 +308,18 @@ def auto_kv(cfg: ModelConfig, *, max_batch: int, max_len: int, l_in: int,
                 "auto:family(legacy blocking path keeps the dense cache)")
     if backend == "dense":
         return KVConfig(backend="dense"), "explicit"
-    # page size must divide max_len (block tables address max_len//page rows)
-    ps = page_size or KV_PAGE_SIZE
+    # page size: explicit > measured autotune entry > analytic constant —
+    # then degraded to divide max_len (block tables address max_len//page
+    # rows, so a non-dividing page would orphan the tail)
+    if page_size:
+        ps, ps_src = page_size, "explicit"
+    else:
+        tuned = autotune.lookup("kv_page", kv_page_key(cfg, max_len),
+                                "bfloat16")
+        if tuned and int(tuned.get("page", 0)) > 0:
+            ps, ps_src = int(tuned["page"]), "autotune:measured"
+        else:
+            ps, ps_src = KV_PAGE_SIZE, f"autotune:default({KV_PAGE_SIZE})"
     while ps > 1 and max_len % ps:
         ps //= 2
     dense_pages = max_batch * (max_len // ps)
@@ -308,12 +338,71 @@ def auto_kv(cfg: ModelConfig, *, max_batch: int, max_len: int, l_in: int,
     bpt = kv_bytes_per_token(cfg)
     return kv, (f"{src}:cost-model(Eq. 8 envelope {front}+{l_in}+{l_out} tok "
                 f"x {max_batch} slots @ {bpt}B/tok -> {pool} pages vs "
-                f"{dense_pages} dense)")
+                f"{dense_pages} dense; page {ps} from {ps_src})")
+
+
+# auto ep_overlap: candidate micro-chunk counts priced by the overlapped
+# schedule estimate (per-chunk alpha overhead bounds the useful C)
+EP_OVERLAP_CANDIDATES = (1, 2, 4, 8)
+
+
+def auto_ep_overlap(cfg: ModelConfig, strat: cm.Strategy,
+                    cluster: ClusterSpec, *, batch: int, l_in: int,
+                    l_out: int,
+                    value: Union[str, int, cm.EpOverlap, None] = AUTO
+                    ) -> tuple[Union[cm.EpOverlap, None], str]:
+    """Resolve the ``ep_overlap`` knob: (EpOverlap or None, provenance).
+
+    ``"off"``/None keeps the monolithic worst-case-extent exchange (plan
+    field stays None).  An int pins the chunk count (auto cap).  An
+    EpOverlap passes through.  ``"auto"`` prices each candidate chunk count
+    with the overlapped-schedule comm estimate (``cm.moe_overlap_lambda``
+    via ``cm.service_latency``) on the workload envelope and keeps the
+    cheapest — including C=1, where count-bounding alone still shrinks the
+    exchange extent.  Dense models and EP-free strategies resolve to off:
+    there is no EP exchange to hide.
+    """
+    if value is None or value == "off":
+        return None, "explicit:off(monolithic worst-case exchange)"
+    if isinstance(value, cm.EpOverlap):
+        return value, f"explicit({value.describe()})"
+    if not cfg.is_moe or strat.moe_ep <= 1:
+        return None, ("auto:strategy(ep=1 — no EP exchange to hide)"
+                      if cfg.is_moe else
+                      "auto:model(dense — no EP exchange)")
+    if value != AUTO:
+        c = int(value)
+        if c < 1:
+            raise ValueError(f"ep_overlap chunks must be >= 1, got {c}")
+        return cm.EpOverlap(chunks=c), f"explicit(C={c}, auto cap)"
+
+    def step_s(ovl: cm.EpOverlap) -> float:
+        prf = cm.service_latency(
+            cfg, strat, cm.Workload(batch=batch, seq_len=l_in), cluster,
+            ep_overlap=ovl)
+        dec = cm.service_latency(
+            cfg, strat,
+            cm.Workload(batch=batch, seq_len=1, kv_len=l_in + l_out),
+            cluster, ep_overlap=ovl)
+        return prf + l_out * dec
+
+    best_c, best_t = 1, None
+    for c in EP_OVERLAP_CANDIDATES:
+        t = step_s(cm.EpOverlap(chunks=c))
+        if best_t is None or t < best_t:
+            best_c, best_t = c, t
+    base_t = step_s(cm.EpOverlap(chunks=1))
+    hidden_ms = max(base_t - best_t, 0.0) * 1e3
+    ovl = cm.EpOverlap(chunks=best_c)
+    return ovl, (f"auto:cost-model(C={best_c} hides {hidden_ms:.2f}ms of EP "
+                 f"A2A per request on {cluster.name}; cap="
+                 f"mean+{ovl.cap_sigma:g}sigma rows/rank)")
 
 
 __all__ = ["AUTO", "ITL_SLACK", "CHUNK_CANDIDATES", "AUTO_BATCH_CAP",
            "LEN_GRANULE", "OVERLOAD_WAIT_BOUND_S", "KV_PAGE_SIZE",
-           "OverloadPolicy", "KVConfig", "kv_bytes_per_token", "auto_kv",
+           "EP_OVERLAP_CANDIDATES", "OverloadPolicy", "KVConfig",
+           "kv_bytes_per_token", "kv_page_key", "auto_kv", "auto_ep_overlap",
            "resolve_cluster", "plan_name_for", "auto_max_batch",
            "token_times", "auto_chunk", "auto_token_budget", "auto_overload",
            "auto_max_len"]

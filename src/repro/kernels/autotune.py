@@ -59,7 +59,9 @@ _CACHE: dict[KernelKey, dict] = {}
 # predate the ragged mixed-chunk kernel and are invalidated wholesale.
 # v3: added "flash_chunk_paged" (bs must divide the KV page size, so its
 # defaults differ from flash_chunk's) — v2 files invalidated wholesale.
-CACHE_VERSION = 3
+# v4: added "kv_page" ({page} dicts — the paged-KV page size feeds the
+# flash_chunk_paged tile constraint) — v3 files invalidated wholesale.
+CACHE_VERSION = 4
 _persist_loaded = False
 
 
@@ -248,6 +250,17 @@ def _default_blocks(op: str, shape: tuple, dtype: str) -> dict:
         while bs * 2 <= s and bs <= 1024:
             bs *= 2
         return {"bq": min(bq, 128), "bs": min(bs, 2048)}
+    if op == "kv_page":
+        # key is (max_len, kv_row_els): paged-KV page size.  Not a Pallas
+        # tile — it sizes the cache pages the flash_chunk_paged block table
+        # routes, so the analytic default is the serving-tier constant (16)
+        # degraded to divide the length envelope; a measured ``tune`` sweep
+        # (benchmarks/kernel_bench.py) overrides it per shape.
+        max_len = shape[0]
+        page = 16
+        while page > 1 and max_len % page:
+            page //= 2
+        return {"page": max(page, 1)}
     if op == "flash_chunk_paged":
         # key is q.shape + (P, page) = (B, sq, nq, hd, P, page): q tile as
         # flash_chunk; the KV tile must DIVIDE the page size (the block
@@ -279,6 +292,19 @@ def select_blocks(op: str, shape: tuple, dtype) -> dict:
     if hit is None:
         hit = _CACHE[key] = _default_blocks(op, key.shape, key.dtype)
     return dict(hit)
+
+
+def lookup(op: str, shape: tuple, dtype) -> Optional[dict]:
+    """A registration for the key, or None — WITHOUT falling back to (or
+    caching) the analytic default.  Lets resolver-tier callers tell a
+    measured ``tune``/``register`` entry apart from the formula default
+    (``select_blocks`` deliberately blurs that line for the hot path)."""
+    key = cache_key(op, shape, dtype)
+    hit = _CACHE.get(key)
+    if hit is None and not _persist_loaded:
+        load_persistent()
+        hit = _CACHE.get(key)
+    return dict(hit) if hit is not None else None
 
 
 def _key_shape(op: str, args: tuple) -> tuple:
@@ -341,6 +367,6 @@ def tune(op: str, fn: Callable, candidates: list[dict], *args,
     return dict(best)
 
 
-__all__ = ["select_blocks", "register", "tune", "cache_info", "clear_cache",
-           "cache_key", "cache_path", "load_persistent", "CACHE_VERSION",
-           "KernelKey", "VMEM_BUDGET_BYTES"]
+__all__ = ["select_blocks", "lookup", "register", "tune", "cache_info",
+           "clear_cache", "cache_key", "cache_path", "load_persistent",
+           "CACHE_VERSION", "KernelKey", "VMEM_BUDGET_BYTES"]

@@ -9,8 +9,14 @@ gather pass driven by precomputed int32 index vectors (Megatron-Core's
 
   permute_tokens         out[i] = x[src_tok[i]]        (src_tok < 0 -> 0 row)
   permute_tokens_ragged  same, plus a dynamic row count so tiles past the
-                         ragged extent skip the gather loop (dropless EP
-                         exchange buffers are worst-case sized)
+                         ragged extent skip the gather loop.  Monolithic
+                         dropless EP exchange buffers are worst-case sized;
+                         under the micro-chunked overlap schedule
+                         (models.moe, plan.ep_overlap) each chunk's buffer
+                         is COUNT-BOUNDED to ``ep * cap_rows_for(...)``
+                         rows, so the static extent this kernel walks is
+                         already near the ragged fill — the tile skipping
+                         then only trims the cap's sigma headroom
   unpermute_tokens       out[t] = sum_j buf[src_slot[t,j]] * w[t,j]
                          (already segment-agnostic: it reads ragged buffers
                          through the same index vectors)

@@ -32,6 +32,10 @@ def _auto_int(v: str):
     return v if v == AUTO else int(v)
 
 
+def _ep_overlap_arg(v: str):
+    return v if v in (AUTO, "off") else int(v)
+
+
 def parse_args(argv=None) -> argparse.Namespace:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=C.ARCH_IDS)
@@ -83,6 +87,12 @@ def parse_args(argv=None) -> argparse.Namespace:
                          "prefix reuse for unified-step families (pool "
                          "sized from the Eq. 8 envelope), dense for "
                          "legacy-path families (docs/kv_cache.md)")
+    ap.add_argument("--ep-overlap", type=_ep_overlap_arg, default=AUTO,
+                    metavar="auto|off|C",
+                    help="micro-chunked EP-exchange overlap: auto = the "
+                         "cost model picks the chunk count (count-bounded "
+                         "A2A buffers on), off = monolithic worst-case "
+                         "exchange, an int pins the chunk count")
     ap.add_argument("--seed", type=int, default=0)
     return ap.parse_args(argv)
 
@@ -96,7 +106,8 @@ def build_spec(args: argparse.Namespace) -> ServeSpec:
         token_budget=args.token_budget, kv=args.kv,
         max_batch=args.max_batch, max_len=args.max_len,
         prompt_len=args.prompt_len, max_new_tokens=args.max_new,
-        arrival_rate=args.rate, objective=args.objective, seed=args.seed)
+        arrival_rate=args.rate, objective=args.objective,
+        ep_overlap=args.ep_overlap, seed=args.seed)
 
 
 def main(argv=None):

@@ -397,8 +397,10 @@ def _cross_attn(p, x, cfg: ModelConfig, plan: ShardingPlan, xk, xv):
 
 def apply_sublayer(kind: str, p, x, c, *, cfg: ModelConfig,
                    plan: ShardingPlan, positions, length, enc_out=None,
-                   q_lens=None, block_tables=None):
-    """One residual layer.  Returns (x, new_cache_or_None, aux).
+                   q_lens=None, block_tables=None, with_stats: bool = False):
+    """One residual layer.  Returns (x, new_cache_or_None, aux) — plus a
+    per-expert routed-count vector when ``with_stats`` (zeros for non-MoE
+    kinds, so the scan carry stays homogeneous).
 
     ``q_lens`` (b,) marks the unified mixed prefill/decode serving step:
     per-slot ragged query counts against per-slot cache offsets.  Only
@@ -407,6 +409,10 @@ def apply_sublayer(kind: str, p, x, c, *, cfg: ModelConfig,
     ``block_tables`` (b, max_blocks) marks a paged cache: ``c`` holds KV
     *pools* and reads/writes go through the per-slot page indirection."""
     aux = jnp.zeros((), jnp.float32)
+    counts = jnp.zeros((max(cfg.n_experts, 1),), jnp.int32)
+
+    def _ret(x, new_c, aux, counts=counts):
+        return (x, new_c, aux, counts) if with_stats else (x, new_c, aux)
     if q_lens is not None and kind not in ("dense", "moe"):
         raise NotImplementedError(
             f"unified mixed step (q_lens) unsupported for layer kind "
@@ -440,11 +446,15 @@ def apply_sublayer(kind: str, p, x, c, *, cfg: ModelConfig,
                 new_c["xk"], new_c["xv"] = xk, xv
 
         if kind == "moe":
-            m_out, aux = MOE.moe_block(p["moe"], x, cfg, plan)
+            if with_stats:
+                m_out, aux, counts = MOE.moe_block(p["moe"], x, cfg, plan,
+                                                   with_stats=True)
+            else:
+                m_out, aux = MOE.moe_block(p["moe"], x, cfg, plan)
             x = x + m_out
         else:
             x = x + L.mlp(p["mlp"], x, cfg, plan)
-        return x, new_c, aux
+        return _ret(x, new_c, aux, counts)
 
     if kind == "rwkv":
         st = (None, None) if c is None else (c["state"], c["x_tm"])
@@ -457,7 +467,7 @@ def apply_sublayer(kind: str, p, x, c, *, cfg: ModelConfig,
         x = x + c_out
         new_c = None if c is None else {"state": state, "x_tm": x_tm,
                                         "x_cm": x_cm}
-        return x, new_c, aux
+        return _ret(x, new_c, aux)
 
     if kind == "rec":
         st = (None, None) if c is None else (c["lru"], c["conv"])
@@ -466,13 +476,13 @@ def apply_sublayer(kind: str, p, x, c, *, cfg: ModelConfig,
         x = x + r_out
         x = x + L.mlp(p["mlp"], x, cfg, plan)
         new_c = None if c is None else {"lru": lru, "conv": conv}
-        return x, new_c, aux
+        return _ret(x, new_c, aux)
 
     if kind == "attn":
         a_out, new_c = _local_attn(p["attn"], x, cfg, plan, c, length)
         x = x + a_out
         x = x + L.mlp(p["mlp"], x, cfg, plan)
-        return x, new_c, aux
+        return _ret(x, new_c, aux)
 
     raise KeyError(kind)
 
@@ -508,18 +518,22 @@ def encode_audio(params, frames, cfg: ModelConfig, plan: ShardingPlan):
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.tree_util.register_dataclass,
-                   data_fields=("logits", "cache", "aux"), meta_fields=())
+                   data_fields=("logits", "cache", "aux", "expert_counts"),
+                   meta_fields=())
 @dataclasses.dataclass
 class Output:
     logits: jax.Array
     cache: Optional[dict]
     aux: jax.Array          # router load-balance loss (0 for non-MoE)
+    # per-expert routed-slot counts summed over MoE layers, (n_experts,)
+    # int32 — only populated by forward(expert_stats=True), else None
+    expert_counts: Optional[jax.Array] = None
 
 
 def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
             tokens=None, embeds=None, frames=None, positions=None,
             cache=None, remat: bool = False, q_lens=None,
-            last_only: bool = False) -> Output:
+            last_only: bool = False, expert_stats: bool = False) -> Output:
     """Unified forward.
 
     tokens  (b, s_text) int32 — text token ids (None for pure-embed input)
@@ -536,6 +550,11 @@ def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
                                 padding whose logits/cache writes are
                                 masked.  Requires a cache; attention-cached
                                 families only (dense/vlm-text, moe, mla).
+    expert_stats                accumulate per-expert routed-slot counts
+                                across MoE layers into
+                                ``Output.expert_counts`` (the serving
+                                tier's expert-load-skew observability);
+                                None on the output otherwise.
     last_only                   with q_lens: apply the LM head only to each
                                 slot's last valid row (position
                                 q_lens[i] - 1), returning (b, 1, v) logits —
@@ -577,46 +596,60 @@ def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
         enc_out = encode_audio(params, frames, cfg, plan)
 
     aux_total = jnp.zeros((), jnp.float32)
+    counts_total = jnp.zeros((max(cfg.n_experts, 1),), jnp.int32) \
+        if expert_stats else None
     new_groups = []
     for gi, g in enumerate(layer_plan(cfg)):
         p_g = params["groups"][gi]
         c_g = None if cache is None else cache["groups"][gi]
 
         def body(carry, xs, _g=g):
-            x, aux = carry
+            if expert_stats:
+                x, aux, cnt = carry
+            else:
+                x, aux = carry
+                cnt = None
             p_l, c_l = xs
+
+            def apply(kind, pp, xx, cc):
+                r = apply_sublayer(kind, pp, xx, cc, cfg=cfg, plan=plan,
+                                   positions=positions, length=length,
+                                   enc_out=enc_out, q_lens=q_lens,
+                                   block_tables=block_tables,
+                                   with_stats=expert_stats)
+                return r if expert_stats else r + (None,)
+
             if _g.kind == "pattern":
                 new_c_l = {}
                 for i, k in enumerate(_g.sub):
                     ci = None if c_l is None else c_l[f"l{i}"]
-                    x, nc, a = apply_sublayer(k, p_l[f"l{i}"], x, ci,
-                                              cfg=cfg, plan=plan,
-                                              positions=positions,
-                                              length=length, enc_out=enc_out,
-                                              q_lens=q_lens,
-                                              block_tables=block_tables)
+                    x, nc, a, c_ = apply(k, p_l[f"l{i}"], x, ci)
                     aux = aux + a
+                    if cnt is not None:
+                        cnt = cnt + c_
                     if nc is not None:
                         new_c_l[f"l{i}"] = nc
                 new_c_l = new_c_l or None
             else:
-                x, new_c_l, a = apply_sublayer(_g.kind, p_l, x, c_l,
-                                               cfg=cfg, plan=plan,
-                                               positions=positions,
-                                               length=length, enc_out=enc_out,
-                                               q_lens=q_lens,
-                                               block_tables=block_tables)
+                x, new_c_l, a, c_ = apply(_g.kind, p_l, x, c_l)
                 aux = aux + a
+                if cnt is not None:
+                    cnt = cnt + c_
             # Megatron-style sequence parallelism on the residual stream:
             # the scan carry (saved for backward, x n_layers) lives
             # seq-sharded over the TP axis instead of replicated.
             x = plan.constrain(x, "batch", "seq_resid", "embed")
-            return (x, aux), new_c_l
+            carry = (x, aux, cnt) if expert_stats else (x, aux)
+            return carry, new_c_l
 
         if remat:
             body = jax.checkpoint(body)
-        (x, aux_total), new_c_g = jax.lax.scan(
-            body, (x, aux_total), (p_g, c_g))
+        if expert_stats:
+            (x, aux_total, counts_total), new_c_g = jax.lax.scan(
+                body, (x, aux_total, counts_total), (p_g, c_g))
+        else:
+            (x, aux_total), new_c_g = jax.lax.scan(
+                body, (x, aux_total), (p_g, c_g))
         new_groups.append(new_c_g)
 
     if last_only:   # per-slot last valid row; norm/head are per-token ops
@@ -636,7 +669,8 @@ def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
         new_cache = {"groups": new_groups, "length": length + adv}
         if block_tables is not None:    # host-owned mapping rides through
             new_cache["block_tables"] = block_tables
-    return Output(logits=logits, cache=new_cache, aux=aux_total)
+    return Output(logits=logits, cache=new_cache, aux=aux_total,
+                  expert_counts=counts_total)
 
 
 __all__ = ["Group", "layer_plan", "model_spec", "init_params",

@@ -65,6 +65,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec
 
 from repro.configs.base import ModelConfig
+from repro.core.cost_model import EP_OVERLAP_OFF, EpOverlap, cap_rows_for
 from repro.core.partitioner import NULL_PLAN, ShardingPlan
 from repro.kernels.policy import NULL_POLICY, KernelPolicy
 from repro.models.layers import activate, rms_norm
@@ -368,8 +369,10 @@ def shared_expert_ffn(p, x, cfg: ModelConfig):
 def moe_local(p, x, cfg: ModelConfig, cf: Optional[float] = None,
               use_kernels: bool = False,
               policy: Optional[KernelPolicy] = None,
-              dispatch: Optional[str] = None):
-    """x: (b, s, h).  Returns (out, aux_loss).
+              dispatch: Optional[str] = None,
+              with_stats: bool = False):
+    """x: (b, s, h).  Returns (out, aux_loss)
+    [+ per-expert routed counts (E,) int32 when ``with_stats``].
 
     ``policy`` selects the Pallas kernels per stage (interpret mode on CPU;
     native on TPU); ``use_kernels=True`` is the legacy shorthand for
@@ -404,7 +407,12 @@ def moe_local(p, x, cfg: ModelConfig, cf: Optional[float] = None,
                                   use_kernel=policy.fused_permute)
     if cfg.n_shared_experts:
         out = out + shared_expert_ffn(p, tok, cfg)
-    return out.reshape(b, s, h).astype(x.dtype), aux
+    out = out.reshape(b, s, h).astype(x.dtype)
+    if with_stats:
+        counts = jnp.zeros((cfg.n_experts,), jnp.int32).at[
+            idx.reshape(-1)].add(1)
+        return out, aux, counts
+    return out, aux
 
 
 # ---------------------------------------------------------------------------
@@ -434,12 +442,29 @@ def _axis_size(axes: tuple):
     return s
 
 
+def _routed_counts_stat(idx, e_global: int, mesh_axes, tp_axes,
+                        token_sliced: bool):
+    """(E,) int32 global routed-slot counts, replicated (observability).
+
+    Tokens are sharded over the non-TP mesh axes (and over tp too when
+    token-sliced); sum those partials, keep the TP replication."""
+    c = jnp.zeros((e_global,), jnp.int32).at[idx.reshape(-1)].add(1)
+    cnt_axes = tuple(a for a in mesh_axes if a not in tuple(tp_axes))
+    if token_sliced:
+        cnt_axes = cnt_axes + tuple(a for a in tp_axes if a not in cnt_axes)
+    if cnt_axes:
+        c = jax.lax.psum(c, cnt_axes)
+    return c
+
+
 def _moe_shard_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes, comm_algo,
                   token_sliced: bool, cf: float, mesh_axes: tuple = (),
-                  policy: KernelPolicy = NULL_POLICY):
+                  policy: KernelPolicy = NULL_POLICY,
+                  with_stats: bool = False):
     """Per-device body.  x: (b_loc, s, h) — replicated across tp_axes.
 
-    Returns (out (b_loc, s, h), aux scalar) — out replicated across tp_axes.
+    Returns (out (b_loc, s, h), aux scalar) — out replicated across tp_axes
+    — plus (E,) int32 routed counts when ``with_stats``.
     ``policy`` kernelizes the per-device compute (gate, permute, expert
     GEMMs); the collectives between them are untouched.
     """
@@ -567,26 +592,49 @@ def _moe_shard_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes, comm_algo,
     out = out_tok.reshape(b, s, h).astype(x.dtype)
     if mesh_axes:
         aux = jax.lax.pmean(aux, mesh_axes)  # replicate for the P() out_spec
+    if with_stats:
+        return out, aux, _routed_counts_stat(idx, e_global, mesh_axes,
+                                             tp_axes, token_sliced)
     return out, aux
 
 
 def _moe_shard_dropless_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes,
                            comm_algo, token_sliced: bool,
                            mesh_axes: tuple = (),
-                           policy: KernelPolicy = NULL_POLICY):
+                           policy: KernelPolicy = NULL_POLICY,
+                           ep_overlap: Optional[EpOverlap] = None,
+                           with_stats: bool = False):
     """Per-device dropless body.  x: (b_loc, s, h) — replicated across
-    tp_axes.  Returns (out (b_loc, s, h), aux scalar).
+    tp_axes.  Returns (out (b_loc, s, h), aux scalar)
+    [+ counts (E,) int32 when ``with_stats``].
 
     EP exchange without capacity padding: ranks first A2A their per-expert
     slot counts (an (ep, e_local) int32 — bytes, not activations), then A2A
-    ragged token buffers whose static per-destination extent is the
-    worst-case N_local = T_local*k but whose *populated* prefix is exactly
-    the routed count — the segment-aware permute kernel skips the empty
-    tail tiles, and the grouped GEMM's compute volume is sum(counts).  The
-    fused RS-A2A-AG path keeps the paper's collective order: the dispatch
-    A2A rides on 1/tp-sharded hidden states, an AG restores full width
-    before the expert GEMMs, and the combine reduces-scatters back to 1/tp
-    before the return A2A and a single epilogue AG (Alg. 1-2)."""
+    ragged token buffers.  The fused RS-A2A-AG path keeps the paper's
+    collective order: the dispatch A2A rides on 1/tp-sharded hidden states,
+    an AG restores full width before the expert GEMMs, and the combine
+    reduces-scatters back to 1/tp before the return A2A and a single
+    epilogue AG (Alg. 1-2).
+
+    ``ep_overlap`` selects the exchange *schedule* (values never change):
+
+    * ``None`` / ``EP_OVERLAP_OFF`` — monolithic: one dispatch A2A at the
+      worst-case per-destination extent ``S = T_local*k`` (every rank could
+      receive everything), one grouped GEMM, one combine A2A, strictly
+      serial.
+    * otherwise — micro-chunked pipeline: the token batch splits into C
+      equal chunks; ALL chunks' counts + dispatch A2As are issued before
+      any chunk's grouped GEMM, and each chunk's combine A2A is issued as
+      soon as its GEMM finishes, so chunk i's dispatch rides the wire under
+      chunk i-1's GEMM and chunk i-2's combine (XLA's async scheduler
+      overlaps the independent ops).  Each chunk's exchange is
+      **count-bounded**: a static per-rank row cap ``S = cap_rows_for(...)``
+      priced from the routing distribution replaces the worst-case extent,
+      shrinking A2A bytes by ~S*ep/n.  If any (source, dest) segment in the
+      collective group overflows the cap, THAT chunk recomputes at the
+      worst-case extent (a rank-uniform ``lax.cond`` — every peer takes the
+      same branch), so the result is bit-identical to the monolithic
+      schedule in all cases."""
     b, s, h = x.shape
     tp = _axis_size(tp_axes) if tp_axes else 1
     ep = _axis_size(ep_axes) if ep_axes else 1
@@ -612,14 +660,24 @@ def _moe_shard_dropless_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes,
 
     idx, w, aux = route_topk(tok @ p["router"], k,
                              use_kernel=policy.topk_gate)
-    dl = make_dropless(idx, w, e_global)
 
     fused = (comm_algo in ("fused", "sync")) and tp > 1 and ep > 1 \
         and not token_sliced
 
+    def _ret(out_tok):
+        out = out_tok.reshape(b, s, h).astype(x.dtype)
+        nonlocal aux
+        if mesh_axes:
+            aux = jax.lax.pmean(aux, mesh_axes)
+        if with_stats:
+            return out, aux, _routed_counts_stat(idx, e_global, mesh_axes,
+                                                 tp_axes, token_sliced)
+        return out, aux
+
     if ep == 1:
         # no EP exchange: the local dropless pipeline, with the usual TP
         # partial-sum reduction over the expert_ffn shards.
+        dl = make_dropless(idx, w, e_global)
         xs = gather_rows(tok, dl.order // k,
                          use_kernel=policy.fused_permute)
         ys = grouped_ffn(p, xs, dl.offsets, cfg, use_kernel=policy.moe_gemm)
@@ -635,104 +693,160 @@ def _moe_shard_dropless_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes,
             if tp > 1:          # shared FFN weights are TP-sharded partials
                 sp = jax.lax.psum(sp, tp_axes)
             out_tok = out_tok + sp[:out_tok.shape[0]]
-        out = out_tok.reshape(b, s, h).astype(x.dtype)
-        if mesh_axes:
-            aux = jax.lax.pmean(aux, mesh_axes)
-        return out, aux
+        return _ret(out_tok)
 
     ax = ep_axes if len(ep_axes) > 1 else ep_axes[0]
-    # sorted-by-expert order is sorted-by-destination-rank order: the rows
-    # bound for rank r are the contiguous sorted segment
-    # [offsets[r*e_local], offsets[(r+1)*e_local]).
-    rank_off = dl.offsets[::e_local]                      # (ep+1,)
-    rank_cnt = rank_off[1:] - rank_off[:-1]               # (ep,)
-    i_in = jnp.arange(n, dtype=jnp.int32)[None, :]        # (1, S); S = n
-    p_sorted = rank_off[:-1, None] + i_in                 # (ep, S)
-    valid_send = i_in < rank_cnt[:, None]
-    src_tok_send = jnp.where(
-        valid_send, dl.order[jnp.minimum(p_sorted, n - 1)] // k, -1)
+    ovl = ep_overlap if ep_overlap is not None else EP_OVERLAP_OFF
+    # Micro-chunking: C equal token slices (C=1 = the monolithic schedule).
+    # gcd keeps chunk shapes static and equal for any local token count.
+    C = math.gcd(ovl.chunks, t) if ovl.chunks > 1 else 1
+    t_c = t // C
+    n_c = t_c * k                  # worst-case per-rank rows for one chunk
+    cap = cap_rows_for(n_c, ep, ovl)   # count-bounded per-rank extent
 
-    # ---- counts A2A (int32 metadata, before any activation traffic) ----
-    recv_counts = jax.lax.all_to_all(
-        dl.counts.reshape(ep, e_local), ax, split_axis=0, concat_axis=0,
-        tiled=False)                                      # (ep, e_local)
-
-    # ---------------- dispatch ----------------
     if fused:
         hs = h // tp
         tok_payload = jax.lax.dynamic_slice_in_dim(
             tok, _axis_index(tp_axes) * hs, hs, axis=1)   # (t, h/tp)
     else:
         tok_payload = tok
-    # per-destination-rank prefixes, NOT one contiguous prefix: rank r's
-    # rows live at [r*S, r*S + rank_cnt[r]), so the elision metadata is the
-    # (ep,) count vector with stride S
-    send = gather_rows(tok_payload, src_tok_send.reshape(-1),
-                       use_kernel=policy.fused_permute,
-                       total=rank_cnt, seg_stride=n)      # (ep*S, h')
-    send = send.reshape(ep, n, -1)
-    recv = jax.lax.all_to_all(send, ax, split_axis=0, concat_axis=0,
-                              tiled=False)                # (ep, S, h')
-    recv = recv.reshape(ep, n, send.shape[-1])
-    if fused:
-        recv = jax.lax.all_gather(recv, tp_axes, axis=-1, tiled=True)
 
-    # ---- regroup received rows by local expert (sources stay ordered) ----
-    # The permutation has a closed form from the count prefix-sums — no sort:
-    # comb row of recv row (s, i) = expert base (off_local[le]) + rows for le
-    # from earlier sources + rank of i within source s's le segment.
-    csum = jnp.cumsum(recv_counts, axis=1)                # (ep, e_local)
-    tot_src = csum[:, -1]                                 # (ep,)
-    le = (csum[:, :, None] <= i_in[None, :, :]).sum(1)    # (ep, S) local eid
-    le = le.astype(jnp.int32)
-    valid_2d = i_in < tot_src[:, None]                    # (ep, S)
-    counts_le = recv_counts.sum(0)                        # (e_local,)
-    off_local = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                                 jnp.cumsum(counts_le).astype(jnp.int32)])
-    le_c = jnp.minimum(le, e_local - 1)
-    start_in_src = jnp.take_along_axis(csum - recv_counts, le_c, axis=1)
-    from_earlier = jnp.take_along_axis(
-        jnp.cumsum(recv_counts, axis=0) - recv_counts, le_c, axis=1)
-    pos = off_local[le_c] + from_earlier + (i_in - start_in_src)  # (ep, S)
-    valid_recv = valid_2d.reshape(-1)                     # (ep*S,)
-    comb_inv = jnp.where(valid_recv, pos.reshape(-1), 0).astype(jnp.int32)
-    park = jnp.where(valid_recv, comb_inv, ep * n)
-    comb_src = jnp.full((ep * n + 1,), -1, jnp.int32).at[park].set(
-        jnp.arange(ep * n, dtype=jnp.int32))[:-1]
-    m_real = tot_src.sum()
-    comb = gather_rows(recv.reshape(ep * n, -1), comb_src,
-                       use_kernel=policy.fused_permute, total=m_real)
+    # every axis that participates in this block's collectives must take the
+    # same cond branch; counts are TP-replicated so the pmax is uniform.
+    ovf_axes = tuple(dict.fromkeys(tuple(ep_axes) + tuple(tp_axes)))
 
-    # ---------------- expert compute ----------------
-    ys = grouped_ffn(p, comb, off_local, cfg,             # partial over tp
-                     use_kernel=policy.moe_gemm)
+    def send_recv(tok_c, dl, S):
+        """Count-bounded dispatch A2A for one chunk at static extent S:
+        rank r's rows are the sorted segment [offsets[r*e_local],
+        offsets[(r+1)*e_local]) truncated to its first S rows."""
+        rank_off = dl.offsets[::e_local]                  # (ep+1,)
+        rank_cnt = rank_off[1:] - rank_off[:-1]           # (ep,)
+        rank_eff = jnp.minimum(rank_cnt, S)
+        i_in = jnp.arange(S, dtype=jnp.int32)[None, :]    # (1, S)
+        p_sorted = rank_off[:-1, None] + i_in             # (ep, S)
+        valid_send = i_in < rank_eff[:, None]
+        src_tok_send = jnp.where(
+            valid_send, dl.order[jnp.minimum(p_sorted, n_c - 1)] // k, -1)
+        # per-destination-rank prefixes, NOT one contiguous prefix: rank r's
+        # rows live at [r*S, r*S + rank_eff[r]), so the elision metadata is
+        # the (ep,) count vector with stride S
+        send = gather_rows(tok_c, src_tok_send.reshape(-1),
+                           use_kernel=policy.fused_permute,
+                           total=rank_eff, seg_stride=S)  # (ep*S, h')
+        send = send.reshape(ep, S, -1)
+        recv = jax.lax.all_to_all(send, ax, split_axis=0, concat_axis=0,
+                                  tiled=False)            # (ep, S, h')
+        recv = recv.reshape(ep, S, send.shape[-1])
+        if fused:
+            recv = jax.lax.all_gather(recv, tp_axes, axis=-1, tiled=True)
+        return recv
 
-    # ---------------- combine ----------------
+    def expert_phase(recv, recv_counts, S):
+        """Regroup received rows by local expert (closed form from the count
+        prefix-sums — no sort), grouped FFN, TP reduction, and the combine
+        A2A.  comb row of recv row (s, i) = expert base (off_local[le]) +
+        rows for le from earlier sources + rank of i within source s's le
+        segment."""
+        i_in = jnp.arange(S, dtype=jnp.int32)[None, :]    # (1, S)
+        csum = jnp.cumsum(recv_counts, axis=1)            # (ep, e_local)
+        # Under the row cap each sender truncated its expert-sorted segment
+        # at S rows, so the *effective* per-(source, expert) counts are the
+        # prefix sums clipped at S, re-diffed (matches the sender exactly).
+        csum_eff = jnp.minimum(csum, S)
+        cnt_eff = csum_eff - jnp.concatenate(
+            [jnp.zeros((ep, 1), jnp.int32), csum_eff[:, :-1]], axis=1)
+        tot_src = csum_eff[:, -1]                         # (ep,)
+        le = (csum_eff[:, :, None] <= i_in[None, :, :]).sum(1)  # (ep, S)
+        le = le.astype(jnp.int32)
+        valid_2d = i_in < tot_src[:, None]                # (ep, S)
+        counts_le = cnt_eff.sum(0)                        # (e_local,)
+        off_local = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                     jnp.cumsum(counts_le).astype(jnp.int32)])
+        le_c = jnp.minimum(le, e_local - 1)
+        start_in_src = jnp.take_along_axis(csum_eff - cnt_eff, le_c, axis=1)
+        from_earlier = jnp.take_along_axis(
+            jnp.cumsum(cnt_eff, axis=0) - cnt_eff, le_c, axis=1)
+        pos = off_local[le_c] + from_earlier + (i_in - start_in_src)
+        valid_recv = valid_2d.reshape(-1)                 # (ep*S,)
+        comb_inv = jnp.where(valid_recv, pos.reshape(-1), 0).astype(jnp.int32)
+        park = jnp.where(valid_recv, comb_inv, ep * S)
+        comb_src = jnp.full((ep * S + 1,), -1, jnp.int32).at[park].set(
+            jnp.arange(ep * S, dtype=jnp.int32))[:-1]
+        m_real = tot_src.sum()
+        comb = gather_rows(recv.reshape(ep * S, -1), comb_src,
+                           use_kernel=policy.fused_permute, total=m_real)
+        ys = grouped_ffn(p, comb, off_local, cfg,         # partial over tp
+                         use_kernel=policy.moe_gemm)
+        if fused:
+            ys = jax.lax.psum_scatter(ys, tp_axes, scatter_dimension=1,
+                                      tiled=True)         # (M, h/tp)
+        elif tp > 1 and not token_sliced:
+            ys = jax.lax.psum(ys, tp_axes)
+        out_recv = gather_rows(ys, jnp.where(valid_recv, comb_inv, -1),
+                               use_kernel=policy.fused_permute)
+        out_send = jax.lax.all_to_all(
+            out_recv.reshape(ep, S, -1), ax, split_axis=0, concat_axis=0)
+        return out_send.reshape(ep * S, -1)
+
+    def combine_phase(out_send, dl, w_c, S):
+        """Weighted k-way combine.  Slot f sits at sorted position
+        p = inv[f]; its rank r is the segment containing p (closed-form
+        prefix-sum arithmetic == searchsorted(rank_off, p, 'right') - 1),
+        its exchange row r*S + (p - rank_off[r])."""
+        rank_off = dl.offsets[::e_local]
+        p_pos = dl.inv
+        r_of = (rank_off[None, 1:] <= p_pos[:, None]).sum(1).astype(jnp.int32)
+        off_in_rank = p_pos - rank_off[r_of]
+        row = r_of * S + jnp.minimum(off_in_rank, S - 1)
+        return combine_rows(out_send, row.reshape(t_c, k),
+                            w_c.reshape(t_c, k),
+                            use_kernel=policy.fused_permute)
+
+    # ---- stage 1: per-chunk routing metadata; issue ALL counts A2As and
+    # count-bounded dispatch A2As up front (nothing downstream depends on
+    # them yet, so they ride the wire under later chunks' compute) ----
+    stage = []
+    for i in range(C):
+        sl = slice(i * t_c, (i + 1) * t_c)
+        dl = make_dropless(idx[sl], w[sl], e_global)
+        recv_counts = jax.lax.all_to_all(
+            dl.counts.reshape(ep, e_local), ax, split_axis=0, concat_axis=0,
+            tiled=False)                                  # (ep, e_local)
+        recv = send_recv(tok_payload[sl], dl, cap)
+        if cap < n_c:
+            # overflow: any (source, dest) segment beyond the cap anywhere
+            # in the collective group -> this chunk recomputes at the
+            # worst-case extent (rank-uniform predicate).
+            rank_off = dl.offsets[::e_local]
+            seg_max = jnp.max(rank_off[1:] - rank_off[:-1])
+            ovf = jax.lax.pmax(seg_max, ovf_axes) > cap
+        else:
+            ovf = None
+        stage.append((dl, recv_counts, recv, ovf, w[sl], tok_payload[sl]))
+
+    # ---- stage 2: per-chunk grouped FFN + combine A2A (chunk i's GEMM has
+    # no dependency on chunk i+1's dispatch A2A — they overlap) ----
+    outs = []
+    for dl, recv_counts, recv, ovf, w_c, tok_c in stage:
+        out_c = combine_phase(expert_phase(recv, recv_counts, cap),
+                              dl, w_c, cap)
+        if ovf is not None:
+            # rare path: redo dispatch->FFN->combine at worst-case extent.
+            # The counts A2A is NOT redone (counts are cap-independent).
+            full = jax.lax.cond(
+                ovf,
+                lambda tc=tok_c, d=dl, rc=recv_counts, wc=w_c: combine_phase(
+                    expert_phase(send_recv(tc, d, n_c), rc, n_c), d, wc, n_c),
+                lambda: jnp.zeros((t_c, out_c.shape[-1]), out_c.dtype))
+            out_c = jnp.where(ovf, full, out_c)
+        outs.append(out_c)
+    out_tok = outs[0] if C == 1 else jnp.concatenate(outs, axis=0)
+
+    # ---------------- epilogue (full token batch) ----------------
     shared_partial = None
     if cfg.n_shared_experts:
         shared_partial = shared_expert_ffn(
             p, tok_full if token_sliced else tok, cfg)
-
-    if fused:
-        ys = jax.lax.psum_scatter(ys, tp_axes, scatter_dimension=1,
-                                  tiled=True)             # (M, h/tp)
-    elif tp > 1 and not token_sliced:
-        ys = jax.lax.psum(ys, tp_axes)
-
-    out_recv = gather_rows(ys, jnp.where(valid_recv, comb_inv, -1),
-                           use_kernel=policy.fused_permute)
-    out_send = jax.lax.all_to_all(
-        out_recv.reshape(ep, n, -1), ax, split_axis=0, concat_axis=0)
-    out_send = out_send.reshape(ep * n, -1)
-
-    # slot f sits at sorted position p = inv[f]; its rank r is the segment
-    # containing p, its exchange row r*S + (p - rank_off[r]).
-    p_pos = dl.inv
-    r_of = (jnp.searchsorted(rank_off, p_pos, side="right") - 1).astype(
-        jnp.int32)
-    row = r_of * n + (p_pos - rank_off[r_of])
-    out_tok = combine_rows(out_send, row.reshape(t, k), w.reshape(t, k),
-                           use_kernel=policy.fused_permute)
 
     if fused:
         if shared_partial is not None:
@@ -748,27 +862,31 @@ def _moe_shard_dropless_fn(p, x, *, cfg: ModelConfig, tp_axes, ep_axes,
                 shared_partial = jax.lax.psum(shared_partial, tp_axes)
             out_tok = out_tok + shared_partial[:out_tok.shape[0]]
 
-    out = out_tok.reshape(b, s, h).astype(x.dtype)
-    if mesh_axes:
-        aux = jax.lax.pmean(aux, mesh_axes)
-    return out, aux
+    return _ret(out_tok)
 
 
 def moe_block(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
-              cf: Optional[float] = None, dispatch: Optional[str] = None):
-    """The MoE block.  x: (b, s, h) -> (out, aux_loss).
+              cf: Optional[float] = None, dispatch: Optional[str] = None,
+              with_stats: bool = False):
+    """The MoE block.  x: (b, s, h) -> (out, aux_loss)
+    [+ per-expert routed counts (E,) int32, replicated, when ``with_stats``
+    — the expert-load observability feed, on every path].
 
     ``plan.kernels`` (a KernelPolicy) decides which stages run as Pallas
-    kernels.  ``dispatch`` overrides ``plan.dispatch_mode`` ("auto" resolves
-    to dropless — see the module docstring); ``cf`` only applies to capacity
-    mode, where cf=0.0 is a legal (degenerate) capacity factor, so only None
-    falls back to the config default."""
+    kernels.  ``plan.ep_overlap`` (an EpOverlap) selects the micro-chunked
+    count-bounded EP-exchange schedule on the dropless path; None keeps the
+    monolithic worst-case exchange.  ``dispatch`` overrides
+    ``plan.dispatch_mode`` ("auto" resolves to dropless — see the module
+    docstring); ``cf`` only applies to capacity mode, where cf=0.0 is a
+    legal (degenerate) capacity factor, so only None falls back to the
+    config default."""
     mode = resolve_dispatch(dispatch if dispatch is not None
                             else getattr(plan, "dispatch_mode", None))
     if cf is None:
         cf = cfg.capacity_factor
     if not plan.enabled:
-        return moe_local(p, x, cfg, cf, policy=plan.kernels, dispatch=mode)
+        return moe_local(p, x, cfg, cf, policy=plan.kernels, dispatch=mode,
+                         with_stats=with_stats)
 
     mesh = plan.mesh
     # dp_ep plan: ep_axes overlaps tp_axes (experts span data x model) ->
@@ -797,21 +915,25 @@ def moe_block(p, x, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
             _moe_shard_dropless_fn, cfg=cfg, tp_axes=plan.tp_axes,
             ep_axes=plan.ep_axes, comm_algo=comm_algo,
             token_sliced=token_sliced, mesh_axes=tuple(mesh.axis_names),
-            policy=plan.kernels)
+            policy=plan.kernels, ep_overlap=plan.ep_overlap,
+            with_stats=with_stats)
     else:
         fn = functools.partial(
             _moe_shard_fn, cfg=cfg, tp_axes=plan.tp_axes,
             ep_axes=plan.ep_axes, comm_algo=comm_algo,
             token_sliced=token_sliced, cf=cf,
-            mesh_axes=tuple(mesh.axis_names), policy=plan.kernels)
+            mesh_axes=tuple(mesh.axis_names), policy=plan.kernels,
+            with_stats=with_stats)
 
-    out, aux = _shard_map(
+    out_specs = (x_spec, PartitionSpec())
+    if with_stats:
+        out_specs = out_specs + (PartitionSpec(),)
+    return _shard_map(
         fn, mesh=mesh,
         in_specs=(p_specs, x_spec),
-        out_specs=(x_spec, PartitionSpec()),
+        out_specs=out_specs,
         **_SHARD_MAP_KW,
     )(p, x)
-    return out, aux
 
 
 __all__ = [

@@ -93,6 +93,10 @@ class ServeSpec:
     # KV cache backend: "auto" (-> paged from the Eq. 8 envelope for
     # unified families, dense for legacy) | "dense" | "paged" | a KVConfig
     kv: Union[str, KVConfig] = AUTO
+    # EP-exchange overlap: "auto" (cost model picks the micro-chunk count;
+    # count-bounded buffers on) | "off" (monolithic worst-case exchange) |
+    # an int chunk count | an explicit cm.EpOverlap
+    ep_overlap: Union[str, int, cm.EpOverlap] = AUTO
     # sampling / debug
     temperature: float = 0.0
     seed: int = 0
@@ -118,6 +122,14 @@ class ServeSpec:
                 and self.kv not in (AUTO, "dense", "paged"):
             raise ValueError("kv must be 'auto'|'dense'|'paged' or a "
                              f"KVConfig, got {self.kv!r}")
+        eo = self.ep_overlap
+        if not isinstance(eo, cm.EpOverlap):
+            if isinstance(eo, bool) or not (
+                    eo in (AUTO, "off")
+                    or (isinstance(eo, int) and eo >= 1)):
+                raise ValueError(
+                    "ep_overlap must be 'auto'|'off', a chunk count >= 1 "
+                    f"or an EpOverlap, got {eo!r}")
         object.__setattr__(self, "faults", tuple(self.faults))
         for f in self.faults:
             if not isinstance(f, Fault):
@@ -160,10 +172,22 @@ class ServeSpec:
         l_in, l_out = self.prompt_len, self.max_new_tokens
         analysis_batch = self.max_batch if _concrete(self.max_batch) \
             else R.AUTO_BATCH_CAP
+        # pricing hint: when the overlapped exchange is not disabled, the
+        # analyzer prices every candidate with the micro-chunked schedule —
+        # strategies whose A2A hides behind expert compute stop losing
+        if self.ep_overlap == "off":
+            price_ovl = None
+        elif isinstance(self.ep_overlap, cm.EpOverlap):
+            price_ovl = self.ep_overlap
+        elif isinstance(self.ep_overlap, int):
+            price_ovl = cm.EpOverlap(chunks=self.ep_overlap)
+        else:                         # "auto": a representative chunk count
+            price_ovl = cm.EpOverlap(chunks=4)
         report = analyzer.select(
             cfg, cluster_spec, batch=int(analysis_batch),
             l_in=min(l_in, 8192), l_out=l_out,
-            arrival_rate=self.arrival_rate, objective=self.objective)
+            arrival_rate=self.arrival_rate, objective=self.objective,
+            ep_overlap=price_ovl)
         best = report.best.strategy
 
         # ---- strategy -> plan layout name ----
@@ -264,8 +288,14 @@ class ServeSpec:
                 l_out=l_out, front=front, paged_ok=paged_ok,
                 backend=backend)
 
+        # ---- EP-exchange overlap: micro-chunk count + row cap ----
+        ep_ovl, prov["ep_overlap"] = R.auto_ep_overlap(
+            cfg, cost_strat, cluster_spec, batch=max_batch, l_in=l_in,
+            l_out=l_out, value=self.ep_overlap)
+
         plan = make_plan(name, mesh, comm_algo=comm_algo, fsdp=fsdp, sp=sp,
-                         kernels=kernels, dispatch=dispatch)
+                         kernels=kernels, dispatch=dispatch,
+                         ep_overlap=ep_ovl)
 
         return ResolvedServeSpec(
             arch=arch, reduced=self.reduced, cluster=cluster_spec.name,
@@ -275,6 +305,9 @@ class ServeSpec:
             prompt_len=l_in, max_new_tokens=l_out,
             arrival_rate=self.arrival_rate, objective=self.objective,
             overload=overload, faults=self.faults, kv=kv,
+            ep_overlap=ep_ovl,
+            moe_ep=cost_strat.moe_ep if cfg.is_moe else 1,
+            moe_tp=cost_strat.moe_tp if cfg.is_moe else 1,
             temperature=self.temperature, seed=self.seed,
             debug_logits=self.debug_logits, plan=plan, report=report,
             provenance=prov)
@@ -310,13 +343,20 @@ class ResolvedServeSpec:
     debug_logits: bool
     faults: tuple = ()
     kv: KVConfig = dataclasses.field(default_factory=KVConfig)
+    ep_overlap: Optional[cm.EpOverlap] = None   # None = monolithic exchange
+    # the priced strategy's MoE degrees (the engine's expert-load/A2A
+    # observability buckets measured counts by them — the local engine
+    # itself runs the NULL_PLAN single-device layout)
+    moe_ep: int = 1
+    moe_tp: int = 1
     plan: ShardingPlan = NULL_PLAN
     report: Optional[analyzer.AnalyzerReport] = dataclasses.field(
         default=None, compare=False, repr=False)
     provenance: dict = dataclasses.field(default_factory=dict)
 
     _KNOBS = ("strategy", "kernels", "dispatch", "chunk", "token_budget",
-              "max_batch", "max_len", "cluster", "overload", "kv")
+              "max_batch", "max_len", "cluster", "overload", "kv",
+              "ep_overlap")
 
     def describe(self) -> str:
         """The provenance report: every knob, its value, and its source."""
@@ -331,8 +371,11 @@ class ResolvedServeSpec:
             v = getattr(self, f)
             if f == "strategy" and self.strategy_detail:
                 v = f"{v} ({self.strategy_detail})"
-            elif isinstance(v, (KernelPolicy, OverloadPolicy, KVConfig)):
+            elif isinstance(v, (KernelPolicy, OverloadPolicy, KVConfig,
+                                cm.EpOverlap)):
                 v = v.describe()
+            elif f == "ep_overlap" and v is None:
+                v = "off"
             rows.append((f, str(v), self.provenance.get(f, "?")))
         w0 = max(len(r[0]) for r in rows)
         w1 = max(len(r[1]) for r in rows)
@@ -345,9 +388,12 @@ class ResolvedServeSpec:
         resolved = {}
         for f in self._KNOBS:
             v = getattr(self, f)
-            resolved[f] = v.describe() \
-                if isinstance(v, (KernelPolicy, OverloadPolicy, KVConfig)) \
-                else v
+            if isinstance(v, (KernelPolicy, OverloadPolicy, KVConfig,
+                              cm.EpOverlap)):
+                v = v.describe()
+            elif f == "ep_overlap" and v is None:
+                v = "off"
+            resolved[f] = v
         return {
             "resolved": resolved,
             "provenance": dict(self.provenance),

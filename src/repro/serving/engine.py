@@ -52,6 +52,7 @@ window — build a ``ServeSpec`` and resolve it (docs/api.md).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import Counter
 from typing import Callable, Optional
@@ -61,6 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.cost_model import cap_rows_for
 from repro.models.model import forward, init_cache
 from repro.serving.faults import FaultInjector, InjectedFault
 from repro.serving.kv_cache import insert_slot, make_kv_cache, with_lengths
@@ -174,6 +176,14 @@ class Engine:
         # slot's last valid row (forward last_only)
         self.debug_logits = bool(spec.debug_logits)
 
+        # expert-load observability (MoE only, unified path): per-expert
+        # routed-slot counts summed over layers/steps plus the EP-exchange
+        # byte ledger — moved under the resolved count-bounded extent vs
+        # the monolithic worst case (``ep_load_stats``)
+        self.expert_counts = np.zeros((max(cfg.n_experts, 1),), np.int64)
+        self.a2a_bytes_moved = 0
+        self.a2a_bytes_worst = 0
+
         # deterministic chaos harness (ServeSpec.faults); empty = inert
         self.faults = FaultInjector(getattr(spec, "faults", ()),
                                     seed=spec.seed)
@@ -267,7 +277,8 @@ class Engine:
         """
         out = forward(params, self.cfg, self.plan, tokens=tokens,
                       cache=cache, q_lens=q_lens,
-                      last_only=not self.debug_logits)
+                      last_only=not self.debug_logits,
+                      expert_stats=self.cfg.is_moe)
         if self.debug_logits:
             last = jnp.take_along_axis(
                 out.logits, jnp.maximum(q_lens - 1, 0)[:, None, None],
@@ -281,7 +292,8 @@ class Engine:
             nxt = jax.random.categorical(key, last / self.temperature, -1)
         else:
             nxt = jnp.argmax(last, -1)
-        return nxt.astype(jnp.int32), last, step_logits, out.cache, bad
+        return (nxt.astype(jnp.int32), last, step_logits, out.cache, bad,
+                out.expert_counts)
 
     def _prefill_impl(self, params, tokens, real_len):
         cache = init_cache(self.cfg, 1, self.max_len, self.dtype)
@@ -556,9 +568,12 @@ class Engine:
                 toks[i, 0] = self._last_tok[i]
         self.key, sub = jax.random.split(self.key)
         self.kv.flush()          # push dirty block tables to device
-        nxt, self.last_logits, self.step_logits, self.cache, bad = \
+        nxt, self.last_logits, self.step_logits, self.cache, bad, ecnt = \
             self._unified(self.params, jnp.asarray(toks),
                           jnp.asarray(q_lens), self.cache, sub)
+        if ecnt is not None:
+            self.expert_counts += np.asarray(ecnt, np.int64)
+            self._account_a2a(int(q_lens.sum()))
         self.kv.advance(q_lens)  # host length mirror follows the device
         # one (B,) host read per step, for request bookkeeping + the next
         # step's token buffer (which must merge host-side prompt chunks
@@ -603,6 +618,64 @@ class Engine:
                 self._pending[i] = None
                 self.kv.free(i)
         return retired
+
+    # -- expert-load / EP-exchange observability -------------------------
+    def _account_a2a(self, step_tokens: int) -> None:
+        """Price the step's EP exchange into the byte ledger.
+
+        The engine itself runs the model on this host (NULL_PLAN when
+        single-device), so the ledger prices what the RESOLVED deployment
+        would move: ``moved`` under the count-bounded micro-chunked extent
+        the spec resolved to, ``worst`` under the monolithic worst-case
+        buffers (every routed row replicated to every EP rank).  Both are
+        dispatch + combine over every MoE layer.
+        """
+        cfg, spec = self.cfg, self.spec
+        ep = int(getattr(spec, "moe_ep", 1) or 1)
+        if not cfg.is_moe or step_tokens <= 0 or ep <= 1:
+            return
+        n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+        n_rows = step_tokens * cfg.top_k     # routed slots per MoE layer
+        ovl = getattr(spec, "ep_overlap", None)
+        if ovl is None or getattr(ovl, "chunks", 1) <= 1:
+            rows_moved = ep * n_rows         # monolithic worst-case extent
+        else:
+            chunks = max(1, math.gcd(int(ovl.chunks), step_tokens))
+            n_chunk_rows = (step_tokens // chunks) * cfg.top_k
+            cap = cap_rows_for(n_chunk_rows, ep, ovl)
+            rows_moved = ep * chunks * cap   # count-bounded extent
+        # fused RS-A2A-AG ships the TP shard (h / moe_tp); the unfused
+        # ladder moves full-width rows
+        moe_tp = int(getattr(spec, "moe_tp", 1) or 1)
+        width = cfg.d_model
+        if getattr(spec.plan, "comm_algo", "") == "fused":
+            width = cfg.d_model // max(moe_tp, 1)
+        elem = jnp.dtype(self.dtype).itemsize
+        per_row = width * elem * 2 * n_moe_layers      # dispatch + combine
+        self.a2a_bytes_moved += rows_moved * per_row
+        self.a2a_bytes_worst += ep * n_rows * per_row
+
+    def ep_load_stats(self) -> dict:
+        """Expert-load skew bucketed by resolved EP rank + the A2A ledger.
+
+        Returns ``ep_rank_max_tokens`` / ``ep_rank_mean_tokens`` (routed
+        slots landing on the hottest / average EP rank, summed over layers
+        and steps — their ratio is the skew the count-bounded buffers must
+        absorb) and the ``a2a_bytes_moved`` / ``a2a_bytes_worst`` ledger.
+        """
+        counts = self.expert_counts
+        ep = int(getattr(self.spec, "moe_ep", 1) or 1)
+        if not self.cfg.is_moe or counts.sum() == 0:
+            return {"ep_rank_max_tokens": 0, "ep_rank_mean_tokens": 0.0,
+                    "a2a_bytes_moved": int(self.a2a_bytes_moved),
+                    "a2a_bytes_worst": int(self.a2a_bytes_worst)}
+        if ep <= 1 or counts.shape[0] % ep:
+            ep = 1                      # degenerate bucketing: one rank
+        per_rank = counts.reshape(ep, counts.shape[0] // ep).sum(axis=1)
+        return {"ep_rank_max_tokens": int(per_rank.max()),
+                "ep_rank_mean_tokens": float(per_rank.mean()),
+                "a2a_bytes_moved": int(self.a2a_bytes_moved),
+                "a2a_bytes_worst": int(self.a2a_bytes_worst)}
 
     def _step_legacy(self) -> list:
         step_idx = self._step_idx

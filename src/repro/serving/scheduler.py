@@ -84,6 +84,14 @@ class ServeMetrics:
     n_prefix_hits: int = 0       # admissions that reused shared pages
     prefix_hit_tokens: int = 0   # prompt tokens served from shared pages
     n_evictions: int = 0         # prefix-index pages evicted under pressure
+    # expert-load skew + EP-exchange ledger (MoE only; docs/dispatch.md).
+    # max/mean is the skew the count-bounded A2A buffers must absorb; the
+    # byte ledger compares the resolved micro-chunked extent against the
+    # monolithic worst case (Engine.ep_load_stats)
+    ep_rank_max_tokens: int = 0      # routed slots on the hottest EP rank
+    ep_rank_mean_tokens: float = 0.0  # routed slots per EP rank, mean
+    a2a_bytes_moved: int = 0         # priced bytes under the resolved extent
+    a2a_bytes_worst: int = 0         # priced bytes at worst-case extent
 
     def row(self) -> str:
         r = (f"n={self.n_requests} ttft={self.ttft_mean*1e3:.1f}ms "
@@ -96,6 +104,12 @@ class ServeMetrics:
              f"kv={self.kv_occupancy*100:.0f}% "
              f"pfxhit={self.n_prefix_hits}({self.prefix_hit_tokens}tok) "
              f"evict={self.n_evictions}")
+        if self.ep_rank_mean_tokens > 0:
+            skew = self.ep_rank_max_tokens / self.ep_rank_mean_tokens
+            saved = 1.0 - self.a2a_bytes_moved / max(self.a2a_bytes_worst, 1)
+            r += (f" epskew={skew:.2f} "
+                  f"a2a={self.a2a_bytes_moved}/{self.a2a_bytes_worst}B "
+                  f"(-{saved*100:.0f}%)")
         if self.n_incomplete:
             r += f" INCOMPLETE={self.n_incomplete}"
         return r
@@ -110,7 +124,11 @@ class ServeMetrics:
                 "kv_occupancy": self.kv_occupancy,
                 "n_prefix_hits": self.n_prefix_hits,
                 "prefix_hit_tokens": self.prefix_hit_tokens,
-                "n_evictions": self.n_evictions}
+                "n_evictions": self.n_evictions,
+                "ep_rank_max_tokens": self.ep_rank_max_tokens,
+                "ep_rank_mean_tokens": self.ep_rank_mean_tokens,
+                "a2a_bytes_moved": self.a2a_bytes_moved,
+                "a2a_bytes_worst": self.a2a_bytes_worst}
 
 
 class Scheduler:
@@ -341,6 +359,7 @@ class Scheduler:
             n_prefix_hits=self.engine.kv.stats.n_prefix_hits,
             prefix_hit_tokens=self.engine.kv.stats.prefix_hit_tokens,
             n_evictions=self.engine.kv.stats.n_evictions,
+            **self.engine.ep_load_stats(),
         )
 
 

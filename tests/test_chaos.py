@@ -224,3 +224,38 @@ def test_saturating_deadline_workload_zero_stalls(smollm):
     # expiry (the loop checks deadlines every step); allow generous CPU
     # scheduling noise but far less than a whole request's service time
     assert m.deadline_miss_p99 < 0.25
+
+
+def test_latency_fault_with_ep_overlap_keeps_moe_observability():
+    """Chaos lane x the micro-chunked EP exchange: a MoE engine resolved
+    with ``ep_overlap`` pinned serves through an injected straggler fault
+    and still reports coherent expert-load skew + A2A-ledger counters
+    (the overlap plumbing must not disturb fault accounting, and vice
+    versa)."""
+    cfg = C.get_reduced("phi3.5-moe-42b")
+    params = init_params(KEY, cfg, jnp.float32)
+    eng = make_engine(cfg, params, max_batch=2, max_len=64, chunk=4,
+                      faults=(Fault(kind="latency", at=(2,), ms=10.0),),
+                      seed=SEED, ep_overlap=2)
+    assert eng.spec.ep_overlap is not None
+    assert eng.spec.ep_overlap.chunks == 2
+    sched = Scheduler(eng)
+    reqs = [Request(rid=i, prompt=np.arange(6 + i, dtype=np.int32),
+                    max_new_tokens=4) for i in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run()
+    assert {r.rid for r in done} == {0, 1, 2}
+    assert eng.faults.log == [(2, "latency", "latency(at=[2] ms=10)")]
+    m = sched.metrics()
+    # expert-load skew: every routed slot landed on some EP rank bucket
+    assert m.ep_rank_max_tokens >= m.ep_rank_mean_tokens > 0
+    total = int(eng.expert_counts.sum())
+    ep = max(1, eng.spec.moe_ep) if cfg.n_experts % max(1, eng.spec.moe_ep) == 0 \
+        else 1
+    assert m.ep_rank_mean_tokens * ep == pytest.approx(total)
+    # the ledger priced the exchange and never exceeds worst case
+    if eng.spec.moe_ep > 1:
+        assert 0 < m.a2a_bytes_moved <= m.a2a_bytes_worst
+    for k in ("ep_rank_max_tokens", "a2a_bytes_moved", "a2a_bytes_worst"):
+        assert k in m.robustness()

@@ -1,0 +1,246 @@
+"""Unit tests for the micro-chunked EP-exchange overlap stack.
+
+Covers the cost-model primitives (``EpOverlap``, ``cap_rows_for``,
+``moe_overlap_lambda``), the resolver knob (``auto_ep_overlap``, the
+``kv_page`` autotune hook), the ``ServeSpec`` surface (validation,
+resolution, provenance, meta), the acceptance-criterion analyzer flip,
+and the engine-level bit-identity oracle.  The sharded bit-identity of
+the chunked pipeline itself runs in tests/sharded (subprocess CPU mesh).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core import analyzer
+from repro.core import cost_model as cm
+from repro.core import resolve as R
+from repro.core.topology import CLUSTERS
+from repro.kernels import autotune
+from repro.models import model as M
+from repro.serving.api import LLM, ServeSpec
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# cost-model primitives
+# ---------------------------------------------------------------------------
+
+def test_ep_overlap_validation_and_describe():
+    with pytest.raises(ValueError):
+        cm.EpOverlap(chunks=0)
+    with pytest.raises(ValueError):
+        cm.EpOverlap(chunks=2, cap_rows=-2)
+    with pytest.raises(ValueError):
+        cm.EpOverlap(chunks=2, cap_sigma=0.0)
+    assert cm.EP_OVERLAP_OFF.off
+    assert not cm.EpOverlap(chunks=1, cap_rows=0).off   # count-bounding on
+    assert "C=4" in cm.EpOverlap(chunks=4).describe()
+    assert "worst-case" in cm.EpOverlap(chunks=2, cap_rows=-1).describe()
+    assert "cap=8 rows" in cm.EpOverlap(chunks=2, cap_rows=8).describe()
+
+
+def test_cap_rows_for_rules():
+    ovl = cm.EpOverlap(chunks=2)
+    # no EP / worst-case cap: the full chunk extent
+    assert cm.cap_rows_for(128, 1, ovl) == 128
+    assert cm.cap_rows_for(128, 4, cm.EpOverlap(chunks=2, cap_rows=-1)) == 128
+    # explicit cap clamps to [1, n_chunk]
+    assert cm.cap_rows_for(128, 4, cm.EpOverlap(chunks=2, cap_rows=48)) == 48
+    assert cm.cap_rows_for(16, 4, cm.EpOverlap(chunks=2, cap_rows=48)) == 16
+    # auto rule: >= the routing mean, multiple of 8, <= worst case; at
+    # realistic sizes strictly below worst case (that's the point)
+    cap = cm.cap_rows_for(512, 4, ovl)
+    assert cap % 8 == 0 and 512 // 4 <= cap < 512
+    # more sigma headroom -> never a smaller cap
+    cap_hi = cm.cap_rows_for(512, 4, cm.EpOverlap(chunks=2, cap_sigma=6.0))
+    assert cap_hi >= cap
+
+
+def test_moe_overlap_lambda_shapes_of_the_estimate():
+    lam, tau = 10e-3, 4e-3
+    # C=1 is the serial sum (identity on the comm term)
+    assert cm.moe_overlap_lambda(lam, tau, cm.EpOverlap(chunks=1)) == lam
+    # comm-bound: hides up to tau of wire time, never more
+    eff = cm.moe_overlap_lambda(lam, tau, cm.EpOverlap(chunks=4))
+    assert lam - tau <= eff < lam
+    # compute-bound: hides (almost) all of lam
+    eff2 = cm.moe_overlap_lambda(tau, lam, cm.EpOverlap(chunks=4))
+    assert eff2 < tau and eff2 == pytest.approx(tau / 4)
+    # per-chunk alpha rounds grow linearly with C and bound useful C
+    a = 1e-4
+    e2 = cm.moe_overlap_lambda(lam, tau, cm.EpOverlap(chunks=2), a)
+    e8 = cm.moe_overlap_lambda(lam, tau, cm.EpOverlap(chunks=8), a)
+    assert e8 - e2 == pytest.approx(
+        (6 * a) - (1.0 / 2 - 1.0 / 8) * min(lam, tau))
+
+
+# ---------------------------------------------------------------------------
+# resolver knob
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def moe_pick():
+    cfg = C.get("phi3.5-moe-42b")
+    cluster = CLUSTERS["v5e-pod-256"]
+    strat = analyzer.select(cfg, cluster, batch=16, l_in=1024,
+                            l_out=256).best.strategy
+    return cfg, cluster, strat
+
+
+def test_auto_ep_overlap_explicit_paths(moe_pick):
+    cfg, cluster, strat = moe_pick
+    kw = dict(batch=16, l_in=1024, l_out=256)
+    ovl, prov = R.auto_ep_overlap(cfg, strat, cluster, value="off", **kw)
+    assert ovl is None and prov.startswith("explicit:off")
+    ovl, prov = R.auto_ep_overlap(cfg, strat, cluster, value=3, **kw)
+    assert ovl == cm.EpOverlap(chunks=3) and prov == "explicit(C=3, auto cap)"
+    pinned = cm.EpOverlap(chunks=2, cap_rows=64)
+    ovl, prov = R.auto_ep_overlap(cfg, strat, cluster, value=pinned, **kw)
+    assert ovl is pinned and "cap=64 rows" in prov
+    with pytest.raises(ValueError):
+        R.auto_ep_overlap(cfg, strat, cluster, value=0, **kw)
+
+
+def test_auto_ep_overlap_degenerate_paths(moe_pick):
+    cfg, cluster, strat = moe_pick
+    kw = dict(batch=16, l_in=1024, l_out=256)
+    dense = C.get("smollm-360m")
+    ovl, prov = R.auto_ep_overlap(dense, strat, cluster, **kw)
+    assert ovl is None and "dense" in prov
+    ep1 = cm.Strategy(attn_tp=4, attn_dp=1, moe_tp=4, moe_ep=1)
+    ovl, prov = R.auto_ep_overlap(cfg, ep1, cluster, value="auto", **kw)
+    assert ovl is None and "ep=1" in prov
+
+
+def test_auto_ep_overlap_auto_prices_candidates(moe_pick):
+    cfg, cluster, strat = moe_pick
+    kw = dict(batch=16, l_in=1024, l_out=256)
+    ovl, prov = R.auto_ep_overlap(cfg, strat, cluster, value="auto", **kw)
+    assert ovl is not None and ovl.chunks in R.EP_OVERLAP_CANDIDATES
+    assert prov.startswith("auto:cost-model(") and cluster.name in prov
+    # the auto pick never prices above the monolithic C=1 schedule
+    def step(o):
+        return (cm.service_latency(cfg, strat,
+                                   cm.Workload(batch=16, seq_len=1024),
+                                   cluster, ep_overlap=o)
+                + 256 * cm.service_latency(
+                    cfg, strat,
+                    cm.Workload(batch=16, seq_len=1, kv_len=1280),
+                    cluster, ep_overlap=o))
+    assert step(ovl) <= step(cm.EpOverlap(chunks=1)) + 1e-12
+
+
+def test_overlap_pricing_flips_analyzer_pick():
+    """Acceptance criterion: the overlapped exchange estimate changes the
+    automatic analyzer's preferred strategy on a paper cluster config
+    (phi3.5-MoE @ v5e-pod-256, the Fig. 10 workload shape)."""
+    cfg = C.get("phi3.5-moe-42b")
+    cluster = CLUSTERS["v5e-pod-256"]
+    kw = dict(batch=16, l_in=1024, l_out=256)
+    base = analyzer.select(cfg, cluster, **kw)
+    ovl = analyzer.select(cfg, cluster,
+                          ep_overlap=cm.EpOverlap(chunks=4), **kw)
+    assert base.best.strategy != ovl.best.strategy
+    # direction: hiding exchange time behind expert compute stops
+    # penalizing configs whose A2A the pipeline can hide — the overlapped
+    # pick keeps more compute per EP rank (lower or equal EP degree)
+    assert ovl.best.strategy.moe_ep <= base.best.strategy.moe_ep
+
+
+def test_kv_page_autotune_entry_reaches_auto_kv(monkeypatch):
+    """A measured ``kv_page`` registration (kernel_bench sweep) must win
+    over the analytic page constant — and carry measured provenance."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", "")   # process-local cache
+    autotune.clear_cache()
+    cfg = C.get_reduced("smollm-360m")
+    kw = dict(max_batch=4, max_len=256, l_in=96, l_out=32)
+    kv, prov = R.auto_kv(cfg, **kw)
+    assert kv.page_size == R.KV_PAGE_SIZE
+    assert f"autotune:default({R.KV_PAGE_SIZE})" in prov
+    autotune.register("kv_page", R.kv_page_key(cfg, 256), "bfloat16",
+                      {"page": 64})
+    kv, prov = R.auto_kv(cfg, **kw)
+    assert kv.page_size == 64 and "autotune:measured" in prov
+    # a tuned page that does not divide max_len degrades, never orphans
+    autotune.register("kv_page", R.kv_page_key(cfg, 256), "bfloat16",
+                      {"page": 48})
+    kv, _ = R.auto_kv(cfg, **kw)
+    assert 256 % kv.page_size == 0
+    # explicit page beats the registration
+    kv, prov = R.auto_kv(cfg, page_size=32, **kw)
+    assert kv.page_size == 32 and "page 32 from explicit" in prov
+    autotune.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# ServeSpec surface
+# ---------------------------------------------------------------------------
+
+def test_serve_spec_ep_overlap_validation():
+    for bad in ("weird", 0, -3, True):
+        with pytest.raises(ValueError):
+            ServeSpec(ep_overlap=bad)
+    for ok in ("auto", "off", 1, 4, cm.EpOverlap(chunks=2)):
+        ServeSpec(ep_overlap=ok)
+
+
+def test_serve_spec_resolves_ep_overlap_to_plan_and_meta():
+    cfg = C.get("phi3.5-moe-42b")
+    r = ServeSpec(arch="phi3.5-moe-42b", max_batch=4, max_len=64,
+                  chunk=8, prompt_len=8, max_new_tokens=4,
+                  ep_overlap=2).resolve(cfg)
+    assert r.ep_overlap == cm.EpOverlap(chunks=2)
+    assert r.plan.ep_overlap == r.ep_overlap
+    assert r.moe_ep >= 1 and r.moe_tp >= 1
+    assert "C=2" in r.describe()
+    meta = r.as_meta()
+    assert meta["resolved"]["ep_overlap"] == cm.EpOverlap(chunks=2).describe()
+    assert meta["provenance"]["ep_overlap"] == "explicit(C=2, auto cap)"
+    off = ServeSpec(arch="phi3.5-moe-42b", max_batch=4, max_len=64,
+                    chunk=8, prompt_len=8, max_new_tokens=4,
+                    ep_overlap="off").resolve(cfg)
+    assert off.ep_overlap is None and off.plan.ep_overlap is None
+    assert off.as_meta()["resolved"]["ep_overlap"] == "off"
+
+
+def test_engine_streams_bit_identical_across_ep_overlap():
+    """Engine-level oracle: the resolved ``ep_overlap`` knob must not
+    change a single sampled token on this host (the single-device engine
+    runs the monolithic local dispatch either way; the knob only changes
+    the sharded plan + the pricing)."""
+    cfg = C.get_reduced("phi3.5-moe-42b")
+    params = M.init_params(KEY, cfg, jnp.float32)
+    outs = {}
+    for mode in ("off", 2):
+        spec = ServeSpec(arch="phi3.5-moe-42b", max_batch=2, max_len=64,
+                         chunk=4, prompt_len=8, max_new_tokens=6,
+                         ep_overlap=mode).resolve(cfg)
+        llm = LLM.from_spec(spec, cfg=cfg, params=params)
+        outs[mode] = llm.generate(
+            [np.arange(7, dtype=np.int32), np.arange(5, dtype=np.int32)],
+            max_new_tokens=6)
+    assert outs["off"] == outs[2]
+
+
+def test_forward_expert_stats_counts_and_identity():
+    cfg = C.get_reduced("phi3.5-moe-42b")
+    params = M.init_params(KEY, cfg, jnp.float32)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    base = M.forward(params, cfg, tokens=tokens)
+    out = M.forward(params, cfg, tokens=tokens, expert_stats=True)
+    assert base.expert_counts is None
+    counts = np.asarray(out.expert_counts)
+    assert counts.shape == (cfg.n_experts,)
+    n_moe_layers = cfg.n_layers - cfg.first_dense_layers
+    assert counts.sum() == 2 * 16 * cfg.top_k * n_moe_layers
+    assert jnp.array_equal(base.logits, out.logits)
+    # dense models: stats stay a zero vector, logits untouched
+    dense = C.get_reduced("smollm-360m")
+    dp = M.init_params(KEY, dense, jnp.float32)
+    dt = jax.random.randint(KEY, (1, 8), 0, dense.vocab_size)
+    dout = M.forward(dp, dense, tokens=dt, expert_stats=True)
+    assert np.asarray(dout.expert_counts).sum() == 0

@@ -344,4 +344,6 @@ def test_metrics_row_includes_robustness_counters(smollm):
     assert set(rb) == {"n_shed", "n_preempted", "n_cancelled",
                        "n_deadline_miss", "n_faults", "deadline_miss_p99",
                        "kv_occupancy", "n_prefix_hits", "prefix_hit_tokens",
-                       "n_evictions"}
+                       "n_evictions", "ep_rank_max_tokens",
+                       "ep_rank_mean_tokens", "a2a_bytes_moved",
+                       "a2a_bytes_worst"}

@@ -32,3 +32,10 @@ def test_moe_equivalence_across_plans():
 def test_sharded_model_matches_unsharded():
     out = _run("run_sharded_model.py")
     assert "SHARDED_MODEL_OK" in out
+
+
+def test_overlap_exchange_bitwise_equivalence():
+    """Micro-chunked count-bounded EP exchange == monolithic, bit for bit,
+    incl. the overflow fallback under adversarial routing skew."""
+    out = _run("run_overlap_equivalence.py")
+    assert "OVERLAP_EQUIVALENCE_OK" in out
