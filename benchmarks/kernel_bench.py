@@ -175,6 +175,61 @@ def run() -> list:
                  f"registered for key {key_shape} ({kv_cfg.name}) -> "
                  "auto_kv resolves it as autotune:measured"))
 
+    # ---- resolver-constants calibration (the per-host "resolver" tune) --
+    # measures the two host-dependent constants the ServeSpec resolver
+    # otherwise takes as analytic defaults (resolve.AUTO_BATCH_CAP /
+    # resolve.ITL_SLACK): the engine-slot sanity cap is the largest batch
+    # at which a single-row decode step still amortizes on THIS host
+    # (per-step throughput keeps improving), and the auto-chunk slack is
+    # the ITL inflation a mid-size prefill chunk actually costs a decode
+    # step here.  Registered under resolve.resolver_key() so the next
+    # resolve on this machine reports both as ``autotune:measured``.
+    from repro.core.partitioner import NULL_PLAN
+    from repro.models.model import forward, init_params
+    from repro.serving.kv_cache import make_batched_cache
+
+    r_cfg = C.get_reduced("smollm-360m")
+    r_params = init_params(jax.random.PRNGKey(0), r_cfg, jnp.float32)
+    chunk, r_len, r_off = 16, 128, 64
+
+    def _step(params, toks, q, cache):
+        return forward(params, r_cfg, NULL_PLAN, tokens=toks, cache=cache,
+                       q_lens=q, last_only=True).logits
+
+    def _step_us(bsz, q_lens):
+        cache = make_batched_cache(r_cfg, bsz, r_len, jnp.float32)
+        cache = {**cache, "length": jnp.full((bsz,), r_off, jnp.int32)}
+        toks = jnp.zeros((bsz, chunk), jnp.int32)
+        return time_fn(jax.jit(_step), r_params, toks,
+                       jnp.asarray(q_lens, jnp.int32), cache)
+
+    cap, prev_tok_us = 2, float("inf")
+    for bsz in (2, 4, 8, 16):
+        us = _step_us(bsz, [1] * bsz)
+        tok_us = us / bsz
+        rows.append((f"kernel/resolver/decode_b{bsz}", us,
+                     f"{tok_us:.1f}us/token (unified decode step)"))
+        if tok_us < 0.9 * prev_tok_us:     # batching still amortizes
+            cap, prev_tok_us = bsz, tok_us
+        else:
+            break
+
+    t_dec = _step_us(4, [1, 1, 1, 1])
+    t_mix = _step_us(4, [chunk, 1, 1, 1])
+    infl = max(t_mix / max(t_dec, 1e-9) - 1.0, 0.0)
+    pct = int(min(max(round(infl * 100), 25), 100))
+    rows.append((f"kernel/resolver/itl_inflation_chunk{chunk}",
+                 infl * 100,
+                 f"mixed {t_mix:.0f}us vs decode {t_dec:.0f}us -> "
+                 f"slack {pct}%"))
+
+    autotune.register("resolver", R.resolver_key(), "host",
+                      {"batch_cap": cap, "itl_slack_pct": pct})
+    rows.append(("kernel/resolver/tuned", float(cap),
+                 f"batch_cap={cap} itl_slack_pct={pct} registered for key "
+                 f"{R.resolver_key()} -> auto_max_batch/auto_chunk resolve "
+                 "them as autotune:measured"))
+
     rows.append(("kernel/autotune_cache_entries", float(
         len(autotune.cache_info())), "shape-keyed block selections"))
     return rows

@@ -20,7 +20,7 @@ import traceback
 
 from benchmarks import (comm_overhead, dp_ep_tradeoff, kernel_bench,
                         overlap_ablation, perf_eval, roofline, serve_micro,
-                        table1)
+                        spec_decode, table1)
 
 SUITES = {
     "fig3": comm_overhead,       # AR/A2A overhead vs degree & size
@@ -46,6 +46,10 @@ QUICK = {
     # micro-chunked EP-exchange gate: chunked price <= monolithic,
     # count-bounded rows < worst-case, analyzer flip (docs/dispatch.md)
     "overlap": overlap_ablation.run_quick,
+    # speculative-decoding gate: accepted streams bit-identical to the
+    # non-speculative greedy run, acceptance counters nonzero, committed
+    # tokens/slot-step > 1.0 on a decode-heavy workload (docs/serving.md)
+    "spec": spec_decode.run_quick,
 }
 
 

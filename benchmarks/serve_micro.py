@@ -50,7 +50,11 @@ ROBUSTNESS_KEYS = ("n_shed", "n_preempted", "n_cancelled",
                    # expert-load skew + EP-exchange byte ledger (MoE;
                    # dense archs report zeros — docs/dispatch.md)
                    "ep_rank_max_tokens", "ep_rank_mean_tokens",
-                   "a2a_bytes_moved", "a2a_bytes_worst")
+                   "a2a_bytes_moved", "a2a_bytes_worst",
+                   # speculative-decoding counters (docs/serving.md);
+                   # all-zero when speculation="off" but must be PRESENT
+                   "n_spec_steps", "n_spec_drafted", "n_spec_accepted",
+                   "spec_accept_rate", "spec_tokens_per_step")
 
 
 def run_quick() -> list:

@@ -1,0 +1,128 @@
+"""Speculative-decoding quick suite (``benchmarks.run --quick`` -> spec).
+
+Decode-heavy synthetic workload (short prompts, long generations — the
+regime speculation exists for) through the SAME unified engine twice:
+``speculation="off"`` and ``SpeculationConfig(k=4, draft="self")``.  The
+self-draft is the greedy acceptance-1.0 oracle, so the suite gates the
+three properties docs/serving.md promises:
+
+  (a) the accepted token streams are BIT-IDENTICAL to the non-speculative
+      greedy run (speculation must never change output);
+  (b) the acceptance counters (``n_spec_steps``/``n_spec_drafted``/
+      ``n_spec_accepted``) surface in ``ServeMetrics`` and are nonzero —
+      the observability path cannot silently rot;
+  (c) committed tokens per speculating slot-step > 1.0 — the mechanism
+      actually amortizes steps, not just avoids breaking them.
+
+An ``NGramDraft`` row rides along bit-exactness-gated only (its
+acceptance is workload-dependent; random-token prompts rarely match), and
+the artifact meta records the resolver provenance for both engines plus a
+``speculation="auto"`` resolution demo so ``BENCH_spec.json`` says WHY a
+draft length was (or wasn't) chosen on this host.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.models.model import init_params
+from repro.serving.api import LLM, ServeSpec, SpeculationConfig
+
+ARCH = "smollm-360m"
+SPEC_COUNTER_KEYS = ("n_spec_steps", "n_spec_drafted", "n_spec_accepted",
+                     "spec_accept_rate", "spec_tokens_per_step")
+
+
+def _workload(cfg, n=6, prompt_len=8, max_new=24, seed=0):
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=prompt_len)
+                    .astype(np.int32),
+                    max_new_tokens=max_new, arrival=0.0)
+            for i in range(n)]
+
+
+def _serve(cfg, params, speculation, *, max_new=24):
+    resolved = ServeSpec(
+        arch=ARCH, chunk=8, max_batch=4, max_len=64, prompt_len=8,
+        max_new_tokens=max_new, speculation=speculation).resolve()
+    llm = LLM.from_spec(resolved, cfg=cfg, params=params)
+    llm.generate([np.zeros(4, np.int32)], max_new_tokens=2)  # compile
+    t0 = time.perf_counter()
+    sched = llm.serve(_workload(cfg, max_new=max_new))
+    wall = time.perf_counter() - t0
+    streams = {r.rid: list(r.out_tokens) for r in sched.finished}
+    return resolved, sched.metrics(), streams, wall
+
+
+def run_quick():
+    cfg = C.get_reduced(ARCH)
+    params = init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rows, meta = [], {"serve_spec": {}}
+
+    base_r, base_m, base_streams, base_wall = _serve(cfg, params, "off")
+    meta["serve_spec"]["off"] = base_r.as_meta()
+    if base_m.n_spec_steps != 0:
+        raise RuntimeError(
+            f"speculation='off' reported spec steps: {base_m.robustness()}")
+
+    for label, speculation, gated in (
+            ("self_k4", SpeculationConfig(k=4, draft="self"), True),
+            ("ngram_k4", SpeculationConfig(k=4, draft="ngram"), False)):
+        resolved, m, streams, wall = _serve(cfg, params, speculation)
+        meta["serve_spec"][label] = resolved.as_meta()
+        rb = m.robustness()
+        missing = [k for k in SPEC_COUNTER_KEYS if k not in rb]
+        if missing:
+            raise RuntimeError(
+                f"spec gate ({label}): acceptance counters {missing} "
+                f"missing from ServeMetrics.robustness()")
+        if streams != base_streams:
+            raise RuntimeError(
+                f"spec gate ({label}): accepted streams diverged from the "
+                f"non-speculative greedy run\n  off : {base_streams}\n"
+                f"  spec: {streams}")
+        if gated:
+            if m.n_spec_steps <= 0 or m.n_spec_accepted <= 0:
+                raise RuntimeError(
+                    f"spec gate ({label}): acceptance counters stayed zero "
+                    f"on a decode-heavy workload ({rb})")
+            if m.spec_tokens_per_step <= 1.0:
+                raise RuntimeError(
+                    f"spec gate ({label}): {m.spec_tokens_per_step:.2f} "
+                    "committed tokens/slot-step is not > 1.0")
+        rows.append((
+            f"spec/{ARCH}/{label}/tokens_per_step",
+            m.spec_tokens_per_step,
+            f"accept={m.spec_accept_rate:.2f} "
+            f"drafted={m.n_spec_drafted} steps={m.n_spec_steps} "
+            f"wall x{wall / max(base_wall, 1e-9):.2f} vs off "
+            "(bit-identical streams)"))
+
+    # auto-resolution demo: the cost model prices draft lengths against
+    # the verify step and explains its pick in the provenance report
+    auto_r = ServeSpec(arch=ARCH, chunk=8, max_batch=4, max_len=64,
+                       prompt_len=8, max_new_tokens=24,
+                       speculation="auto").resolve()
+    meta["serve_spec"]["auto"] = auto_r.as_meta()
+    prov = auto_r.provenance.get("speculation", "?")
+    if not prov.startswith(("auto:", "explicit")):
+        raise RuntimeError(
+            f"speculation='auto' resolution has no provenance: {prov!r}")
+    rows.append((f"spec/{ARCH}/auto/k",
+                 float(auto_r.speculation.k if auto_r.speculation else 0),
+                 prov))
+    return {"rows": rows, "meta": meta}
+
+
+if __name__ == "__main__":
+    out = run_quick()
+    for name, v, derived in out["rows"]:
+        print(f"{name},{v:.1f},{derived}")

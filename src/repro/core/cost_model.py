@@ -558,6 +558,33 @@ def indicators(model: ModelConfig, strat: Strategy, cluster: ClusterSpec, *,
 
 
 # ---------------------------------------------------------------------------
+# Speculative decoding: expected committed tokens per verify step
+# ---------------------------------------------------------------------------
+
+def spec_tokens_per_step(k: int, accept: float) -> float:
+    """E[committed tokens] of one k-draft greedy-verify step.
+
+    Acceptance is modeled i.i.d. per draft position with rate ``accept``:
+    the step commits 1 + X tokens where X ~ min(Geometric misses, k), so
+    E = sum_{j=0..k} accept^j = (1 - accept^(k+1)) / (1 - accept).  k=0 is
+    plain decode (exactly 1 token); accept=1 commits all k+1 rows."""
+    if k <= 0:
+        return 1.0
+    a = min(max(accept, 0.0), 1.0)
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
+def speculation_itl(t_verify: float, t_draft: float, k: int,
+                    accept: float) -> float:
+    """Effective inter-token latency of speculative decode: one verify step
+    (Eq. 4-6 at seq_len = 1+k) plus k draft proposals, amortized over the
+    expected committed tokens.  With k=0 this is just ``t_verify``."""
+    return (t_verify + max(k, 0) * t_draft) / spec_tokens_per_step(k, accept)
+
+
+# ---------------------------------------------------------------------------
 # Eq. 8: memory constraint
 # ---------------------------------------------------------------------------
 
@@ -599,4 +626,5 @@ __all__ = [
     "compute_latency", "comm_latency", "lambda_pure_ep",
     "service_latency", "queuing_delay", "indicators",
     "memory_per_device", "fits_memory",
+    "spec_tokens_per_step", "speculation_itl",
 ]

@@ -35,6 +35,17 @@ instead of user homework:
                 EP exchange (models.moe): chunk count picked by pricing
                 the overlapped schedule (moe_overlap_lambda) per candidate
                 C, count-bounded buffers on by default
+  speculation   draft length k for speculative decoding on the unified
+                step: candidates priced by the Eq. 4-6 verify-step time
+                against the expected committed tokens/step at the
+                acceptance prior (cost_model.spec_tokens_per_step); the
+                engine's measured acceptance EMA gates it at runtime
+
+The ``AUTO_BATCH_CAP`` / ``ITL_SLACK`` constants are only analytic
+defaults: ``resolved_batch_cap`` / ``resolved_itl_slack`` consult the
+per-host "resolver" autotune entry first (kernels.autotune — populated by
+the benchmarks/kernel_bench.py calibration pass), so a measured run on
+this machine overrides them with ``autotune:measured`` provenance.
 
 Everything here is deterministic: same (spec, model, cluster) in, same
 resolved knobs out.  No serving imports — ``serving.api`` composes these
@@ -70,6 +81,37 @@ LEN_GRANULE = 64
 # degrades to bounded latency instead of unbounded queueing
 OVERLOAD_WAIT_BOUND_S = 30.0
 _SHED_POLICIES = ("reject-newest", "deadline-first")
+
+
+# ---------------------------------------------------------------------------
+# Measured resolver constants (the "resolver" autotune entry)
+# ---------------------------------------------------------------------------
+
+def resolver_key() -> tuple:
+    """Autotune cache-key shape for the per-host "resolver" entry.  The
+    calibration (benchmarks/kernel_bench.py) and these lookups MUST build
+    the same key or the measured constants never reach the resolver; the
+    autotune cache file is already per-host, so the key is empty."""
+    return ()
+
+
+def resolved_batch_cap() -> tuple[int, str]:
+    """(engine-slot sanity cap, provenance): the measured "resolver"
+    autotune entry if a calibration ran on this host, else the
+    ``AUTO_BATCH_CAP`` analytic default."""
+    tuned = autotune.lookup("resolver", resolver_key(), "host")
+    if tuned and int(tuned.get("batch_cap", 0)) > 0:
+        return int(tuned["batch_cap"]), "autotune:measured"
+    return AUTO_BATCH_CAP, f"autotune:default({AUTO_BATCH_CAP})"
+
+
+def resolved_itl_slack() -> tuple[float, str]:
+    """(auto-chunk ITL-inflation bound, provenance): measured calibration
+    first (persisted as an integer percentage), ``ITL_SLACK`` default."""
+    tuned = autotune.lookup("resolver", resolver_key(), "host")
+    if tuned and int(tuned.get("itl_slack_pct", 0)) > 0:
+        return int(tuned["itl_slack_pct"]) / 100.0, "autotune:measured"
+    return ITL_SLACK, f"autotune:default({ITL_SLACK:.0%})"
 
 
 def resolve_cluster(cluster: Union[str, ClusterSpec, None] = None, *,
@@ -115,14 +157,21 @@ def plan_name_for(cfg: ModelConfig, strat: cm.Strategy,
 
 def auto_max_batch(cfg: ModelConfig, strat: cm.Strategy,
                    cluster: ClusterSpec, *, l_in: int, l_out: int,
-                   cap: int = AUTO_BATCH_CAP) -> tuple[int, str]:
-    """Largest power-of-two batch under the Eq. 8 memory constraint."""
+                   cap: Union[int, None] = None) -> tuple[int, str]:
+    """Largest power-of-two batch under the Eq. 8 memory constraint.
+
+    The sanity cap defaults to the measured per-host calibration
+    (``resolved_batch_cap``), falling back to ``AUTO_BATCH_CAP``."""
+    if cap is None:
+        cap, cap_src = resolved_batch_cap()
+    else:
+        cap_src = "explicit"
     b = 1
     while b * 2 <= cap and cm.memory_per_device(
             cfg, strat, batch=b * 2, seq_len=l_in + l_out) < cluster.hbm_bytes:
         b *= 2
     return b, (f"auto:cost-model(Eq. 8 memory on {cluster.name}, "
-               f"cap {cap})")
+               f"cap {cap} [{cap_src}])")
 
 
 def token_times(cfg: ModelConfig, strat: cm.Strategy, cluster: ClusterSpec,
@@ -138,14 +187,20 @@ def token_times(cfg: ModelConfig, strat: cm.Strategy, cluster: ClusterSpec,
 
 def auto_chunk(cfg: ModelConfig, strat: cm.Strategy, cluster: ClusterSpec, *,
                batch: int, l_in: int, l_out: int,
-               slack: float = ITL_SLACK) -> tuple[int, str]:
+               slack: Union[float, None] = None) -> tuple[int, str]:
     """Largest chunk whose prefill tokens inflate a decode step <= slack.
 
     A prefill chunk of c tokens co-scheduled with the decode batch adds
     ~``c * t_prefill_token`` to the unified step; Sarathi's rule bounds the
     resulting ITL inflation.  Candidates above the workload's prompt length
-    are pointless (the (B, chunk) buffer is static) and skipped.
+    are pointless (the (B, chunk) buffer is static) and skipped.  The slack
+    bound defaults to the measured per-host calibration
+    (``resolved_itl_slack``), falling back to ``ITL_SLACK``.
     """
+    if slack is None:
+        slack, slack_src = resolved_itl_slack()
+    else:
+        slack_src = "explicit"
     t_tok, t_dec = token_times(cfg, strat, cluster, batch=batch,
                                l_in=l_in, l_out=l_out)
     chunk = CHUNK_CANDIDATES[0]
@@ -155,15 +210,25 @@ def auto_chunk(cfg: ModelConfig, strat: cm.Strategy, cluster: ClusterSpec, *,
         if c * t_tok <= slack * t_dec:
             chunk = c
     return chunk, (f"auto:cost-model({chunk} prefill tok <= "
-                   f"{slack:.0%} of a {t_dec*1e3:.2f}ms decode step)")
+                   f"{slack:.0%} [{slack_src}] of a "
+                   f"{t_dec*1e3:.2f}ms decode step)")
 
 
-def auto_token_budget(max_batch: int, chunk: int) -> tuple[int, str]:
+def auto_token_budget(max_batch: int, chunk: int,
+                      spec_k: int = 0) -> tuple[int, str]:
     """Decode-first budget: every slot's decode token + ONE prefill chunk
     per unified iteration (the cost-model-bounded prefill rate), replacing
-    the B*chunk default that let every slot prefill at once."""
-    return max_batch + chunk, (f"auto:cost-model({max_batch} decode tokens "
-                               f"+ one {chunk}-token prefill chunk)")
+    the B*chunk default that let every slot prefill at once.  With
+    speculative decoding each decode slot may ride k extra draft rows, so
+    the budget grows to ``max_batch * (1 + k)`` decode-side rows — the
+    prefill chunk stays funded even when every slot speculates."""
+    per_slot = 1 + max(int(spec_k), 0)
+    budget = max_batch * per_slot + chunk
+    if spec_k <= 0:
+        return budget, (f"auto:cost-model({max_batch} decode tokens "
+                        f"+ one {chunk}-token prefill chunk)")
+    return budget, (f"auto:cost-model({max_batch} slots x (1+k={spec_k}) "
+                    f"verify rows + one {chunk}-token prefill chunk)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -341,6 +406,142 @@ def auto_kv(cfg: ModelConfig, *, max_batch: int, max_len: int, l_in: int,
                 f"{dense_pages} dense; page {ps} from {ps_src})")
 
 
+# auto speculation: candidate draft lengths priced by the Eq. 4-6 verify
+# step (seq_len = 1+k) against the expected committed tokens/step at the
+# acceptance prior; the draft's own cost is modeled as a fraction of a
+# decode step per proposed token (an n-gram draft is ~free, a reduced-model
+# draft is not — the fraction is deliberately conservative).
+SPEC_K_CANDIDATES = (0, 1, 2, 4)
+SPEC_ACCEPT_PRIOR = 0.7
+SPEC_DRAFT_COST_FRAC = 0.05
+_DRAFT_SOURCES = ("ngram", "self", "mtp")
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeculationConfig:
+    """Speculative-decoding policy: how many tokens to draft and from what.
+
+    ``k`` draft tokens ride each speculating slot's verify row block
+    (q_len = k+1 on the unified step).  ``draft`` names the source:
+    "ngram" (prompt-suffix matching, free), "self" (the serving model
+    drafts for itself — an acceptance-1.0 oracle for tests), "mtp" (the
+    DeepSeek-style multi-token-prediction head stub), or any config name
+    from ``repro.configs`` run reduced as a draft model.  The engine
+    pauses speculation when its measured acceptance EMA (smoothing
+    ``ema_alpha``) falls below ``min_accept``, re-probing every
+    ``probe_every`` steps so a workload shift can re-enable it.
+    """
+
+    k: int
+    draft: str = "ngram"
+    ngram: int = 3                    # n-gram draft: match length + 1
+    min_accept: float = 0.25          # EMA gate: below this, stop drafting
+    ema_alpha: float = 0.1            # acceptance EMA smoothing
+    probe_every: int = 16             # re-probe cadence while gated off
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"speculation k must be >= 1, got {self.k}")
+        if self.ngram < 2:
+            raise ValueError(f"ngram must be >= 2, got {self.ngram}")
+        if not 0.0 <= self.min_accept <= 1.0:
+            raise ValueError(f"min_accept must be in [0, 1], "
+                             f"got {self.min_accept}")
+        if not 0.0 < self.ema_alpha <= 1.0:
+            raise ValueError(f"ema_alpha must be in (0, 1], "
+                             f"got {self.ema_alpha}")
+        if self.probe_every < 1:
+            raise ValueError(f"probe_every must be >= 1, "
+                             f"got {self.probe_every}")
+
+    def describe(self) -> str:
+        return (f"k={self.k} draft={self.draft} "
+                f"gate>={self.min_accept:g}(ema a={self.ema_alpha:g})")
+
+
+def auto_speculation(cfg: ModelConfig, strat: cm.Strategy,
+                     cluster: ClusterSpec, *, batch: int, l_in: int,
+                     l_out: int, chunk: int, temperature: float = 0.0,
+                     unified_ok: bool = True,
+                     value: Union[str, int, SpeculationConfig, None] = AUTO,
+                     accept_ema: Union[float, None] = None,
+                     ) -> tuple[Union[SpeculationConfig, None], str]:
+    """Resolve the ``speculation`` knob: (SpeculationConfig or None, why).
+
+    ``"off"``/None disables drafting.  An int pins k (clamped to chunk-1 —
+    the verify rows must fit one slot's chunk).  A SpeculationConfig passes
+    through (k clamped the same way).  ``"auto"`` prices each candidate k:
+    the verify step costs the Eq. 4-6 latency of a seq_len = 1+k step plus
+    k draft proposals at ``SPEC_DRAFT_COST_FRAC`` of a decode step, and
+    commits ``cm.spec_tokens_per_step(k, a)`` tokens in expectation at
+    acceptance ``a`` (the engine's measured EMA when given, else the
+    ``SPEC_ACCEPT_PRIOR``).  Greedy-only: sampling (temperature > 0) and
+    the legacy blocking path resolve to off — or raise when speculation
+    was explicitly requested.
+    """
+    if value is None or value == "off":
+        return None, "explicit:off(non-speculative decode)"
+    explicit = value != AUTO
+    if temperature > 0.0:
+        if explicit:
+            raise ValueError("speculation requires greedy decoding "
+                             f"(temperature=0), got {temperature}")
+        return None, "auto:off(sampling — greedy verify only)"
+    if not unified_ok:
+        if explicit:
+            raise ValueError("speculation requires the unified ragged step "
+                             "(model family unsupported)")
+        return None, "auto:off(legacy blocking path has no ragged verify)"
+    k_cap = max(int(chunk) - 1, 0)
+    if k_cap < 1:
+        if explicit:
+            raise ValueError(f"speculation needs chunk >= 2 for k+1 verify "
+                             f"rows, got chunk={chunk}")
+        return None, f"auto:off(chunk={chunk} leaves no draft rows)"
+    if isinstance(value, SpeculationConfig):
+        sc = value if value.k <= k_cap else dataclasses.replace(
+            value, k=k_cap)
+        note = "" if value.k <= k_cap else f", k clamped to chunk-1={k_cap}"
+        return sc, f"explicit({sc.describe()}{note})"
+    if explicit:
+        k = int(value)
+        if k < 1:
+            raise ValueError(f"speculation k must be >= 1, got {k}")
+        sc = SpeculationConfig(k=min(k, k_cap))
+        note = "" if k <= k_cap else f", clamped to chunk-1={k_cap}"
+        return sc, f"explicit(k={sc.k}{note})"
+
+    a = accept_ema if accept_ema is not None else SPEC_ACCEPT_PRIOR
+    kv = l_in + l_out
+
+    def itl_eff(k: int) -> float:
+        t_ver = cm.service_latency(
+            cfg, strat, cm.Workload(batch=batch, seq_len=1 + k, kv_len=kv),
+            cluster)
+        t_dec = cm.service_latency(
+            cfg, strat, cm.Workload(batch=batch, seq_len=1, kv_len=kv),
+            cluster)
+        return cm.speculation_itl(t_ver, SPEC_DRAFT_COST_FRAC * t_dec, k, a)
+
+    best_k, best_t = 0, None
+    for k in SPEC_K_CANDIDATES:
+        if k > k_cap:
+            continue
+        t = itl_eff(k)
+        if best_t is None or t < best_t:
+            best_k, best_t = k, t
+    base_t = itl_eff(0)
+    if best_k < 1:
+        return None, (f"auto:cost-model(k=0 wins at accept={a:.2f} — the "
+                      f"1+k verify step outprices the amortized exchange "
+                      f"on {cluster.name})")
+    sc = SpeculationConfig(k=best_k)
+    exp_tok = cm.spec_tokens_per_step(best_k, a)
+    return sc, (f"auto:cost-model(k={best_k}: E[{exp_tok:.2f} tok/step] at "
+                f"accept={a:.2f} -> {base_t / best_t:.2f}x ITL vs k=0 on "
+                f"{cluster.name}; draft={sc.draft})")
+
+
 # auto ep_overlap: candidate micro-chunk counts priced by the overlapped
 # schedule estimate (per-chunk alpha overhead bounds the useful C)
 EP_OVERLAP_CANDIDATES = (1, 2, 4, 8)
@@ -401,8 +602,11 @@ def auto_ep_overlap(cfg: ModelConfig, strat: cm.Strategy,
 
 __all__ = ["AUTO", "ITL_SLACK", "CHUNK_CANDIDATES", "AUTO_BATCH_CAP",
            "LEN_GRANULE", "OVERLOAD_WAIT_BOUND_S", "KV_PAGE_SIZE",
-           "EP_OVERLAP_CANDIDATES", "OverloadPolicy", "KVConfig",
-           "kv_bytes_per_token", "kv_page_key", "auto_kv", "auto_ep_overlap",
+           "EP_OVERLAP_CANDIDATES", "SPEC_K_CANDIDATES", "SPEC_ACCEPT_PRIOR",
+           "SPEC_DRAFT_COST_FRAC", "OverloadPolicy", "KVConfig",
+           "SpeculationConfig", "kv_bytes_per_token", "kv_page_key",
+           "auto_kv", "auto_ep_overlap", "auto_speculation",
            "resolve_cluster", "plan_name_for", "auto_max_batch",
            "token_times", "auto_chunk", "auto_token_budget", "auto_overload",
-           "auto_max_len"]
+           "auto_max_len", "resolver_key", "resolved_batch_cap",
+           "resolved_itl_slack"]

@@ -61,7 +61,10 @@ _CACHE: dict[KernelKey, dict] = {}
 # defaults differ from flash_chunk's) — v2 files invalidated wholesale.
 # v4: added "kv_page" ({page} dicts — the paged-KV page size feeds the
 # flash_chunk_paged tile constraint) — v3 files invalidated wholesale.
-CACHE_VERSION = 4
+# v5: added "resolver" ({batch_cap, itl_slack_pct} — the per-host serving
+# resolver constants measured by the kernel_bench calibration) — v4 files
+# invalidated wholesale.
+CACHE_VERSION = 5
 _persist_loaded = False
 
 
@@ -276,6 +279,13 @@ def _default_blocks(op: str, shape: tuple, dtype: str) -> dict:
         if page % bs:                 # odd page size: one tile per page
             bs = page
         return {"bq": min(bq, 128), "bs": bs}
+    if op == "resolver":
+        # key is (): per-host serving-resolver constants (the cache file is
+        # already per-host).  These are the ANALYTIC defaults mirrored from
+        # core.resolve — resolved_batch_cap/resolved_itl_slack use lookup()
+        # (not select_blocks), so only a measured kernel_bench calibration
+        # ever registers this entry; the dict here just keeps the op known.
+        return {"batch_cap": 8, "itl_slack_pct": 50}
     raise KeyError(op)
 
 

@@ -24,7 +24,7 @@ import argparse
 
 import repro.configs as C
 from repro.core.topology import CLUSTERS
-from repro.serving.api import AUTO, LLM, ServeSpec
+from repro.serving.api import AUTO, LLM, ServeSpec, SpeculationConfig
 from repro.serving.scheduler import synthetic_workload
 
 
@@ -93,12 +93,27 @@ def parse_args(argv=None) -> argparse.Namespace:
                          "cost model picks the chunk count (count-bounded "
                          "A2A buffers on), off = monolithic worst-case "
                          "exchange, an int pins the chunk count")
+    ap.add_argument("--speculation", type=_ep_overlap_arg, default="off",
+                    metavar="auto|off|K",
+                    help="speculative decoding on the unified step: off "
+                         "(default), auto = the cost model prices draft "
+                         "lengths against the verify step and picks k (or "
+                         "off), an int pins k draft tokens per slot-step "
+                         "(greedy sampling only; bit-exact either way)")
+    ap.add_argument("--draft", default="ngram",
+                    help="draft source for an explicit --speculation K: "
+                         "ngram (zero-cost suffix matching), self (the "
+                         "serving model drafting for itself), or a reduced "
+                         "config name; auto always picks ngram")
     ap.add_argument("--seed", type=int, default=0)
     return ap.parse_args(argv)
 
 
 def build_spec(args: argparse.Namespace) -> ServeSpec:
     """CLI flags -> the declarative spec (auto flags stay auto)."""
+    speculation = args.speculation
+    if isinstance(speculation, int):   # explicit k honors --draft
+        speculation = SpeculationConfig(k=speculation, draft=args.draft)
     return ServeSpec(
         arch=args.arch, reduced=args.reduced, cluster=args.cluster,
         strategy=args.strategy, kernels=args.kernels,
@@ -107,7 +122,8 @@ def build_spec(args: argparse.Namespace) -> ServeSpec:
         max_batch=args.max_batch, max_len=args.max_len,
         prompt_len=args.prompt_len, max_new_tokens=args.max_new,
         arrival_rate=args.rate, objective=args.objective,
-        ep_overlap=args.ep_overlap, seed=args.seed)
+        ep_overlap=args.ep_overlap, speculation=speculation,
+        seed=args.seed)
 
 
 def main(argv=None):

@@ -533,7 +533,8 @@ class Output:
 def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
             tokens=None, embeds=None, frames=None, positions=None,
             cache=None, remat: bool = False, q_lens=None,
-            last_only: bool = False, expert_stats: bool = False) -> Output:
+            last_only: bool = False, logit_rows=None,
+            expert_stats: bool = False) -> Output:
     """Unified forward.
 
     tokens  (b, s_text) int32 — text token ids (None for pure-embed input)
@@ -561,11 +562,21 @@ def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
                                 the serving hot path, which would otherwise
                                 pay the vocab matmul on every pad row of the
                                 (b, chunk) buffer.
+    logit_rows  (b, n) int32    with last_only: override the per-slot row
+                                selection — the LM head is applied to these
+                                row indices instead of just q_lens[i] - 1,
+                                returning (b, n, v) logits.  Speculative
+                                verify extracts one logit row per draft
+                                position this way without paying the vocab
+                                matmul on the padding rows.
     """
     if q_lens is not None and cache is None:
         raise ValueError("q_lens (unified mixed step) requires a cache")
     if last_only and q_lens is None:
         raise ValueError("last_only requires q_lens (the unified mixed step)")
+    if logit_rows is not None and not last_only:
+        raise ValueError("logit_rows requires last_only (it overrides the "
+                         "per-slot head-row selection)")
     length = None if cache is None else cache["length"]
     block_tables = None if cache is None else cache.get("block_tables")
     if block_tables is not None and q_lens is None:
@@ -652,9 +663,10 @@ def forward(params, cfg: ModelConfig, plan: ShardingPlan = NULL_PLAN, *,
                 body, (x, aux_total), (p_g, c_g))
         new_groups.append(new_c_g)
 
-    if last_only:   # per-slot last valid row; norm/head are per-token ops
-        x = jnp.take_along_axis(
-            x, jnp.maximum(q_lens - 1, 0)[:, None, None], axis=1)
+    if last_only:   # per-slot last valid row(s); norm/head are per-token ops
+        rows = (jnp.maximum(q_lens - 1, 0)[:, None] if logit_rows is None
+                else logit_rows)
+        x = jnp.take_along_axis(x, rows[:, :, None], axis=1)
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
     logits = jnp.einsum("bsh,hv->bsv", x, head)

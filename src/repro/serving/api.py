@@ -42,7 +42,8 @@ from repro.core import analyzer
 from repro.core import cost_model as cm
 from repro.core import resolve as R
 from repro.core.partitioner import NULL_PLAN, ShardingPlan, make_plan
-from repro.core.resolve import AUTO, KVConfig, OverloadPolicy
+from repro.core.resolve import (AUTO, KVConfig, OverloadPolicy,
+                                SpeculationConfig)
 from repro.core.topology import ClusterSpec
 from repro.kernels.policy import KernelPolicy
 from repro.serving.engine import Engine, Request, RequestState, \
@@ -97,6 +98,10 @@ class ServeSpec:
     # count-bounded buffers on) | "off" (monolithic worst-case exchange) |
     # an int chunk count | an explicit cm.EpOverlap
     ep_overlap: Union[str, int, cm.EpOverlap] = AUTO
+    # speculative decoding: "off" (default) | "auto" (cost model prices
+    # draft length k against the verify step) | an int k | an explicit
+    # R.SpeculationConfig.  Greedy-only (temperature must stay 0).
+    speculation: Union[str, int, R.SpeculationConfig] = "off"
     # sampling / debug
     temperature: float = 0.0
     seed: int = 0
@@ -130,6 +135,14 @@ class ServeSpec:
                 raise ValueError(
                     "ep_overlap must be 'auto'|'off', a chunk count >= 1 "
                     f"or an EpOverlap, got {eo!r}")
+        sp = self.speculation
+        if not isinstance(sp, R.SpeculationConfig):
+            if isinstance(sp, bool) or not (
+                    sp in (AUTO, "off")
+                    or (isinstance(sp, int) and sp >= 1)):
+                raise ValueError(
+                    "speculation must be 'auto'|'off', a draft length >= 1 "
+                    f"or a SpeculationConfig, got {sp!r}")
         object.__setattr__(self, "faults", tuple(self.faults))
         for f in self.faults:
             if not isinstance(f, Fault):
@@ -171,7 +184,7 @@ class ServeSpec:
         # being explicit — its cost estimates price chunk/budget/batch ----
         l_in, l_out = self.prompt_len, self.max_new_tokens
         analysis_batch = self.max_batch if _concrete(self.max_batch) \
-            else R.AUTO_BATCH_CAP
+            else R.resolved_batch_cap()[0]
         # pricing hint: when the overlapped exchange is not disabled, the
         # analyzer prices every candidate with the micro-chunked schedule —
         # strategies whose A2A hides behind expert compute stop losing
@@ -252,12 +265,19 @@ class ServeSpec:
                 l_in=l_in, l_out=l_out)
         chunk = max(1, min(chunk, max_len))
 
+        # ---- speculation: draft length priced against the verify step ----
+        speculation, prov["speculation"] = R.auto_speculation(
+            cfg, cost_strat, cluster_spec, batch=max_batch, l_in=l_in,
+            l_out=l_out, chunk=chunk, temperature=self.temperature,
+            unified_ok=unified_supported(cfg), value=self.speculation)
+
         if _concrete(self.token_budget) and int(self.token_budget) > 0:
             token_budget = int(self.token_budget)
             prov["token_budget"] = "explicit"
         else:
             token_budget, prov["token_budget"] = R.auto_token_budget(
-                max_batch, chunk)
+                max_batch, chunk,
+                spec_k=speculation.k if speculation else 0)
 
         # ---- overload: priced degradation (bounded admission queue) ----
         if isinstance(self.overload, OverloadPolicy):
@@ -305,7 +325,7 @@ class ServeSpec:
             prompt_len=l_in, max_new_tokens=l_out,
             arrival_rate=self.arrival_rate, objective=self.objective,
             overload=overload, faults=self.faults, kv=kv,
-            ep_overlap=ep_ovl,
+            ep_overlap=ep_ovl, speculation=speculation,
             moe_ep=cost_strat.moe_ep if cfg.is_moe else 1,
             moe_tp=cost_strat.moe_tp if cfg.is_moe else 1,
             temperature=self.temperature, seed=self.seed,
@@ -344,6 +364,7 @@ class ResolvedServeSpec:
     faults: tuple = ()
     kv: KVConfig = dataclasses.field(default_factory=KVConfig)
     ep_overlap: Optional[cm.EpOverlap] = None   # None = monolithic exchange
+    speculation: Optional[R.SpeculationConfig] = None   # None = off
     # the priced strategy's MoE degrees (the engine's expert-load/A2A
     # observability buckets measured counts by them — the local engine
     # itself runs the NULL_PLAN single-device layout)
@@ -356,7 +377,7 @@ class ResolvedServeSpec:
 
     _KNOBS = ("strategy", "kernels", "dispatch", "chunk", "token_budget",
               "max_batch", "max_len", "cluster", "overload", "kv",
-              "ep_overlap")
+              "ep_overlap", "speculation")
 
     def describe(self) -> str:
         """The provenance report: every knob, its value, and its source."""
@@ -372,9 +393,9 @@ class ResolvedServeSpec:
             if f == "strategy" and self.strategy_detail:
                 v = f"{v} ({self.strategy_detail})"
             elif isinstance(v, (KernelPolicy, OverloadPolicy, KVConfig,
-                                cm.EpOverlap)):
+                                cm.EpOverlap, R.SpeculationConfig)):
                 v = v.describe()
-            elif f == "ep_overlap" and v is None:
+            elif v is None and f in ("ep_overlap", "speculation"):
                 v = "off"
             rows.append((f, str(v), self.provenance.get(f, "?")))
         w0 = max(len(r[0]) for r in rows)
@@ -389,9 +410,9 @@ class ResolvedServeSpec:
         for f in self._KNOBS:
             v = getattr(self, f)
             if isinstance(v, (KernelPolicy, OverloadPolicy, KVConfig,
-                              cm.EpOverlap)):
+                              cm.EpOverlap, R.SpeculationConfig)):
                 v = v.describe()
-            elif f == "ep_overlap" and v is None:
+            elif v is None and f in ("ep_overlap", "speculation"):
                 v = "off"
             resolved[f] = v
         return {
@@ -569,4 +590,4 @@ class LLM:
 
 
 __all__ = ["AUTO", "ServeSpec", "ResolvedServeSpec", "OverloadPolicy",
-           "KVConfig", "Fault", "LLM"]
+           "KVConfig", "SpeculationConfig", "Fault", "LLM"]

@@ -1,0 +1,274 @@
+"""Draft sources for speculative decoding on the unified ragged step.
+
+The engine's verify side is the EXISTING ``(B, chunk)`` jitted step: a
+speculating slot just contributes ``q_len = k+1`` rows (its last committed
+token followed by k draft tokens) instead of 1, and the multi-row logit
+extraction (``model.forward(logit_rows=...)``) scores every draft position
+in one pass.  THIS module is the draft side: where the k proposed tokens
+come from.
+
+``NGramDraft``
+    prompt-suffix matching (lookahead-style): the most recent (n-1)-gram
+    of the slot's context is searched backwards through the context; on a
+    match, the tokens that followed it are proposed.  Zero extra compute,
+    zero state — acceptance is workload-dependent (great on repetitive /
+    templated text, poor on fresh prose), but a rejected draft costs only
+    its budget rows.
+
+``ModelDraft``
+    a real (small) model proposing greedily: its own dense KV cache, its
+    own jitted single-row decode step, host-side context mirrors.  The
+    draft model is any ``repro.configs`` config — typically a reduced one —
+    with its own params; ``draft="self"`` reuses the serving model's own
+    cfg/params as an acceptance-1.0 oracle (greedy self-drafts are always
+    accepted — the bit-exactness test rides this).  A draft model with a
+    different vocab is safe: proposed ids outside the verifier's vocab are
+    clamped by ``jnp.take`` on the embedding and then simply rejected.
+
+``MTPDraft``
+    interface stub for a DeepSeek-V3-style multi-token-prediction head
+    (Megatron-Core MTP shape): k extra transformer blocks predicting
+    positions t+2..t+k+1 from the backbone's hidden state.  Wiring it
+    needs trained MTP weights, which this repo does not ship — the stub
+    documents the contract and raises.
+
+All sources implement ``DraftSource``: ``propose`` maps slot -> proposed
+token array (possibly shorter than asked, possibly empty), and the
+lifecycle hooks (``begin``/``observe``/``release``) let stateful sources
+mirror the engine's slot state.  Proposals are HINTS: the engine may trim
+them against the token budget and KV capacity, and the verify step is
+what commits tokens — a draft source can be arbitrarily wrong without
+affecting output correctness (greedy verify is bit-exact by construction).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.configs.base import ModelConfig
+from repro.core.resolve import SpeculationConfig
+from repro.core.partitioner import NULL_PLAN
+from repro.models.model import forward, init_params
+from repro.serving.kv_cache import make_batched_cache
+
+# model-draft catch-up feeds context in chunks of this many rows
+DRAFT_CHUNK = 16
+
+
+class DraftSource:
+    """Per-engine draft proposer (one instance, all slots)."""
+
+    name = "none"
+
+    def begin(self, slot: int, tokens: np.ndarray) -> None:
+        """A request was admitted to ``slot`` with ``tokens`` context."""
+
+    def observe(self, slot: int, committed: np.ndarray) -> None:
+        """The verify step committed ``committed`` tokens for ``slot``."""
+
+    def release(self, slot: int) -> None:
+        """The slot was freed (done / failed / preempted)."""
+
+    def propose(self, ctx: dict[int, np.ndarray],
+                want: dict[int, int]) -> dict[int, np.ndarray]:
+        """slot -> up to ``want[slot]`` proposed next tokens, given each
+        slot's full committed context (prompt + outputs).  May return
+        fewer (or no) tokens per slot; must not return more."""
+        raise NotImplementedError
+
+
+class NGramDraft(DraftSource):
+    """Suffix-match drafting: propose the continuation of the most recent
+    occurrence of the context's trailing (n-1)-gram."""
+
+    name = "ngram"
+
+    def __init__(self, ngram: int = 3):
+        self.g = max(int(ngram) - 1, 1)
+
+    def propose(self, ctx, want):
+        out = {}
+        for slot, k in want.items():
+            toks = ctx[slot]
+            g = self.g
+            if k < 1 or len(toks) < g + 1:
+                continue
+            pat = toks[-g:]
+            # newest match first (recency beats frequency for decode text)
+            for st in range(len(toks) - g - 1, -1, -1):
+                if np.array_equal(toks[st:st + g], pat):
+                    prop = toks[st + g:st + g + k]
+                    if prop.size:
+                        out[slot] = prop.astype(np.int64)
+                    break
+        return out
+
+
+class ModelDraft(DraftSource):
+    """A small model drafting greedily with its own dense KV cache.
+
+    The draft cache length is host-authoritative: ``_len[slot]`` counts the
+    tokens the draft model has actually consumed, and every jitted call
+    rebuilds the device length vector from it — so speculative rows the
+    draft itself wrote past a rejection become inert ragged-tail padding,
+    exactly like the verifier's rejected rows.  ``observe`` reconciles:
+    when the engine's committed stream diverges from what the draft
+    consumed (rejected drafts), the slot replays from the fork point on
+    the next propose (cheap: DRAFT_CHUNK-row catch-up steps).
+    """
+
+    name = "model"
+
+    def __init__(self, cfg: ModelConfig, params, *, plan=NULL_PLAN,
+                 max_batch: int = 8, max_len: int = 512,
+                 dtype=jnp.bfloat16):
+        self.cfg, self.params, self.plan = cfg, params, plan
+        self.max_len = max_len
+        self.cache = make_batched_cache(cfg, max_batch, max_len, dtype)
+        self._len = np.zeros(max_batch, np.int64)   # tokens consumed
+        self._fed: list[Optional[np.ndarray]] = [None] * max_batch
+        self._step = jax.jit(self._impl)
+
+    def _impl(self, params, tokens, q_lens, cache):
+        out = forward(params, self.cfg, self.plan, tokens=tokens,
+                      cache=cache, q_lens=q_lens, last_only=True)
+        nxt = jnp.argmax(out.logits[:, 0], axis=-1).astype(jnp.int32)
+        return nxt, out.cache
+
+    def _run(self, toks: np.ndarray, q: np.ndarray) -> np.ndarray:
+        """One draft step: feed ``toks`` rows per ``q`` lengths, return the
+        per-slot greedy next token.  Length vector rebuilt from the host
+        mirror so stale draft rows never leak across calls."""
+        cache = {**self.cache,
+                 "length": jnp.asarray(self._len, jnp.int32)}
+        nxt, self.cache = self._step(self.params, jnp.asarray(toks),
+                                     jnp.asarray(q, jnp.int32), cache)
+        self._len += q.astype(np.int64)
+        return np.asarray(nxt)
+
+    def release(self, slot: int) -> None:
+        self._len[slot] = 0
+        self._fed[slot] = None
+
+    def observe(self, slot: int, committed: np.ndarray) -> None:
+        fed = self._fed[slot]
+        if fed is None:
+            return
+        self._fed[slot] = np.concatenate(
+            [fed, np.asarray(committed, fed.dtype)])
+        # divergence (rejected drafts) is detected lazily in propose(): the
+        # engine's ctx is the truth, _fed only records what the DRAFT ate.
+
+    def _sync(self, slot: int, ctx: np.ndarray) -> bool:
+        """Catch the slot's draft cache up to ``ctx[:-1]`` (the last token
+        is fed by the propose loop itself).  Returns False when the slot
+        cannot be synced (context longer than the draft cache)."""
+        if len(ctx) > self.max_len - 1:
+            return False
+        fed = self._fed[slot]
+        n_ok = int(self._len[slot])
+        if fed is None or n_ok > len(ctx) \
+                or not np.array_equal(fed[:n_ok], ctx[:n_ok]):
+            n_ok = 0                   # fork/divergence: replay from scratch
+            self._len[slot] = 0
+        self._fed[slot] = ctx
+        # feed ctx[n_ok:-1] in DRAFT_CHUNK-row ragged steps
+        b = len(self._len)
+        pos = n_ok
+        while pos < len(ctx) - 1:
+            n = min(DRAFT_CHUNK, len(ctx) - 1 - pos)
+            toks = np.zeros((b, DRAFT_CHUNK), np.int32)
+            q = np.zeros(b, np.int32)
+            toks[slot, :n] = ctx[pos:pos + n]
+            q[slot] = n
+            self._run(toks, q)
+            pos += n
+        return True
+
+    def propose(self, ctx, want):
+        live = {}
+        for slot, k in want.items():
+            if k >= 1 and self._sync(slot, np.asarray(ctx[slot], np.int32)):
+                live[slot] = k
+        if not live:
+            return {}
+        b = len(self._len)
+        props = {slot: [] for slot in live}
+        # iteration 0 feeds each slot's last committed token -> d_1;
+        # iteration j feeds d_j -> d_{j+1}
+        cur = {slot: int(ctx[slot][-1]) for slot in live}
+        for j in range(max(live.values())):
+            toks = np.zeros((b, DRAFT_CHUNK), np.int32)
+            q = np.zeros(b, np.int32)
+            for slot, k in live.items():
+                if j < k:
+                    toks[slot, 0] = cur[slot]
+                    q[slot] = 1
+            nxt = self._run(toks, q)
+            for slot, k in live.items():
+                if j < k:
+                    cur[slot] = int(nxt[slot])
+                    props[slot].append(cur[slot])
+        # the proposed tokens themselves were fed for all but the last
+        # position; reconcile _fed/_len to the committed context only —
+        # the next observe/propose treats the speculative rows as stale.
+        for slot in live:
+            self._len[slot] = len(ctx[slot])
+            self._fed[slot] = np.asarray(ctx[slot], np.int32)
+        return {slot: np.asarray(p, np.int64)
+                for slot, p in props.items() if p}
+
+
+class MTPDraft(DraftSource):
+    """DeepSeek-V3-style multi-token-prediction head (interface stub).
+
+    Contract (Megatron-Core MTP shape): ``k`` extra transformer blocks,
+    block j consuming [backbone hidden state at t; embedding of token
+    t+j] through a projection to predict position t+j+1 — so one backbone
+    pass plus k tiny block passes yields k drafts that share the
+    verifier's representations (acceptance far above an independent
+    draft model).  Requires trained MTP weights alongside the serving
+    checkpoint; this repo ships none, so construction raises.
+    """
+
+    name = "mtp"
+
+    def __init__(self, *_, **__):
+        raise NotImplementedError(
+            "MTP drafting needs trained multi-token-prediction head "
+            "weights (DeepSeek-V3 / Megatron-Core MTP shape); none ship "
+            "with this repo — use draft='ngram', 'self', or a reduced "
+            "config name")
+
+
+def make_draft(sc: SpeculationConfig, cfg: ModelConfig, params, *,
+               plan=NULL_PLAN, max_batch: int = 8, max_len: int = 512,
+               dtype=jnp.bfloat16) -> DraftSource:
+    """Build the draft source a resolved ``SpeculationConfig`` names.
+
+    "ngram" -> NGramDraft; "self" -> ModelDraft on the serving model's own
+    cfg/params (acceptance-1.0 greedy oracle); "mtp" -> the stub (raises);
+    any other name -> a reduced config of that arch with freshly
+    initialized params (structure-correct, low acceptance — exercises the
+    foreign-draft path end to end).
+    """
+    if sc.draft == "ngram":
+        return NGramDraft(ngram=sc.ngram)
+    if sc.draft == "self":
+        return ModelDraft(cfg, params, plan=plan, max_batch=max_batch,
+                          max_len=max_len, dtype=dtype)
+    if sc.draft == "mtp":
+        return MTPDraft()
+    dcfg = C.get_reduced(sc.draft)     # raises KeyError on unknown arch
+    dparams = init_params(jax.random.PRNGKey(0), dcfg, dtype)
+    return ModelDraft(dcfg, dparams, plan=NULL_PLAN, max_batch=max_batch,
+                      max_len=max_len, dtype=dtype)
+
+
+__all__ = ["DraftSource", "NGramDraft", "ModelDraft", "MTPDraft",
+           "make_draft", "DRAFT_CHUNK"]

@@ -3,17 +3,20 @@ KV cache.
 
 Default path — ONE jitted program (the unified mixed prefill/decode step):
 
-  unified_fn(params, tokens(B, chunk), q_lens(B,), cache, key)
-      -> (next_token(B,), last_logits(B, V), step_logits, cache, bad(B,))
-  (step_logits = every row's (B, chunk, V) logits under ``debug_logits``,
-   else None — the hot path runs the LM head only on last valid rows;
-   bad[i] flags a non-finite sampled-logits row, the NaN/Inf quarantine
-   signal)
+  unified_fn(params, tokens(B, chunk), q_lens(B,), v_lens(B,), cache, key)
+      -> (tokens(B, n), n_emit(B,), last_logits(B, V), step_logits, cache,
+          bad(B,))
+  (n = 1 + speculation k; step_logits = every row's (B, chunk, V) logits
+   under ``debug_logits``, else None — the hot path runs the LM head only
+   on the selected rows; bad[i] flags a non-finite sampled-logits row, the
+   NaN/Inf quarantine signal)
 
 Every iteration each slot contributes ``q_lens[i] ∈ {0, 1, …, chunk}``
 tokens against the fixed (B, chunk) buffer: a decoding slot contributes its
-1 sampled token, a prefilling slot contributes the next chunk of its
-pending tokens, an idle slot contributes 0.  Admission is just bookkeeping
+1 sampled token — or, when speculating, 1 + k rows whose draft tail is
+greedy-verified in the same pass (``v_lens`` marks the verify slots) — a
+prefilling slot contributes the next chunk of its pending tokens, an idle
+slot contributes 0.  Admission is just bookkeeping
 (the slot's pending buffer is ``prompt + tokens generated so far`` — the
 recompute-on-resume suffix is what makes preemption exact — and the slot's
 cache length is zeroed); no blocking prefill, so a long prompt never stalls
@@ -64,6 +67,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.cost_model import cap_rows_for
 from repro.models.model import forward, init_cache
+from repro.serving.draft import make_draft
 from repro.serving.faults import FaultInjector, InjectedFault
 from repro.serving.kv_cache import insert_slot, make_kv_cache, with_lengths
 
@@ -204,6 +208,36 @@ class Engine:
             kvcfg = None
         self.kv = make_kv_cache(cfg, kvcfg, self.max_batch, self.max_len,
                                 dtype)
+
+        # speculative decoding (resolved ``spec.speculation`` or None): a
+        # speculating slot contributes 1 + k rows (last committed token +
+        # k draft tokens) to the SAME unified step, greedy verify accepts
+        # the longest matching draft prefix plus one bonus token, and the
+        # rejected tail rolls back (device length in the jitted step,
+        # paged pages via kv.rollback).  Greedy-only and unified-only —
+        # the resolver enforces both, this re-checks defensively.
+        sc = getattr(spec, "speculation", None)
+        self.spec_cfg = self.draft = None
+        self.spec_k = 0
+        if sc is not None and not self.legacy and self.temperature == 0:
+            k = min(int(sc.k), self.chunk - 1)
+            if k >= 1:
+                self.spec_cfg = sc if sc.k == k \
+                    else dataclasses.replace(sc, k=k)
+                self.spec_k = k
+                self.draft = make_draft(self.spec_cfg, cfg, params,
+                                        plan=self.plan,
+                                        max_batch=self.max_batch,
+                                        max_len=self.max_len, dtype=dtype)
+        self.n_logits = self.spec_k + 1   # logit rows per slot per step
+        # per-slot draft tokens planned for the NEXT unified step
+        self._drafts: list[Optional[np.ndarray]] = [None] * self.max_batch
+        # acceptance accounting: slot-steps that drafted, tokens proposed/
+        # accepted, and the EMA that gates drafting (optimistic start so
+        # the first steps always probe)
+        self.spec_steps = self.spec_drafted = self.spec_accepted = 0
+        self.accept_ema = 1.0
+
         self.slots: list[Optional[Request]] = [None] * self.max_batch
         self.cur_tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
         # unified-step slot bookkeeping (host side, mirrors device lengths)
@@ -263,36 +297,90 @@ class Engine:
                 "ServeSpec.kv pool_pages (or leave kv='auto')")
 
     # -- jitted programs -------------------------------------------------
-    def _unified_impl(self, params, tokens, q_lens, cache, key):
+    def _unified_impl(self, params, tokens, q_lens, v_lens, cache, key):
         """THE serving program: one mixed token-budget iteration.
 
         tokens (B, chunk) int32, q_lens (B,) int32.  Slot i's valid rows are
-        tokens[i, :q_lens[i]] — a prefill chunk or a single decode token —
-        at cache offset length[i]; rows past q_lens[i] are inert.  Samples
-        each slot's next token from its last valid row's logits (only
-        meaningful to the host when the slot just finished its prompt or is
-        decoding; the host ignores the rest).  ``bad[i]`` flags a
-        non-finite sampled-logits row on a scheduled slot — the NaN/Inf
-        quarantine signal (one extra (B,) bool in the existing host read).
+        tokens[i, :q_lens[i]] — a prefill chunk, a single decode token, or
+        a 1 + k speculative verify block — at cache offset length[i]; rows
+        past q_lens[i] are inert.  ``v_lens[i]`` marks decode-phase slots
+        (v = q: the rows are [last committed token, k drafts]); 0 means
+        prefill/idle.  ``bad[i]`` flags a non-finite sampled-logits row on
+        a scheduled slot — the NaN/Inf quarantine signal.
+
+        Returns (toks (B, n), n_emit (B,), last (B, V), step_logits,
+        cache, bad (B,), expert_counts) with n = 1 + spec_k.  Slot i's
+        committed tokens are ``toks[i, :n_emit[i]]``: greedy verify accepts
+        draft j+1 iff it equals the argmax of row j's logits (row j is the
+        prediction after consuming rows 0..j), so the accepted drafts ARE
+        the greedy rows and the first rejected position contributes its
+        greedy token as the bonus — bit-exact vs non-speculative greedy by
+        construction.  The rejected tail's cache rows are subtracted from
+        the returned per-slot length (stale rows beyond it are masked like
+        any ragged tail).  With spec_k == 0 this is exactly the
+        non-speculative program (n_emit is 1 on every scheduled slot and
+        temperature sampling applies).
         """
+        n = self.n_logits
+        if n == 1:                        # non-speculative: the PR 8 graph
+            out = forward(params, self.cfg, self.plan, tokens=tokens,
+                          cache=cache, q_lens=q_lens,
+                          last_only=not self.debug_logits,
+                          expert_stats=self.cfg.is_moe)
+            if self.debug_logits:
+                last = jnp.take_along_axis(
+                    out.logits, jnp.maximum(q_lens - 1, 0)[:, None, None],
+                    axis=1)[:, 0]                           # (B, V)
+                step_logits = out.logits
+            else:
+                last = out.logits[:, 0]
+                step_logits = None
+            bad = (q_lens > 0) & ~jnp.isfinite(last).all(axis=-1)
+            if self.temperature > 0:
+                nxt = jax.random.categorical(key, last / self.temperature, -1)
+            else:
+                nxt = jnp.argmax(last, -1)
+            emit = jnp.where(q_lens > 0, 1, 0).astype(jnp.int32)
+            return (nxt.astype(jnp.int32)[:, None], emit, last, step_logits,
+                    out.cache, bad, out.expert_counts)
+
+        # speculative verify: score one logit row per draft position.  Row
+        # j's logits are the model's prediction AFTER consuming rows 0..j
+        # (causal flash_chunk masks per row, so the extra rows never touch
+        # earlier rows' softmax).  Non-verify slots (prefill: v = 0) pin
+        # every row to their last valid row, so toks[:, 0] is the plain
+        # sampled token.
+        last_row = jnp.maximum(q_lens - 1, 0)               # (B,)
+        j = jnp.arange(n)
+        rows = jnp.where((v_lens > 0)[:, None],
+                         jnp.minimum(j[None, :], last_row[:, None]),
+                         last_row[:, None])                 # (B, n)
         out = forward(params, self.cfg, self.plan, tokens=tokens,
                       cache=cache, q_lens=q_lens,
                       last_only=not self.debug_logits,
+                      logit_rows=None if self.debug_logits else rows,
                       expert_stats=self.cfg.is_moe)
         if self.debug_logits:
-            last = jnp.take_along_axis(
-                out.logits, jnp.maximum(q_lens - 1, 0)[:, None, None],
-                axis=1)[:, 0]                               # (B, V)
+            sel = jnp.take_along_axis(out.logits, rows[:, :, None], axis=1)
             step_logits = out.logits
         else:
-            last = out.logits[:, 0]
+            sel = out.logits                                # (B, n, V)
             step_logits = None
-        bad = (q_lens > 0) & ~jnp.isfinite(last).all(axis=-1)
-        if self.temperature > 0:
-            nxt = jax.random.categorical(key, last / self.temperature, -1)
-        else:
-            nxt = jnp.argmax(last, -1)
-        return (nxt.astype(jnp.int32), last, step_logits, out.cache, bad,
+        bad = (q_lens > 0) & ~jnp.isfinite(sel).all(axis=(1, 2))
+        greedy = jnp.argmax(sel, -1).astype(jnp.int32)      # (B, n)
+        s = jnp.maximum(v_lens - 1, 0)                      # drafted count
+        drafts = tokens[:, 1:n]                             # (B, n-1)
+        ok = (drafts == greedy[:, :n - 1]) \
+            & (jnp.arange(n - 1)[None, :] < s[:, None])
+        # accepted = longest matching prefix; +1 bonus token from the
+        # first non-accepted row's own greedy prediction
+        acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+        emit = jnp.where(q_lens > 0,
+                         jnp.where(v_lens > 0, acc + 1, 1),
+                         0).astype(jnp.int32)
+        rollback = jnp.where(v_lens > 0, s - acc, 0).astype(jnp.int32)
+        cache2 = {**out.cache, "length": out.cache["length"] - rollback}
+        return (greedy, emit, sel[:, 0], step_logits, cache2, bad,
                 out.expert_counts)
 
     def _prefill_impl(self, params, tokens, real_len):
@@ -369,6 +457,8 @@ class Engine:
         # skips straight to its unique tail).  Dense: always 0.
         self._prompt_pos[slot] = self.kv.begin(slot, self._pending[slot])
         self._last_tok[slot] = 0
+        if self.draft is not None:
+            self.draft.begin(slot, self._pending[slot])
         self._admit_seq[slot] = self._seq
         self._seq += 1
         if req.t_admitted == 0.0:
@@ -408,6 +498,9 @@ class Engine:
             return None
         self.slots[slot] = None
         self._pending[slot] = None
+        self._drafts[slot] = None
+        if self.draft is not None:
+            self.draft.release(slot)
         # free the slot's KV; a quarantined slot's pages may hold the very
         # NaNs we are quarantining, so they never enter the prefix index
         self.kv.free(slot, keep_prefix=state != RequestState.FAILED)
@@ -474,7 +567,7 @@ class Engine:
         budget = int(token_budget) if token_budget else \
             self.max_batch * self.chunk
         q = np.zeros((self.max_batch,), np.int32)
-        prefilling = []
+        prefilling, decoding = [], []
         for i, r in enumerate(self.slots):
             if r is None or r.terminal:
                 continue
@@ -482,7 +575,14 @@ class Engine:
                 prefilling.append(i)
             elif not r.done:
                 q[i] = self.kv.reserve(i, 1)
+                decoding.append(i)
         budget -= int(q.sum())
+        if self.draft is not None:
+            # draft rows are decode-side work: price them BEFORE prefill
+            # (a speculating slot costs 1 + k budget rows) — the auto
+            # budget max_batch*(1+k) + chunk keeps the prefill chunk
+            # funded even when every slot speculates
+            budget = self._plan_drafts(decoding, q, budget)
         for i in sorted(prefilling, key=lambda j: self._admit_seq[j]):
             if budget <= 0:
                 break
@@ -492,6 +592,56 @@ class Engine:
             q[i] = n
             budget -= n
         return q
+
+    def _plan_drafts(self, decoding: list, q: np.ndarray,
+                     budget: int) -> int:
+        """Extend decode slots with draft rows, priced against the budget.
+
+        Each speculating slot's grant grows from 1 to 1 + k rows where
+        k <= spec_k is trimmed by the request's remaining generation room,
+        the budget, and what the KV pool can actually reserve.  Drafting
+        pauses when the acceptance EMA drops under the configured gate,
+        re-probing every ``probe_every`` steps.  Returns remaining budget.
+        """
+        self._drafts = [None] * self.max_batch
+        sc = self.spec_cfg
+        if not decoding or budget <= 0:
+            return budget
+        if self.accept_ema < sc.min_accept \
+                and self._step_idx % sc.probe_every != 0:
+            return budget                  # gated off; periodic re-probe
+        want, ctx = {}, {}
+        for i in decoding:
+            if q[i] < 1:
+                continue                   # pool could not even extend by 1
+            r = self.slots[i]
+            # full acceptance commits k + 1 tokens; keep <= max_new_tokens
+            room = r.max_new_tokens - len(r.out_tokens) - 1
+            k = min(self.spec_k, room, budget)
+            if k < 1:
+                continue
+            ctx[i] = np.concatenate([np.asarray(r.prompt, np.int64),
+                                     np.asarray(r.out_tokens, np.int64)])
+            want[i] = k
+        if not want:
+            return budget
+        props = self.draft.propose(ctx, want)
+        for i in sorted(props, key=lambda jj: self._admit_seq[jj]):
+            if budget <= 0:
+                break
+            d = np.asarray(props[i], np.int64)[:want[i]][:budget]
+            if d.size == 0:
+                continue
+            # the decode row already reserved 1; extend to 1 + k rows
+            # (paged exhaustion grants fewer — trim the draft to fit)
+            grant = self.kv.reserve(i, 1 + int(d.size))
+            d = d[:max(0, grant - 1)]
+            if d.size == 0:
+                continue
+            self._drafts[i] = d
+            q[i] += int(d.size)
+            budget -= int(d.size)
+        return budget
 
     # -- stepping --------------------------------------------------------
     def step(self, token_budget: Optional[int] = None) -> list:
@@ -541,6 +691,11 @@ class Engine:
                 self._pending[i] = None
                 self.kv.free(i)
                 retired.append(r)
+            else:
+                continue
+            self._drafts[i] = None
+            if self.draft is not None:
+                self.draft.release(i)
         return retired
 
     def unified_step(self, q_lens) -> list:
@@ -557,6 +712,7 @@ class Engine:
         if not q_lens.any():
             return retired
         toks = np.zeros((self.max_batch, self.chunk), np.int32)
+        v_lens = np.zeros((self.max_batch,), np.int32)
         for i, r in enumerate(self.slots):
             n = int(q_lens[i])
             if r is None or n == 0:
@@ -566,19 +722,28 @@ class Engine:
                 toks[i, :n] = self._pending[i][pos:pos + n]
             else:
                 toks[i, 0] = self._last_tok[i]
+                d = self._drafts[i]
+                if d is not None and n == 1 + len(d):
+                    toks[i, 1:n] = d          # verify rows: [t0, d1..dk]
+                    v_lens[i] = n
+                else:
+                    v_lens[i] = min(n, 1)     # plain decode (stale/absent
+                    #                           drafts never reach the step)
         self.key, sub = jax.random.split(self.key)
         self.kv.flush()          # push dirty block tables to device
-        nxt, self.last_logits, self.step_logits, self.cache, bad, ecnt = \
-            self._unified(self.params, jnp.asarray(toks),
-                          jnp.asarray(q_lens), self.cache, sub)
+        (nxt, emit, self.last_logits, self.step_logits, self.cache, bad,
+         ecnt) = self._unified(self.params, jnp.asarray(toks),
+                               jnp.asarray(q_lens), jnp.asarray(v_lens),
+                               self.cache, sub)
         if ecnt is not None:
             self.expert_counts += np.asarray(ecnt, np.int64)
             self._account_a2a(int(q_lens.sum()))
         self.kv.advance(q_lens)  # host length mirror follows the device
-        # one (B,) host read per step, for request bookkeeping + the next
+        # one (B, n) host read per step, for request bookkeeping + the next
         # step's token buffer (which must merge host-side prompt chunks
         # anyway — the (B, chunk) int32 upload is noise next to the model)
         nxt_host = np.asarray(nxt)
+        emit_host = np.asarray(emit)
         bad_host = np.array(bad)       # copy: fault injection writes into it
         if self.faults:
             live = {i: r.rid for i, r in enumerate(self.slots)
@@ -591,6 +756,7 @@ class Engine:
             n = int(q_lens[i])
             if r is None or n == 0:
                 continue
+            s_i = max(int(v_lens[i]) - 1, 0)     # draft rows this slot fed
             if bad_host[i]:
                 # quarantine exactly this slot: non-finite logits never
                 # produce a token, never touch a neighbour
@@ -607,9 +773,27 @@ class Engine:
                     r.t_first_token = now              # prompt done: TTFT
             if r.done:                                 # zero-token budget:
                 continue                               # reaped next sweep
-            tok = int(nxt_host[i])
-            r.out_tokens.append(tok)
-            self._last_tok[i] = tok
+            m = int(emit_host[i])                      # accepted + bonus
+            if s_i:
+                # release the rejected tail's pages (the device length is
+                # already rolled back inside the jitted step); counters +
+                # the acceptance EMA that gates the next plan's drafting
+                a_i = m - 1
+                self.kv.rollback(i, s_i - a_i)
+                self.spec_steps += 1
+                self.spec_drafted += s_i
+                self.spec_accepted += a_i
+                al = self.spec_cfg.ema_alpha
+                self.accept_ema = ((1 - al) * self.accept_ema
+                                   + al * (a_i / s_i))
+            m = min(m, r.max_new_tokens - len(r.out_tokens))   # defensive
+            if m <= 0:
+                continue
+            committed = [int(t) for t in nxt_host[i, :m]]
+            r.out_tokens.extend(committed)
+            self._last_tok[i] = committed[-1]
+            if self.draft is not None:
+                self.draft.observe(i, np.asarray(committed, np.int64))
             r.t_done = now
             if r.done:
                 r.state = RequestState.DONE
@@ -617,7 +801,23 @@ class Engine:
                 self.slots[i] = None
                 self._pending[i] = None
                 self.kv.free(i)
+                if self.draft is not None:
+                    self.draft.release(i)
+        self._drafts = [None] * self.max_batch    # drafts are one-shot
         return retired
+
+    def spec_stats(self) -> dict:
+        """Speculation counters for ServeMetrics / bench meta."""
+        steps, drafted = self.spec_steps, self.spec_drafted
+        return {
+            "n_spec_steps": int(steps),
+            "n_spec_drafted": int(drafted),
+            "n_spec_accepted": int(self.spec_accepted),
+            "spec_accept_rate":
+                float(self.spec_accepted / drafted) if drafted else 0.0,
+            "spec_tokens_per_step":
+                float((self.spec_accepted + steps) / steps) if steps else 0.0,
+        }
 
     # -- expert-load / EP-exchange observability -------------------------
     def _account_a2a(self, step_tokens: int) -> None:

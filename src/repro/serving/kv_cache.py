@@ -71,6 +71,12 @@ class KVCache:
                                    n tokens; returns how many fit (paged
                                    exhaustion grants < n, possibly 0)
       advance(q_lens)              the step landed: lengths += q_lens
+      rollback(slot, n) -> int     the speculative tail was rejected:
+                                   lengths[slot] -= n, pages the shorter
+                                   length no longer touches return to the
+                                   pool (tail-only — shared prefix pages
+                                   sit at the FRONT of the block table and
+                                   are never released); returns pages freed
       free(slot, keep_prefix=...)  release the slot's pages; with
                                    keep_prefix the prompt's full pages
                                    enter the prefix index (cache-preserving
@@ -92,6 +98,9 @@ class KVCache:
         raise NotImplementedError
 
     def advance(self, q_lens) -> None:
+        raise NotImplementedError
+
+    def rollback(self, slot: int, n: int) -> int:
         raise NotImplementedError
 
     def free(self, slot: int, keep_prefix: bool = True) -> None:
@@ -130,6 +139,12 @@ class DenseKVCache(KVCache):
 
     def advance(self, q_lens) -> None:
         pass                          # device length is authoritative
+
+    def rollback(self, slot: int, n: int) -> int:
+        # device length is authoritative (the jitted verify step already
+        # returned the cache with the rejected tail subtracted); the stale
+        # rows beyond it are inert ragged-tail padding.
+        return 0
 
     def free(self, slot: int, keep_prefix: bool = True) -> None:
         self.cache = {**self.cache,
@@ -284,6 +299,35 @@ class PagedKVCache(KVCache):
 
     def advance(self, q_lens) -> None:
         self.lengths += np.asarray(q_lens, np.int64)
+
+    def rollback(self, slot: int, n: int) -> int:
+        """Shrink the slot by its rejected speculative tail: drop the last
+        ``n`` tokens and return pages past the new length to the pool.
+
+        Tail-only by construction: shared prefix pages occupy the FRONT of
+        the block table (``begin`` places the matched pages first), and a
+        draft tail starts past the prompt, so the released blocks are
+        always the slot's exclusively-owned newest pages — an indexed or
+        still-referenced page is never handed to the free list (same guard
+        as ``free``)."""
+        if n <= 0:
+            return 0
+        new_len = max(0, int(self.lengths[slot]) - int(n))
+        keep = -(-new_len // self.ps)              # ceil: partial page stays
+        freed = 0
+        for b in range(keep, int(self.n_blocks[slot])):
+            p = int(self.bt[slot, b])
+            if p < 0:
+                continue
+            self.ref[p] -= 1
+            if self.ref[p] == 0 and p not in self._node_of_page:
+                self._free.append(p)
+                freed += 1
+            self.bt[slot, b] = -1
+        self.n_blocks[slot] = keep
+        self.lengths[slot] = new_len
+        self._dirty = True
+        return freed
 
     def free(self, slot: int, keep_prefix: bool = True) -> None:
         n = int(self.n_blocks[slot])

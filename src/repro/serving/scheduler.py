@@ -92,6 +92,12 @@ class ServeMetrics:
     ep_rank_mean_tokens: float = 0.0  # routed slots per EP rank, mean
     a2a_bytes_moved: int = 0         # priced bytes under the resolved extent
     a2a_bytes_worst: int = 0         # priced bytes at worst-case extent
+    # speculative decoding (Engine.spec_stats; zero when speculation off)
+    n_spec_steps: int = 0            # slot-steps that carried draft rows
+    n_spec_drafted: int = 0          # draft tokens proposed to the verifier
+    n_spec_accepted: int = 0         # draft tokens accepted
+    spec_accept_rate: float = 0.0    # accepted / drafted
+    spec_tokens_per_step: float = 0.0  # committed tokens per verify step
 
     def row(self) -> str:
         r = (f"n={self.n_requests} ttft={self.ttft_mean*1e3:.1f}ms "
@@ -110,6 +116,9 @@ class ServeMetrics:
             r += (f" epskew={skew:.2f} "
                   f"a2a={self.a2a_bytes_moved}/{self.a2a_bytes_worst}B "
                   f"(-{saved*100:.0f}%)")
+        if self.n_spec_steps:
+            r += (f" spec={self.spec_tokens_per_step:.2f}tok/step"
+                  f"(acc {self.spec_accept_rate*100:.0f}%)")
         if self.n_incomplete:
             r += f" INCOMPLETE={self.n_incomplete}"
         return r
@@ -128,7 +137,12 @@ class ServeMetrics:
                 "ep_rank_max_tokens": self.ep_rank_max_tokens,
                 "ep_rank_mean_tokens": self.ep_rank_mean_tokens,
                 "a2a_bytes_moved": self.a2a_bytes_moved,
-                "a2a_bytes_worst": self.a2a_bytes_worst}
+                "a2a_bytes_worst": self.a2a_bytes_worst,
+                "n_spec_steps": self.n_spec_steps,
+                "n_spec_drafted": self.n_spec_drafted,
+                "n_spec_accepted": self.n_spec_accepted,
+                "spec_accept_rate": self.spec_accept_rate,
+                "spec_tokens_per_step": self.spec_tokens_per_step}
 
 
 class Scheduler:
@@ -360,6 +374,7 @@ class Scheduler:
             prefix_hit_tokens=self.engine.kv.stats.prefix_hit_tokens,
             n_evictions=self.engine.kv.stats.n_evictions,
             **self.engine.ep_load_stats(),
+            **self.engine.spec_stats(),
         )
 
 

@@ -215,6 +215,85 @@ def test_make_kv_cache_factory(gqa_cfg):
 
 
 # ---------------------------------------------------------------------------
+# speculative rollback (rejected draft tails; docs/serving.md)
+# ---------------------------------------------------------------------------
+
+def test_rollback_frees_tail_pages(gqa_cfg):
+    kv = _paged(gqa_cfg)
+    kv.begin(0, _toks(20, 20)), kv.reserve(0, 20)
+    kv.advance(np.asarray([20, 0]))
+    assert kv.reserve(0, 13) == 13              # speculative tail: page 3
+    kv.advance(np.asarray([13, 0]))
+    assert int(kv.n_blocks[0]) == 3
+    assert kv.rollback(0, 13) == 1              # page 3 back to the pool...
+    assert int(kv.lengths[0]) == 20 and int(kv.n_blocks[0]) == 2
+    assert len(kv._free) == 4                   # ...immediately reusable
+    assert int(kv.ref.sum()) == 2               # surviving pages only
+
+
+def test_rollback_within_partial_page_frees_nothing(gqa_cfg):
+    kv = _paged(gqa_cfg)
+    kv.begin(0, _toks(21, 20)), kv.reserve(0, 20)
+    kv.advance(np.asarray([20, 0]))
+    bt_before = kv.bt.copy()
+    assert kv.rollback(0, 2) == 0               # stays inside page 2
+    assert int(kv.lengths[0]) == 18 and int(kv.n_blocks[0]) == 2
+    assert np.array_equal(kv.bt, bt_before)
+    assert kv.rollback(0, 0) == 0               # no-op guard
+
+
+def test_rollback_never_frees_shared_prefix_pages(gqa_cfg):
+    kv = KV.PagedKVCache(gqa_cfg, 3, 64, page_size=16, pool_pages=8,
+                         dtype=jnp.float32)
+    t = _toks(22, 33)                           # 2 full pages + 1 token
+    kv.begin(0, t), kv.reserve(0, 33), kv.advance(np.asarray([33, 0, 0]))
+    kv.free(0)                                  # indexes the 2 full pages
+    assert kv.begin(1, t) == 32                 # warm admit: both shared
+    shared = [int(p) for p in kv.bt[1, :2]]
+    assert all(int(kv.ref[p]) == 1 for p in shared)
+    # the warm slot computes its last prompt token and speculates k=5 past
+    # it — the draft tail lands on a fresh exclusively-owned page
+    assert kv.reserve(1, 6) == 6
+    kv.advance(np.asarray([0, 6, 0]))
+    assert int(kv.n_blocks[1]) == 3
+    # full rejection: roll the tail back past the page boundary
+    assert kv.rollback(1, 6) == 1
+    assert int(kv.lengths[1]) == 32 and int(kv.n_blocks[1]) == 2
+    # the shared pages are untouched: still referenced, still indexed,
+    # still at the front of the block table
+    assert [int(p) for p in kv.bt[1, :2]] == shared
+    assert all(int(kv.ref[p]) == 1 for p in shared)
+    assert all(p in kv._node_of_page for p in shared)
+    # and the prefix chain still serves the NEXT request after release
+    kv.free(1)
+    assert kv.begin(2, t) == 32
+    assert kv.stats.n_prefix_hits == 2
+
+
+def test_rollback_preserves_prefix_index_lru_order(gqa_cfg):
+    kv = _paged(gqa_cfg, pool=8)
+    for seed in (30, 31):                       # two indexed chains
+        kv.begin(0, _toks(seed, 32)), kv.reserve(0, 32)
+        kv.advance(np.asarray([32, 0]))
+        kv.free(0)
+    ticks = {p: n.tick for p, n in kv._node_of_page.items()}
+    # an unrelated slot speculates and rejects — the index must not notice
+    kv.begin(1, _toks(32, 20)), kv.reserve(1, 20)
+    kv.advance(np.asarray([0, 20]))
+    kv.reserve(1, 13), kv.advance(np.asarray([0, 13]))
+    kv.rollback(1, 13)
+    assert {p: n.tick for p, n in kv._node_of_page.items()} == ticks
+
+
+def test_dense_rollback_is_device_side(gqa_cfg):
+    """The dense backend's device length vector is authoritative — the
+    jitted step already subtracted the rejected tail, so the host-side
+    rollback frees nothing and succeeds."""
+    kv = KV.DenseKVCache(gqa_cfg, 2, 32, jnp.float32)
+    assert kv.rollback(0, 4) == 0
+
+
+# ---------------------------------------------------------------------------
 # resolution (core.resolve.auto_kv)
 # ---------------------------------------------------------------------------
 

@@ -346,4 +346,6 @@ def test_metrics_row_includes_robustness_counters(smollm):
                        "kv_occupancy", "n_prefix_hits", "prefix_hit_tokens",
                        "n_evictions", "ep_rank_max_tokens",
                        "ep_rank_mean_tokens", "a2a_bytes_moved",
-                       "a2a_bytes_worst"}
+                       "a2a_bytes_worst", "n_spec_steps", "n_spec_drafted",
+                       "n_spec_accepted", "spec_accept_rate",
+                       "spec_tokens_per_step"}

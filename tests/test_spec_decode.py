@@ -1,0 +1,408 @@
+"""Speculative decoding on the unified ragged step: oracles, scheduling,
+resolution (docs/serving.md).
+
+THE correctness property: greedy token streams with speculation on are
+BIT-IDENTICAL to the non-speculative run — drafting/verification may
+change how many steps the work takes, never what comes out.  The
+self-draft (``draft="self"``) is the acceptance-1.0 oracle: every draft
+is the verifier's own greedy continuation, so any stream divergence is a
+verify/rollback bug, not a bad draft.  A foreign draft model with random
+weights is the opposite fixture — near-zero acceptance exercises the
+rejection/rollback path on every step and the streams must STILL match.
+
+Scheduling: a speculating slot costs ``1 + k`` budget rows, priced after
+decode grants and before prefill chunks (decode-first order preserved);
+``speculation="off"`` leaves the planner byte-identical to the
+pre-speculation planner.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from _engine_helpers import make_engine, make_spec
+from repro.core.resolve import SpeculationConfig
+from repro.models.model import init_params
+from repro.serving.draft import ModelDraft, NGramDraft, make_draft
+from repro.serving.engine import Request
+from repro.serving.scheduler import Scheduler, synthetic_workload
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = C.get_reduced("smollm-360m")
+    return cfg, init_params(KEY, cfg, jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def moe():
+    cfg = C.get_reduced("phi3.5-moe-42b")
+    return cfg, init_params(KEY, cfg, jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def mla():
+    cfg = C.get_reduced("minicpm3-4b")
+    return cfg, init_params(KEY, cfg, jnp.float32)
+
+
+def _streams(cfg, params, speculation, *, kv="dense", n=4, prompt_len=10,
+             out=8, batch=2, max_len=64, chunk=8, **kw):
+    eng = make_engine(cfg, params, max_batch=batch, max_len=max_len,
+                      chunk=chunk, kv=kv, prompt_len=prompt_len,
+                      max_new_tokens=out, speculation=speculation, **kw)
+    sched = Scheduler(eng)
+    for r in synthetic_workload(n, prompt_len=prompt_len,
+                                max_new_tokens=out, vocab=cfg.vocab_size):
+        sched.submit(r)
+    done = sched.run()
+    assert len(done) == n
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in done)
+    return {r.rid: list(r.out_tokens) for r in done}, eng
+
+
+# ---------------------------------------------------------------------------
+# the bit-exactness oracle (self-draft = acceptance-1.0)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_self_draft_streams_bit_identical_gqa(smollm, k):
+    cfg, params = smollm
+    base, _ = _streams(cfg, params, "off")
+    spec, eng = _streams(cfg, params,
+                         SpeculationConfig(k=k, draft="self"))
+    assert spec == base
+    st = eng.spec_stats()
+    # greedy self-drafts are the verifier's own continuations: all accepted
+    assert st["n_spec_steps"] > 0
+    assert st["spec_accept_rate"] == pytest.approx(1.0)
+    assert st["spec_tokens_per_step"] > 1.0
+
+
+def test_self_draft_bit_identical_on_paged_kv(smollm):
+    cfg, params = smollm
+    base, _ = _streams(cfg, params, "off")
+    spec, eng = _streams(cfg, params,
+                         SpeculationConfig(k=4, draft="self"), kv="auto")
+    assert eng.kv.backend == "paged"
+    assert spec == base
+    assert eng.spec_stats()["spec_tokens_per_step"] > 1.0
+
+
+@pytest.mark.parametrize("fixture", ["moe", "mla"])
+def test_self_draft_bit_identical_moe_mla(fixture, request):
+    """MoE-dropless (count-independent dispatch) and MLA (latent cache)
+    verify multi-row slots exactly — dense and paged backends."""
+    cfg, params = request.getfixturevalue(fixture)
+    kw = dict(n=3, out=6)
+    base, _ = _streams(cfg, params, "off", **kw)
+    for kv in ("dense", "auto"):
+        spec, eng = _streams(cfg, params,
+                             SpeculationConfig(k=2, draft="self"),
+                             kv=kv, **kw)
+        assert spec == base, (fixture, kv)
+        assert eng.spec_stats()["n_spec_accepted"] > 0
+
+
+def test_foreign_draft_rejections_bit_exact(smollm):
+    """A reduced-config draft model with random weights proposes garbage
+    (near-zero acceptance) — every step exercises rejection + paged-KV
+    rollback, and the streams still match the non-speculative run."""
+    cfg, params = smollm
+    base, _ = _streams(cfg, params, "off")
+    sc = SpeculationConfig(k=4, draft="gemma-2b", min_accept=0.0)
+    spec, eng = _streams(cfg, params, sc, kv="auto")
+    assert spec == base
+    assert isinstance(eng.draft, ModelDraft)
+    assert eng.draft.cfg.name != cfg.name        # a real foreign model
+    st = eng.spec_stats()
+    assert st["n_spec_drafted"] > 0
+    assert st["n_spec_accepted"] < st["n_spec_drafted"]  # rollbacks fired
+
+
+def test_ngram_draft_bit_exact(smollm):
+    cfg, params = smollm
+    base, _ = _streams(cfg, params, "off")
+    spec, eng = _streams(cfg, params,
+                         SpeculationConfig(k=2, draft="ngram"))
+    assert isinstance(eng.draft, NGramDraft)
+    assert spec == base
+
+
+def test_preempt_resume_with_speculation(smollm):
+    """Preemption mid-speculation and cache-preserving resume (paged KV)
+    still land on the uninterrupted non-speculative stream."""
+    cfg, params = smollm
+    prompt = np.random.default_rng(5).integers(
+        0, cfg.vocab_size, 40).astype(np.int32)
+    kw = dict(max_batch=1, max_len=128, chunk=8, kv="auto",
+              prompt_len=40, max_new_tokens=8)
+
+    eng = make_engine(cfg, params,
+                      speculation=SpeculationConfig(k=2, draft="self"), **kw)
+    r = Request(rid=0, prompt=prompt, max_new_tokens=8)
+    assert eng.admit(r)
+    for _ in range(6):                 # 5 prefill steps + 1 spec decode step
+        eng.step()
+    assert 1 <= len(r.out_tokens) < 8
+    assert eng.preempt(0) is r
+    assert eng.admit(r)                # resume re-matches prompt pages
+    assert eng.kv.stats.n_prefix_hits == 1
+    while not r.done:
+        eng.step()
+
+    base = make_engine(cfg, params, speculation="off", **kw)
+    r2 = Request(rid=1, prompt=prompt, max_new_tokens=8)
+    assert base.admit(r2)
+    while not r2.done:
+        base.step()
+    assert list(r.out_tokens) == list(r2.out_tokens)
+
+
+def test_shared_prefix_pages_never_written_during_speculation(smollm):
+    """Rejected drafts roll a slot's tail back toward the shared-prefix
+    boundary — the indexed pages' device bytes must be bit-identical
+    before and after a speculating request decodes on top of them."""
+    cfg, params = smollm
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+    sc = SpeculationConfig(k=4, draft="gemma-2b", min_accept=0.0)
+    eng = make_engine(cfg, params, max_batch=2, max_len=128, chunk=8,
+                      kv="auto", prompt_len=40, max_new_tokens=8,
+                      speculation=sc)
+
+    sched = Scheduler(eng)
+    sched.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    sched.run()                        # cold run parks prompt pages
+    shared = sorted(eng.kv._node_of_page)
+    assert shared
+    snap = [{k: np.asarray(v)[:, shared] for k, v in g.items()}
+            for g in eng.kv.cache["groups"]]
+
+    sched2 = Scheduler(eng)
+    sched2.submit(Request(rid=1, prompt=prompt, max_new_tokens=8))
+    done = sched2.run()
+    assert len(done) == 1
+    assert eng.kv.stats.n_prefix_hits == 1
+    assert eng.spec_stats()["n_spec_drafted"] > 0      # speculation ran
+    for g, s in zip(eng.kv.cache["groups"], snap):
+        for name, arr in g.items():
+            assert np.array_equal(np.asarray(arr)[:, shared], s[name]), name
+
+
+# ---------------------------------------------------------------------------
+# draft sources (unit)
+# ---------------------------------------------------------------------------
+
+def test_ngram_propose_continues_matched_suffix():
+    d = NGramDraft(ngram=3)
+    ctx = {0: np.asarray([1, 2, 3, 4, 9, 1, 2], np.int64)}
+    out = d.propose(ctx, {0: 2})
+    assert out[0].tolist() == [3, 4]   # continuation of the earlier [1, 2]
+
+
+def test_ngram_propose_no_match_is_empty():
+    d = NGramDraft(ngram=3)
+    assert d.propose({0: np.arange(8, dtype=np.int64)}, {0: 2}) == {}
+    assert d.propose({0: np.asarray([1, 2], np.int64)}, {0: 2}) == {}
+
+
+def test_make_draft_resolves_sources(smollm):
+    cfg, params = smollm
+    self_d = make_draft(SpeculationConfig(k=2, draft="self"), cfg, params)
+    assert isinstance(self_d, ModelDraft) and self_d.cfg is cfg
+    with pytest.raises(NotImplementedError):
+        make_draft(SpeculationConfig(k=2, draft="mtp"), cfg, params)
+    with pytest.raises(KeyError):
+        make_draft(SpeculationConfig(k=2, draft="no-such-arch"), cfg,
+                   params)
+
+
+# ---------------------------------------------------------------------------
+# budget accounting under speculation
+# ---------------------------------------------------------------------------
+
+def _decode_ready(cfg, params, *, speculation, n_req=1, **kw):
+    """Engine with ``n_req`` slots past prefill (decoding phase)."""
+    eng = make_engine(cfg, params, max_batch=2, max_len=64, chunk=8,
+                      prompt_len=10, max_new_tokens=8,
+                      speculation=speculation, **kw)
+    rng = np.random.default_rng(0)
+    for rid in range(n_req):
+        p = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+        assert eng.admit(Request(rid=rid, prompt=p, max_new_tokens=8))
+    while any(eng._prompt_pos[i] < len(eng._pending[i])
+              for i in range(n_req)):
+        eng.unified_step(eng.plan_q_lens())
+    return eng
+
+
+def test_speculating_slot_costs_k_plus_1_rows(smollm):
+    cfg, params = smollm
+    eng = _decode_ready(cfg, params, n_req=2,
+                        speculation=SpeculationConfig(k=2, draft="self"))
+    # budget 4: both decode rows funded first, then drafts in admission
+    # order — slot 0 takes the remaining 2 rows, slot 1 gets none
+    q = eng.plan_q_lens(4)
+    assert q.tolist() == [3, 1]
+    assert eng._drafts[0] is not None and len(eng._drafts[0]) == 2
+    assert eng._drafts[1] is None
+    # a decode-only budget leaves no draft rows at all
+    q = eng.plan_q_lens(2)
+    assert q.tolist() == [1, 1]
+    assert eng._drafts == [None, None]
+
+
+def test_drafts_never_starve_prefill(smollm):
+    """Draft rows are priced before the prefill loop but the auto budget
+    keeps the chunk funded — a waiting prefill still gets rows."""
+    cfg, params = smollm
+    eng = _decode_ready(cfg, params, n_req=1,
+                        speculation=SpeculationConfig(k=4, draft="self"))
+    p = np.random.default_rng(1).integers(0, cfg.vocab_size,
+                                          10).astype(np.int32)
+    assert eng.admit(Request(rid=9, prompt=p, max_new_tokens=4))
+    q = eng.plan_q_lens(8)
+    assert q[0] == 5                   # 1 decode + 4 draft rows
+    assert q[1] == 3                   # the prefill rides the same step
+    assert int(q.sum()) == 8
+
+
+def test_draft_trimmed_by_generation_room(smollm):
+    """Full acceptance commits k+1 tokens; the planner never drafts past
+    ``max_new_tokens`` (k <= room)."""
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=2, max_len=64, chunk=8,
+                      prompt_len=10, max_new_tokens=2,
+                      speculation=SpeculationConfig(k=4, draft="self"))
+    p = np.random.default_rng(2).integers(0, cfg.vocab_size,
+                                          10).astype(np.int32)
+    assert eng.admit(Request(rid=0, prompt=p, max_new_tokens=2))
+    while eng._prompt_pos[0] < len(eng._pending[0]):
+        eng.unified_step(eng.plan_q_lens())
+    # 1 token out, 1 to go: room = 2 - 1 - 1 = 0 -> no drafting
+    q = eng.plan_q_lens()
+    assert q.tolist() == [1, 0] and eng._drafts[0] is None
+
+
+def test_planner_off_is_the_pre_speculation_planner(smollm):
+    """speculation="off" resolves to no draft source; the plan is the
+    plain decode-first Sarathi schedule, byte for byte."""
+    cfg, params = smollm
+    eng = _decode_ready(cfg, params, n_req=1, speculation="off")
+    assert eng.draft is None and eng.spec_k == 0
+    p = np.random.default_rng(3).integers(0, cfg.vocab_size,
+                                          10).astype(np.int32)
+    assert eng.admit(Request(rid=9, prompt=p, max_new_tokens=4))
+    assert eng.plan_q_lens().tolist() == [1, 8]
+    assert eng.plan_q_lens(5).tolist() == [1, 4]
+    assert eng.spec_stats()["n_spec_steps"] == 0
+
+
+def test_acceptance_ema_gates_drafting(smollm):
+    """A draft whose proposals keep getting rejected drives the EMA under
+    the gate — the planner stops paying for drafts (except probes)."""
+    cfg, params = smollm
+    sc = SpeculationConfig(k=4, draft="gemma-2b", min_accept=0.9,
+                           ema_alpha=0.5, probe_every=1000)
+    base, _ = _streams(cfg, params, "off", n=3, out=12)
+    spec, eng = _streams(cfg, params, sc, n=3, out=12)
+    assert spec == base
+    assert eng.accept_ema < sc.min_accept
+    st = eng.spec_stats()
+    # gated off after the first rejections: far fewer drafted rows than
+    # the ungated 4-per-slot-step worst case
+    assert 0 < st["n_spec_drafted"] < 4 * 3 * 12
+
+
+def test_no_starvation_under_poisson_load_with_spec(smollm):
+    from repro.serving.scheduler import mixed_workload
+
+    cfg, params = smollm
+    eng = make_engine(cfg, params, max_batch=2, max_len=96, chunk=8,
+                      prompt_len=48, max_new_tokens=5,
+                      speculation=SpeculationConfig(k=2, draft="self"))
+    sched = Scheduler(eng)
+    reqs = list(mixed_workload(6, short_len=10, n_long=2, long_len=48,
+                               max_new_tokens=5, vocab=cfg.vocab_size,
+                               arrival_rate=32.0, seed=3))
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run()
+    assert len(done) == len(reqs)
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in done)
+    m = sched.metrics()
+    assert m.n_incomplete == 0
+    assert m.n_spec_steps > 0          # counters surface in ServeMetrics
+    assert m.spec_tokens_per_step > 1.0
+    assert "spec=" in m.row()
+
+
+# ---------------------------------------------------------------------------
+# resolution (ServeSpec.speculation -> core.resolve.auto_speculation)
+# ---------------------------------------------------------------------------
+
+def test_explicit_k_clamps_to_chunk(smollm):
+    cfg, _ = smollm
+    spec = make_spec(cfg, chunk=4, speculation=8)
+    assert spec.speculation.k == 3     # k + 1 rows must fit the chunk
+    assert "speculation" in spec.provenance
+    assert "explicit" in spec.provenance["speculation"]
+    assert "k=3" in spec.describe()
+
+
+def test_auto_speculation_prices_decode_heavy(smollm):
+    cfg, _ = smollm
+    spec = make_spec(cfg, chunk=8, speculation="auto", prompt_len=8,
+                     max_new_tokens=24)
+    assert spec.speculation is not None and spec.speculation.k >= 1
+    assert spec.provenance["speculation"].startswith("auto:cost-model")
+    assert "tok/step" in spec.provenance["speculation"]
+    meta = spec.as_meta()
+    assert "k=" in meta["resolved"]["speculation"]
+
+
+def test_off_resolves_to_none(smollm):
+    cfg, _ = smollm
+    spec = make_spec(cfg, speculation="off")
+    assert spec.speculation is None
+    assert spec.as_meta()["resolved"]["speculation"] == "off"
+
+
+def test_sampling_temperature_rejects_speculation(smollm):
+    cfg, _ = smollm
+    with pytest.raises(ValueError, match="greedy"):
+        make_spec(cfg, speculation=2, temperature=0.8)
+    spec = make_spec(cfg, speculation="auto", temperature=0.8)
+    assert spec.speculation is None    # auto degrades to off
+
+
+def test_legacy_family_rejects_speculation():
+    cfg = C.get_reduced("recurrentgemma-9b")
+    with pytest.raises(ValueError, match="unified"):
+        make_spec(cfg, speculation=2)
+    spec = make_spec(cfg, speculation="auto")
+    assert spec.speculation is None
+
+
+def test_speculation_config_validation():
+    with pytest.raises(ValueError):
+        SpeculationConfig(k=0)
+    with pytest.raises(ValueError):
+        SpeculationConfig(k=2, min_accept=1.5)
+    with pytest.raises(ValueError):
+        SpeculationConfig(k=2, ema_alpha=0.0)
+    sc = SpeculationConfig(k=3, draft="self")
+    assert "k=3" in sc.describe() and "self" in sc.describe()
+
+
+def test_auto_token_budget_funds_verify_rows(smollm):
+    cfg, _ = smollm
+    spec = make_spec(cfg, chunk=8, max_batch=4, token_budget="auto",
+                     speculation=SpeculationConfig(k=4, draft="ngram"))
+    assert spec.token_budget == 4 * 5 + 8      # slots x (1+k) + chunk
+    assert "k=4" in spec.provenance["token_budget"]
