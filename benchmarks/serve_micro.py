@@ -179,6 +179,24 @@ def run_mixed(quick: bool = False):
             m.ttft_p99 * 1e6,
             f"itl_p99={m.itl_p99*1e3:.2f}ms "
             f"n={m.n_requests} incomplete={m.n_incomplete}"))
+        if scen == "mixed":
+            # retrace regression gate (jax.log_compiles): the unified step
+            # runs on fixed (B, chunk) buffers, so re-serving the SAME
+            # workload on the warm engine must compile NOTHING — a single
+            # recompile here means a shape/dtype/static-arg leak that
+            # shows up in production as a per-request latency cliff
+            from repro.analysis.compile_watch import CompileWatch
+            with CompileWatch(match="_unified_impl") as watch:
+                llm.serve(list(mk()))
+            if watch.count > 0:
+                raise RuntimeError(
+                    f"unified step retraced on a warm engine: "
+                    f"{watch.count} compile(s) re-serving an identical "
+                    f"workload — {watch.matching()[:2]}")
+            rows.append((f"serve_mixed/{arch}/{scen}/unified/retraces",
+                         float(watch.count),
+                         "compiles re-serving identical workload "
+                         "(gate: must be 0)"))
 
     # chaos scenario: a priority/deadline-tiered workload under injected
     # NaN and straggler faults — the robustness counters in the artifact

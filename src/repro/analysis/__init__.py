@@ -1,0 +1,26 @@
+"""repro-lint + trace-contract static analysis (docs/analysis.md).
+
+Two layers keep the hot-path invariants machine-checked instead of
+ROADMAP folklore:
+
+* ``repro.analysis.lint`` — an AST linter over ``src/`` with the
+  repo-specific rules R1-R5 (``python -m repro.analysis.lint src/``).
+* ``repro.analysis.trace_contract`` — traces the lowered program on a
+  CPU mesh and cross-checks it against ``cost_model.comm_census``:
+  collective census, retrace detector, host-callback/dynamic-shape scan
+  (``python -m repro.analysis.trace_contract``).
+"""
+
+# Submodules import lazily so `python -m repro.analysis.lint` does not
+# re-import the module it is executing (runpy double-import warning).
+__all__ = ["Finding", "lint_paths", "lint_sources", "CompileWatch"]
+
+
+def __getattr__(name):
+    if name in ("Finding", "lint_paths", "lint_sources"):
+        from repro.analysis import lint
+        return getattr(lint, name)
+    if name == "CompileWatch":
+        from repro.analysis.compile_watch import CompileWatch
+        return CompileWatch
+    raise AttributeError(name)

@@ -1,0 +1,82 @@
+"""Capture XLA compile events via ``jax.log_compiles``.
+
+The retrace detector (trace contract check (b) and the
+``benchmarks/serve_micro.py`` regression gate) needs to count how many
+times the unified step actually compiles across a workload sweep — a
+silent retrace otherwise only shows up as a latency cliff.  jax logs
+"Compiling <fn> ..." at WARNING level on the ``jax._src`` logger tree
+whenever ``jax_log_compiles`` is on; this context manager flips the
+flag, attaches a capturing handler to the ``jax`` root logger, and
+restores everything on exit.
+"""
+
+from __future__ import annotations
+
+import logging
+from typing import Optional
+
+
+class _Capture(logging.Handler):
+    def __init__(self, events: list):
+        super().__init__(level=logging.DEBUG)
+        self.events = events
+        self._seen: set = set()
+
+    def emit(self, record: logging.LogRecord) -> None:
+        try:
+            msg = record.getMessage()
+        except Exception:
+            return
+        # the same record propagates through every ancestor logger the
+        # handler is attached to — count it once
+        if id(record) in self._seen:
+            return
+        self._seen.add(id(record))
+        if msg.startswith("Compiling "):
+            self.events.append(msg)
+
+
+class CompileWatch:
+    """``with CompileWatch() as w: ... ; w.count`` — XLA compiles seen.
+
+    ``match``: only count compile events whose message contains the
+    substring (e.g. ``"_unified_impl"`` to isolate the serving step from
+    draft-model or helper compiles).
+    """
+
+    def __init__(self, match: str = ""):
+        self.match = match
+        self.events: list[str] = []
+        self._handler: Optional[_Capture] = None
+        self._prev_flag = None
+
+    @property
+    def count(self) -> int:
+        return sum(1 for e in self.events if self.match in e)
+
+    def matching(self) -> list[str]:
+        return [e for e in self.events if self.match in e]
+
+    # "jax" alone would suffice while child loggers propagate (the
+    # default); the explicit children keep the watch working if a logging
+    # config flips propagate off — the id(record) dedup in _Capture makes
+    # the overlap harmless.
+    _LOGGERS = ("jax", "jax._src.interpreters.pxla", "jax._src.dispatch")
+
+    def __enter__(self) -> "CompileWatch":
+        import jax
+        self._prev_flag = jax.config.jax_log_compiles
+        jax.config.update("jax_log_compiles", True)
+        self._handler = _Capture(self.events)
+        for name in self._LOGGERS:
+            logging.getLogger(name).addHandler(self._handler)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        import jax
+        for name in self._LOGGERS:
+            logging.getLogger(name).removeHandler(self._handler)
+        jax.config.update("jax_log_compiles", self._prev_flag)
+
+
+__all__ = ["CompileWatch"]

@@ -1,0 +1,25 @@
+"""repro-lint rule registry.
+
+Each rule module exports a ``RULE`` instance with:
+
+* ``id`` / ``title`` — the stable identifier and one-line summary,
+* a class docstring carrying the rationale and the incident that
+  motivated the rule (moved here from ROADMAP prose so the invariant is
+  machine-checked, not folklore),
+* ``check(ctx)`` yielding ``Finding``s,
+* ``FIXTURE_BAD`` / ``FIXTURE_GOOD`` — the seeded-violation and clean
+  snippets used by ``--self-test`` and ``tests/test_analysis.py``.
+
+Suppression: ``# repro-lint: disable=<ID>`` on the flagged line or the
+line above, with a justification comment.
+"""
+
+from repro.analysis.rules.r1_sort_in_shard_map import RULE as R1
+from repro.analysis.rules.r2_host_sync import RULE as R2
+from repro.analysis.rules.r3_traced_branch import RULE as R3
+from repro.analysis.rules.r4_kernel_contract import RULE as R4
+from repro.analysis.rules.r5_serving_determinism import RULE as R5
+
+RULES = (R1, R2, R3, R4, R5)
+
+__all__ = ["RULES", "R1", "R2", "R3", "R4", "R5"]

@@ -1,0 +1,139 @@
+"""R2: no host-sync calls reachable from jitted code."""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.astutils import normalized
+from repro.analysis.lint import Finding
+
+# attribute calls that force a device->host sync on a jax array
+_SYNC_METHODS = {"item", "block_until_ready", "tolist", "copy_to_host_async"}
+# fully-resolved callables that materialize device values on the host
+_SYNC_FNS = {"np.asarray", "np.array", "jax.device_get", "np.copy"}
+# builtins that concretize a traced value when fed a device expression
+_CONCRETIZERS = {"float", "int", "bool"}
+
+
+def _contains_device_call(node: ast.AST, mod) -> bool:
+    """True when the expression contains a jnp./jax. call — the
+    unambiguous `float(jnp.mean(x))` host-sync smell."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            name = normalized(mod, sub.func)
+            if name and name.split(".")[0] in ("jnp", "jax", "lax"):
+                return True
+    return False
+
+
+class HostSyncRule:
+    """No host-sync calls reachable from the jitted unified step, the
+    draft sources, or the kernel wrappers.
+
+    The serving engine runs ONE jitted ``(B, chunk)`` unified step; its
+    host control loop (``Engine.unified_step``) intentionally syncs
+    (``np.asarray`` on sampled ids, wall-clock timestamps) AFTER the
+    jitted program returns — that separation is the whole latency story.
+    A ``.item()`` / ``np.asarray`` / ``jax.device_get`` /
+    ``float(jnp...)`` *inside* the traced region either fails at trace
+    time (ConcretizationTypeError at best) or, via callbacks, silently
+    serializes the device stream mid-step.
+
+    The rule flags, in any function passed to ``jax.jit`` / ``shard_map``
+    or reachable from one (plus the ``kernels/ops.py`` wrappers, which
+    always run under an outer jit): ``.item()``, ``.tolist()``,
+    ``.block_until_ready()``, ``jax.device_get``, ``np.asarray`` /
+    ``np.array``, and ``float()``/``int()``/``bool()`` whose argument
+    contains a ``jnp.``/``jax.`` call.  Trace-time shape arithmetic
+    (``int(math.ceil(...))``, ``x.shape``) is deliberately not flagged.
+    """
+
+    id = "R2"
+    title = "no host-sync calls reachable from jitted code"
+
+    def _roots(self, idx):
+        roots = list(idx.jit_roots) + list(idx.shard_roots)
+        # kernel wrappers run under the caller's jit
+        for key, fi in idx.by_key.items():
+            if fi.module.name.endswith("kernels.ops") \
+                    and "." not in fi.qualname \
+                    and not fi.qualname.startswith("_"):
+                roots.append(fi)
+        return roots
+
+    def check(self, ctx) -> Iterable[Finding]:
+        idx = ctx.index
+        scope = idx.reachable(self._roots(idx))
+        for fi in scope.values():
+            mod = fi.module
+            for node in ast.walk(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                # .item() / .block_until_ready() / .tolist()
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in _SYNC_METHODS:
+                    yield Finding(
+                        self.id, str(mod.path), node.lineno, node.col_offset,
+                        f"`.{node.func.attr}()` in jit-reachable "
+                        f"{fi.qualname}: device->host sync inside the traced "
+                        "region (move it to the host control loop)",
+                        symbol=fi.qualname)
+                    continue
+                name = normalized(mod, node.func)
+                if name in _SYNC_FNS:
+                    yield Finding(
+                        self.id, str(mod.path), node.lineno, node.col_offset,
+                        f"`{name}` in jit-reachable {fi.qualname}: "
+                        "materializes device values on the host inside the "
+                        "traced region",
+                        symbol=fi.qualname)
+                elif name in _CONCRETIZERS and node.args \
+                        and _contains_device_call(node.args[0], mod):
+                    yield Finding(
+                        self.id, str(mod.path), node.lineno, node.col_offset,
+                        f"`{name}(jnp...)` in jit-reachable {fi.qualname}: "
+                        "concretizes a traced value (host sync / "
+                        "ConcretizationTypeError)",
+                        symbol=fi.qualname)
+
+    FIXTURE_BAD = '''
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _step_impl(params, tokens):
+    logits = params @ tokens
+    best = float(jnp.max(logits))      # concretizes a traced value
+    arr = np.asarray(logits)           # host materialization in the trace
+    return logits.item()               # device->host sync
+
+
+def make_step():
+    return jax.jit(_step_impl)
+'''
+
+    FIXTURE_GOOD = '''
+import jax
+import jax.numpy as jnp
+import numpy as np
+import math
+
+
+def _step_impl(params, tokens):
+    cap = int(math.ceil(tokens.shape[0] * 1.25))   # trace-time shape math
+    return (params @ tokens)[:cap]
+
+
+def make_step():
+    return jax.jit(_step_impl)
+
+
+def host_loop(step, params, tokens):
+    out = step(params, tokens)
+    return np.asarray(out)             # fine: host side, after the jit
+'''
+
+
+RULE = HostSyncRule()

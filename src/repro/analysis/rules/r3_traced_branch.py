@@ -1,0 +1,304 @@
+"""R3: no Python branching on traced values in jitted functions."""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable
+
+from repro.analysis.astutils import FuncInfo, normalized
+from repro.analysis.lint import Finding
+
+# attribute reads that stay device-valued (everything else on a traced
+# name — .shape, .ndim, .dtype, config fields — is trace-time static)
+_DEVICE_ATTRS = {"T", "mT", "at", "real", "imag"}
+_STATIC_CALLS = {"len", "isinstance", "getattr", "hasattr", "callable",
+                 "int", "float", "bool", "str", "repr", "type", "id",
+                 # shape/dtype inspection: host ints even on traced args
+                 "ndim", "shape", "size", "result_type", "issubdtype",
+                 "can_cast"}
+_STATIC_ATTRS = {"shape", "ndim", "size", "dtype", "itemsize", "nbytes"}
+
+# dtype literals: `x.dtype == jnp.int32` is trace-time static
+_DTYPE_RE = re.compile(
+    r"^(jnp|np)\.(u?int\d+|float\d+|bfloat16|float0|bool_?|complex\d+)$")
+
+# parameter annotations naming only host-level Python types — such an
+# argument cannot be a traced array, so it does not seed the taint set
+_STATIC_ANN_NAMES = {
+    "int", "str", "bool", "float", "bytes", "tuple", "list", "dict", "set",
+    "frozenset", "type", "None", "NoneType", "Optional", "Union", "Tuple",
+    "List", "Dict", "Set", "FrozenSet", "Mapping", "Sequence", "Iterable",
+    "Collection", "Literal",
+}
+
+
+def _ann_static(node) -> bool:
+    """True when an annotation names only host-level types (``kind: str``,
+    ``shape: tuple``, ``mode: Optional[str]``) — conservative on anything
+    array-ish, unknown, or absent."""
+    if node is None:
+        return False
+    if isinstance(node, ast.Constant):
+        if isinstance(node.value, str):   # forward-ref string annotation
+            try:
+                return _ann_static(ast.parse(node.value, mode="eval").body)
+            except SyntaxError:
+                return False
+        return True   # None / Literal member / Ellipsis
+    if isinstance(node, ast.Name):
+        return node.id in _STATIC_ANN_NAMES
+    if isinstance(node, ast.Attribute):   # typing.Optional, t.Sequence
+        return node.attr in _STATIC_ANN_NAMES
+    if isinstance(node, ast.Subscript):
+        return _ann_static(node.value) and _ann_static(node.slice)
+    if isinstance(node, ast.Tuple):
+        return all(_ann_static(e) for e in node.elts)
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.BitOr):
+        return _ann_static(node.left) and _ann_static(node.right)
+    return False
+
+
+class _Taint:
+    """Single-function forward taint: positional parameters without
+    defaults seed the traced set (the repo convention — static config
+    rides keyword-only or defaulted params); assignments propagate."""
+
+    def __init__(self, fi: FuncInfo):
+        self.mod = fi.module
+        seeds = set(fi.positional_params())
+        args = getattr(fi.node, "args", None)
+        if args is not None:
+            for arg in list(getattr(args, "posonlyargs", [])) + list(args.args):
+                if arg.arg in seeds and _ann_static(arg.annotation):
+                    seeds.discard(arg.arg)   # annotated host-level type
+        self.tainted: set = seeds
+        body = getattr(fi.node, "body", None)
+        stmts = body if isinstance(body, list) else []
+        for _ in range(3):   # small fixpoint for forward references
+            before = set(self.tainted)
+            self._scan(stmts)
+            if self.tainted == before:
+                break
+
+    def _scan(self, stmts) -> None:
+        for node in stmts:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue   # nested defs get their own pass
+            if isinstance(node, ast.Assign):
+                val_tainted = not self.static(node.value)
+                for tgt in node.targets:
+                    self._mark(tgt, val_tainted)
+            elif isinstance(node, ast.AugAssign):
+                if not self.static(node.value) or not self.static(node.target):
+                    self._mark(node.target, True)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                self._mark(node.target, not self.static(node.value))
+            self._scan([c for c in ast.iter_child_nodes(node)
+                        if isinstance(c, ast.stmt)])
+
+    @staticmethod
+    def _mark_names(target: ast.AST, out: set) -> None:
+        for n in ast.walk(target):
+            if isinstance(n, ast.Name):
+                out.add(n.id)
+
+    def _mark(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._mark(el, tainted)
+        elif isinstance(target, ast.Starred):
+            self._mark(target.value, tainted)
+
+    # -- expression classification -----------------------------------------
+
+    def static(self, node: ast.AST) -> bool:
+        """True when the expression is trace-time static (safe to branch
+        on); False when it may hold a traced array value."""
+        if isinstance(node, ast.Constant):
+            return True
+        if isinstance(node, ast.Name):
+            return node.id not in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return True
+            if node.attr in _DEVICE_ATTRS:
+                return self.static(node.value)
+            # cfg.field / self.field: config attribute access is static
+            return True
+        if isinstance(node, ast.Subscript):
+            return self.static(node.value)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return True   # identity tests are python-level, trace-safe
+            if all(isinstance(op, (ast.In, ast.NotIn)) for op in node.ops) \
+                    and isinstance(node.left, ast.Constant) \
+                    and isinstance(node.left.value, str):
+                return True   # `"w_gate" in p`: pytree-structure membership
+            if node.comparators and all(
+                    _DTYPE_RE.match(normalized(self.mod, c) or "")
+                    for c in node.comparators):
+                return True   # dtype-literal comparison is trace-static
+            return self.static(node.left) and all(
+                self.static(c) for c in node.comparators)
+        if isinstance(node, (ast.BoolOp,)):
+            return all(self.static(v) for v in node.values)
+        if isinstance(node, ast.BinOp):
+            return self.static(node.left) and self.static(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.static(node.operand)
+        if isinstance(node, ast.IfExp):
+            return all(self.static(v) for v in (node.test, node.body,
+                                                node.orelse))
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return all(self.static(v) for v in node.elts)
+        if isinstance(node, ast.Call):
+            name = normalized(self.mod, node.func) or ""
+            last = name.rpartition(".")[-1]
+            if last in _STATIC_CALLS or name.startswith("math."):
+                return True
+            if name.split(".")[0] in ("jnp", "jax", "lax"):
+                return False   # device-valued result
+            # any call fed a tainted argument may return a traced value
+            args = list(node.args) + [k.value for k in node.keywords]
+            return all(self.static(a) for a in args)
+        if isinstance(node, (ast.JoinedStr, ast.FormattedValue)):
+            return True
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            if not all(self.static(g.iter) for g in node.generators):
+                return False
+            # iterables are static -> comp targets are static names too
+            targets: set = set()
+            for g in node.generators:
+                self._mark_names(g.target, targets)
+            saved = self.tainted
+            self.tainted = saved - targets
+            try:
+                ok = all(self.static(i)
+                         for g in node.generators for i in g.ifs)
+                if ok and isinstance(node, ast.DictComp):
+                    ok = self.static(node.key) and self.static(node.value)
+                elif ok:
+                    ok = self.static(node.elt)
+            finally:
+                self.tainted = saved
+            return ok
+        if isinstance(node, ast.Starred):
+            return self.static(node.value)
+        return False
+
+
+def _own_branches(func_node):
+    """If/While statements lexically inside ``func_node`` but NOT inside
+    a nested def (nested defs are analyzed with their own taint seeds)."""
+    out = []
+
+    def visit(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)) and child is not func_node:
+                continue
+            if isinstance(child, (ast.If, ast.While)):
+                out.append(child)
+            visit(child)
+
+    visit(func_node)
+    return out
+
+
+class TracedBranchRule:
+    """No Python ``if``/``while`` on traced values in functions passed to
+    ``jax.jit`` / ``shard_map`` / ``lax.cond``-family transforms.
+
+    A Python branch on a traced value either raises
+    ``ConcretizationTypeError`` at trace time or — worse, when the value
+    happens to be concrete on some call paths — silently bakes ONE branch
+    into the compiled program and retraces per distinct value, which on
+    the serving hot path shows up only as a latency cliff (the recompile
+    hazard the trace contract's retrace detector measures end-to-end).
+    Branch on trace-time statics (shapes, config) or use ``lax.cond`` /
+    ``jnp.where``.
+
+    Detection: inside the jit/shard_map-reachable set, positional
+    parameters without defaults are assumed traced (the repo convention:
+    static config rides keyword-only params — see
+    ``_moe_shard_dropless_fn``) UNLESS annotated with a host-level type
+    (``kind: str``, ``shape: tuple``, ``mode: Optional[str]``); taint
+    propagates through assignments, and ``.shape``/``len()``/
+    ``jnp.ndim()``/config-attribute/dtype-literal/string-key-membership
+    derivations untaint.  An ``if``/``while`` whose test may hold a
+    traced value is flagged.  Annotating a static parameter is therefore
+    both documentation and lint compliance.
+    """
+
+    id = "R3"
+    title = "no Python if/while on traced values in jitted functions"
+
+    def check(self, ctx) -> Iterable[Finding]:
+        idx = ctx.index
+        roots = list(idx.jit_roots) + list(idx.shard_roots) \
+            + list(idx.branch_roots)
+        scope = idx.reachable(roots)
+        for fi in scope.values():
+            if isinstance(fi.node, ast.Lambda):
+                continue
+            taint = _Taint(fi)
+            for node in _own_branches(fi.node):
+                if not taint.static(node.test):
+                    kw = "while" if isinstance(node, ast.While) else "if"
+                    yield Finding(
+                        self.id, str(fi.module.path), node.lineno,
+                        node.col_offset,
+                        f"Python `{kw}` on a possibly-traced value in jitted "
+                        f"{fi.qualname}: retrace/ConcretizationTypeError "
+                        "hazard — branch on shapes/config or use lax.cond",
+                        symbol=fi.qualname)
+
+    FIXTURE_BAD = '''
+import jax
+import jax.numpy as jnp
+
+
+def _impl(params, x):
+    y = x @ params
+    if y.sum() > 0:            # traced-value branch
+        y = y * 2
+    while jnp.max(y) > 1.0:    # traced-value loop
+        y = y / 2
+    return y
+
+
+def make():
+    return jax.jit(_impl)
+'''
+
+    FIXTURE_GOOD = '''
+import jax
+import jax.numpy as jnp
+
+
+def _impl(params, x, *, temperature=0.0, cfg=None):
+    b, h = x.shape
+    if b > 1:                          # shape branch: static
+        x = x.reshape(b, h)
+    if temperature > 0:                # defaulted knob: static
+        x = x / temperature
+    if cfg is not None and cfg.scale:  # config attribute: static
+        x = x * cfg.scale
+    y = jnp.where(x.sum() > 0, x * 2, x)   # traced select: fine
+    return y @ params
+
+
+def make():
+    return jax.jit(_impl)
+'''
+
+
+RULE = TracedBranchRule()

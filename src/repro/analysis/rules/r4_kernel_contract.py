@@ -1,0 +1,163 @@
+"""R4: every kernel wrapper bumps its trace counter and has an oracle."""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from repro.analysis.astutils import ModuleInfo, resolve
+from repro.analysis.lint import Finding
+
+_EXEMPT = {"reset_counters"}
+
+
+def _is_counter_module(mod: ModuleInfo) -> bool:
+    """A kernel-wrapper module declares `counters = collections.Counter()`
+    at top level (the kernels/ops.py idiom)."""
+    for node in mod.tree.body:
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Name) and t.id == "counters":
+                    return True
+    return False
+
+
+def _counter_bump(fn: ast.FunctionDef) -> Optional[str]:
+    """The string key of the first `counters[...] += 1` in the body."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.AugAssign) and isinstance(node.op, ast.Add) \
+                and isinstance(node.target, ast.Subscript) \
+                and isinstance(node.target.value, ast.Name) \
+                and node.target.value.id == "counters":
+            sl = node.target.slice
+            if isinstance(sl, ast.Constant) and isinstance(sl.value, str):
+                return sl.value
+    return None
+
+
+def _calls_kernel(mod: ModuleInfo, fn: ast.FunctionDef) -> bool:
+    """True when the wrapper dispatches to an imported `_kernel` impl."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id.startswith("_") \
+                and node.func.id in mod.imports:
+            return True
+    return False
+
+
+def _module_bindings(mod: ModuleInfo) -> set:
+    names = set()
+    for node in mod.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name):
+            names.add(node.target.id)
+    return names
+
+
+class KernelContractRule:
+    """Every ``kernels/ops.py`` wrapper must bump its trace counter and
+    have a ``ref.py`` oracle.
+
+    This is the silent-fallback gate moved from benchmark-time to
+    lint-time: the serving graph asserts kernels are *traced into* the
+    jitted program by counting wrapper invocations at trace time
+    (``ops.counters``), and every kernel's numerics are pinned by an
+    allclose sweep against its pure-jnp ``<name>_ref`` oracle.  A wrapper
+    added without the counter bump silently disappears from the
+    kernels-lane coverage (the benchmark gate only notices when the whole
+    policy falls back); one without an oracle has no independent source
+    of truth for bit-exactness.
+
+    Applies to modules that declare ``counters = Counter()`` at top
+    level.  Each public top-level function dispatching to an imported
+    ``_kernel`` implementation must (a) contain
+    ``counters["<its own name>"] += 1`` and (b) have ``<name>_ref``
+    bound in the module (the re-exported ``ref.py`` oracle) or defined
+    in the sibling ``ref`` module.
+    """
+
+    id = "R4"
+    title = "kernel wrappers bump their counter and have a ref.py oracle"
+
+    def check(self, ctx) -> Iterable[Finding]:
+        for mod in ctx.modules:
+            if not _is_counter_module(mod):
+                continue
+            bindings = _module_bindings(mod)
+            ref_mod = None
+            for m in ctx.modules:
+                if m.name.rsplit(".", 1)[-1] == "ref" \
+                        and m.name.rsplit(".", 2)[0] == mod.name.rsplit(".", 2)[0]:
+                    ref_mod = m
+            ref_bindings = _module_bindings(ref_mod) if ref_mod else set()
+            for node in mod.tree.body:
+                if not isinstance(node, ast.FunctionDef):
+                    continue
+                name = node.name
+                if name.startswith("_") or name in _EXEMPT \
+                        or name.endswith("_ref"):
+                    continue
+                if not _calls_kernel(mod, node):
+                    continue
+                bump = _counter_bump(node)
+                if bump is None:
+                    yield Finding(
+                        self.id, str(mod.path), node.lineno, node.col_offset,
+                        f"kernel wrapper `{name}` does not bump "
+                        f'`counters["{name}"]` — it is invisible to the '
+                        "traced-into-the-graph assertions", symbol=name)
+                elif bump != name:
+                    yield Finding(
+                        self.id, str(mod.path), node.lineno, node.col_offset,
+                        f"kernel wrapper `{name}` bumps counter `{bump}` "
+                        "instead of its own name", symbol=name)
+                oracle = f"{name}_ref"
+                if oracle not in bindings and oracle not in ref_bindings:
+                    yield Finding(
+                        self.id, str(mod.path), node.lineno, node.col_offset,
+                        f"kernel wrapper `{name}` has no `{oracle}` oracle "
+                        "(ref.py) — no independent source of truth for the "
+                        "allclose sweep", symbol=name)
+
+    FIXTURE_BAD = '''
+import collections
+from repro.kernels.moe_gemm import moe_gemm as _moe_gemm
+
+counters = collections.Counter()
+
+
+def moe_gemm(x, w, **kw):
+    # missing counter bump, and no moe_gemm_ref oracle anywhere
+    return _moe_gemm(x, w, **kw)
+'''
+
+    FIXTURE_GOOD = '''
+import collections
+from repro.kernels.moe_gemm import moe_gemm as _moe_gemm
+from repro.kernels import ref
+
+counters = collections.Counter()
+
+
+def reset_counters():
+    counters.clear()
+
+
+def moe_gemm(x, w, **kw):
+    counters["moe_gemm"] += 1
+    return _moe_gemm(x, w, **kw)
+
+
+moe_gemm_ref = ref.moe_gemm_ref
+'''
+
+
+RULE = KernelContractRule()

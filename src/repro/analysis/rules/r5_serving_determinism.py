@@ -1,0 +1,152 @@
+"""R5: no nondeterminism in serving/ outside faults.py."""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional
+
+from repro.analysis.astutils import normalized
+from repro.analysis.lint import Finding
+
+# wall-clock entropy (time.perf_counter/monotonic/sleep are exempt:
+# monotonic metrics timestamps and pacing, not decision entropy)
+_CLOCK_FNS = {"time.time", "time.time_ns"}
+# the stdlib global-state RNG and numpy's legacy global RNG
+_GLOBAL_RNG_PREFIXES = ("random.",)
+_NP_LEGACY = {"np.random." + f for f in
+              ("rand", "randn", "randint", "random", "choice", "shuffle",
+               "permutation", "seed", "uniform", "normal", "poisson",
+               "exponential")}
+_EXEMPT_FILES = ("faults.py",)
+
+
+def _first_arg_entropy(call: ast.Call, mod) -> bool:
+    """True when a seed argument is itself derived from a clock/RNG."""
+    for node in ast.walk(call):
+        if node is call or not isinstance(node, ast.Call):
+            continue
+        name = normalized(mod, node.func) or ""
+        if name in _CLOCK_FNS or name.startswith(_GLOBAL_RNG_PREFIXES):
+            return True
+    return False
+
+
+class ServingDeterminismRule:
+    """No nondeterminism in ``serving/`` outside ``faults.py`` and
+    metrics timestamps.
+
+    Determinism is what makes fault replay and the bit-exactness tests
+    meaningful: a serving trace (admissions, preemptions, speculation
+    accept/reject, chaos schedules) must replay identically from a seed,
+    and the chaos lane diffs replayed runs token-for-token.  One
+    ``time.time()``-seeded decision or global-RNG draw anywhere in the
+    scheduler/engine silently breaks that — it still passes every
+    functional test and only shows up as an unreproducible incident.
+
+    Flags, in ``serving/`` files other than ``faults.py`` (the fault
+    injector owns its own seeded entropy): ``time.time``/``time_ns``,
+    stdlib ``random.*``, numpy's legacy global RNG
+    (``np.random.rand``...), ``np.random.default_rng()`` with NO seed,
+    and ``jax.random.PRNGKey``/``key`` seeded from a clock or RNG.
+    ``time.perf_counter``/``monotonic``/``sleep`` stay legal — monotonic
+    metrics timestamps and pacing are not decision entropy.
+    """
+
+    id = "R5"
+    title = "no nondeterminism in serving/ outside faults.py"
+
+    def _applies(self, mod) -> bool:
+        # fixture modules named fixture_*_r5 count as serving/ files so the
+        # self-test and test fixtures exercise the rule without a src tree
+        if mod.name.startswith("fixture_") and mod.name.endswith("_r5"):
+            return True
+        parts = mod.name.split(".")
+        if "serving" not in parts:
+            return False
+        return mod.path.name not in _EXEMPT_FILES
+
+    def check(self, ctx) -> Iterable[Finding]:
+        for mod in ctx.modules:
+            if not self._applies(mod):
+                continue
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = normalized(mod, node.func)
+                if name is None:
+                    continue
+                f: Optional[str] = None
+                if name in _CLOCK_FNS:
+                    f = (f"`{name}()` in serving/: wall-clock entropy breaks "
+                         "fault replay — use time.perf_counter for metrics "
+                         "timestamps or a seeded rng for decisions")
+                elif name.startswith(_GLOBAL_RNG_PREFIXES):
+                    f = (f"`{name}` in serving/: stdlib global RNG is "
+                         "unseeded shared state — use "
+                         "np.random.default_rng(seed)")
+                elif name in _NP_LEGACY:
+                    f = (f"`{name}` in serving/: numpy legacy global RNG — "
+                         "use np.random.default_rng(seed)")
+                elif name == "np.random.default_rng" and not node.args \
+                        and not node.keywords:
+                    f = ("`np.random.default_rng()` without a seed in "
+                         "serving/: draws are unreproducible across runs")
+                elif name in ("jax.random.PRNGKey", "jax.random.key") \
+                        and _first_arg_entropy(node, mod):
+                    f = (f"`{name}` seeded from a clock/RNG in serving/: "
+                         "the key must derive from the spec seed")
+                if f:
+                    yield Finding(self.id, str(mod.path), node.lineno,
+                                  node.col_offset, f)
+
+    FIXTURE_BAD = '''
+import time
+import random
+import numpy as np
+import jax
+
+
+def admit(queue):
+    if random.random() < 0.5:            # global RNG decision
+        return queue.pop()
+    return None
+
+
+def stamp():
+    return time.time()                   # wall clock, not perf_counter
+
+
+def make_rng():
+    return np.random.default_rng()       # unseeded
+
+
+def make_key():
+    return jax.random.PRNGKey(int(time.time()))   # clock-seeded key
+'''
+
+    FIXTURE_GOOD = '''
+import time
+import numpy as np
+import jax
+
+
+def admit(queue, rng):
+    if rng.random() < 0.5:               # caller-provided seeded rng
+        return queue.pop()
+    return None
+
+
+def stamp():
+    return time.perf_counter()           # monotonic metrics timestamp
+
+
+def make_rng(seed):
+    return np.random.default_rng(seed)
+
+
+def make_key(seed):
+    return jax.random.PRNGKey(seed)
+'''
+
+
+RULE = ServingDeterminismRule()

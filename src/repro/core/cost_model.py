@@ -312,76 +312,290 @@ def compute_latency(model: ModelConfig, strat: Strategy, work: Workload,
 # Eq. 5 / 12 / 13: communication latency per rank per layer
 # ---------------------------------------------------------------------------
 
-def _moe_lambda_hybrid(model: ModelConfig, strat: Strategy, work: Workload,
-                       cluster: ClusterSpec) -> float:
-    """MoE-block comm under hybrid TP-EP (Eq. 13), fused or unfused.
+@dataclasses.dataclass(frozen=True)
+class Collective:
+    """One collective the strategy's per-layer program issues.
 
-    unfused:  AR(bsh, tp)  then  2 x A2A(bshk, ep)   at FULL hidden width
-    fused:    RS-A2A-AG — the A2A operates on hidden states already sharded
-              1/tp, so inter-node volume drops by 1/tp (Eq. 13); with
-              ``comm_algo == 'fused'`` intra- and inter-node rounds overlap
-              (Fig. 9) so the wall time is max(intra, inter) + epilogue.
+    ``kind``:  all_reduce | all_gather | reduce_scatter | all_to_all
+    ``axis``:  logical axis group — "tp" (the MoE/attention TP group),
+               "ep" (the expert-parallel group), "guard" (tp ∪ ep — the
+               rank-uniform overflow predicate of the count-bounded
+               exchange), "mesh" (all mesh axes — the aux-loss pmean).
+    ``count``: issues per Decoder layer (already multiplied by the
+               micro-chunk count C where the op runs once per chunk).
+    ``phase``: program position — attn | resync | counts | moe_dispatch |
+               moe_expert | moe_combine | moe_epilogue | shared | aux |
+               overflow_guard.
+    ``bytes``/``degree``/``link``: the alpha-beta pricing inputs
+               (``bytes`` is the model-priced payload, NOT the padded
+               buffer extent the implementation puts on the wire).
+    ``priced``: whether ``comm_latency`` charges this entry.  Unpriced
+               entries are metadata-sized (the int32 counts header, the
+               scalar aux pmean, the overflow pmax) or deliberately
+               outside the Eq. 5/12/13 scope (shared-expert epilogue,
+               token-unslice AG) — the census still lists them so the
+               trace contract can demand the lowered program contain
+               EXACTLY these collectives and no others.
+    ``traceable``: visible as a collective primitive in the shard_map
+               jaxpr of ``models.moe.moe_block``.  Attention-block ARs
+               and layout-resync AGs are inserted by GSPMD *after*
+               lowering, so they only exist in compiled HLO — the jaxpr
+               census must skip them.
+    ``conditional``: issued only on the rare count-bound overflow path
+               (inside the ``lax.cond`` worst-case-extent fallback).
     """
-    bw_intra, a_intra = tp_link(cluster, strat.moe_tp)
-    inter = strat.ep_inter_node
-    bw_ep = cluster.bw(inter)
-    a_ep = cluster.latency(inter)
-    # d_DP > d_EP: the dDP/dEP parallel A2A groups (Fig. 6b) CONTEND for the
-    # same inter-node links — per-group bandwidth divides accordingly.
-    if inter:
-        n_groups = max(1, strat.attn_dp // max(strat.moe_ep, 1))
-        bw_ep = bw_ep / n_groups
 
-    # Intra-node fabric contention: moe_tp < n_proc means several MoE TP
-    # groups share one node's NVLink/HCCS fabric.
-    if strat.moe_tp < cluster.n_proc:
-        bw_intra = bw_intra * strat.moe_tp / cluster.n_proc
+    kind: str
+    axis: str
+    count: int
+    phase: str
+    bytes: float = 0.0
+    degree: int = 1
+    link: str = "moe_intra"
+    priced: bool = True
+    traceable: bool = True
+    conditional: bool = False
+    note: str = ""
 
-    # Fig. 6c: d_DP < d_EP drops the redundant hidden-state copies — the A2A
-    # carries b/d_EP tokens over d_DP-device groups (Eq. 5 else-branch).
+
+@dataclasses.dataclass(frozen=True)
+class CommCensus:
+    """The (kind, count, axis) collective list for one strategy.
+
+    This is the single source of truth consumed by BOTH
+    ``comm_latency`` (which prices the ``priced`` entries) and
+    ``repro.analysis.trace_contract`` (which demands the jaxpr of the
+    lowered MoE block contain exactly the ``traceable`` entries) — the
+    MixServe claim that the analyzer prices the program XLA actually
+    runs, made falsifiable.
+    """
+
+    strategy: Strategy
+    layout: str          # pure_tp | dp_ep | mixserve | dense
+    fused: bool
+    token_sliced: bool
+    chunks: int
+    cap_bounded: bool
+    entries: tuple[Collective, ...]
+
+    def counts(self, *, traceable_only: bool = True,
+               conditional: bool = False) -> dict[tuple[str, str], int]:
+        """Aggregate (kind, axis) -> count map for the contract check."""
+        out: dict[tuple[str, str], int] = {}
+        for e in self.entries:
+            if traceable_only and not e.traceable:
+                continue
+            if bool(e.conditional) != bool(conditional):
+                continue
+            key = (e.kind, e.axis)
+            out[key] = out.get(key, 0) + e.count
+        return out
+
+    def select(self, **field_values) -> tuple[Collective, ...]:
+        return tuple(e for e in self.entries
+                     if all(getattr(e, f) == v for f, v in field_values.items()))
+
+
+def _moe_census_entries(*, is_moe: bool, n_shared: int, moe_tp: int,
+                        moe_ep: int, attn_tp: int, fused: bool,
+                        token_sliced: bool, comm_algo: str, ep_degree: int,
+                        size: float, size_ep: float, k: int, chunks: int,
+                        cap_bounded: bool) -> list[Collective]:
+    """MoE-block collectives exactly as ``models.moe`` emits them.
+
+    Mirrors ``_moe_shard_dropless_fn`` (the default dropless dispatch)
+    branch-for-branch; the trace contract asserts the mirror never drifts.
+    """
+    ent: list[Collective] = []
+    if not is_moe:
+        return ent
+    C = max(1, chunks)
+
+    if moe_ep <= 1:
+        # ep==1 branch: local dropless pipeline + TP partial-sum reduction.
+        if moe_tp > 1 and not token_sliced:
+            ent.append(Collective("all_reduce", "tp", 1, "moe_expert",
+                                  bytes=size, degree=moe_tp,
+                                  note="psum of TP-partial expert outputs"))
+        if token_sliced and moe_tp > 1:
+            ent.append(Collective("all_gather", "tp", 1, "moe_epilogue",
+                                  degree=moe_tp, priced=False,
+                                  note="token-axis unslice"))
+        if n_shared and moe_tp > 1:
+            ent.append(Collective("all_reduce", "tp", 1, "shared",
+                                  degree=moe_tp, priced=False,
+                                  note="shared-expert TP partials"))
+        return ent
+
+    # ---- EP exchange (ep > 1): counts A2A + count-bounded dispatch ----
+    ent.append(Collective("all_to_all", "ep", C, "counts",
+                          degree=ep_degree, priced=False,
+                          note="(ep, e_local) int32 slot counts"))
+    if fused:
+        # Alg. 1-2 fused RS-A2A-AG: the A2A rides 1/tp-sharded hidden
+        # states (Eq. 13), an AG restores full width before the expert
+        # GEMMs, the combine reduce-scatters back to 1/tp.
+        ent += [
+            Collective("all_to_all", "ep", C, "moe_dispatch",
+                       bytes=size * k / moe_tp, degree=ep_degree, link="ep",
+                       note="dispatch A2A on 1/tp-sharded tokens"),
+            Collective("all_gather", "tp", C, "moe_dispatch",
+                       bytes=size * k, degree=moe_tp,
+                       note="restore full hidden width (Alg. 2)"),
+            Collective("reduce_scatter", "tp", C, "moe_combine",
+                       bytes=size * k, degree=moe_tp,
+                       note="reduce TP-partial expert outputs (Alg. 1)"),
+            Collective("all_to_all", "ep", C, "moe_combine",
+                       bytes=size * k / moe_tp, degree=ep_degree, link="ep",
+                       note="combine A2A on 1/tp-sharded outputs"),
+            Collective("all_gather", "tp", 1, "moe_epilogue",
+                       bytes=size, degree=moe_tp,
+                       note="single epilogue AG of the weighted sum"),
+        ]
+        if n_shared:
+            ent.append(Collective("reduce_scatter", "tp", 1, "shared",
+                                  degree=moe_tp, priced=False,
+                                  note="shared partials fold into the "
+                                       "1/tp-sharded stream pre-epilogue-AG"))
+    else:
+        ent.append(Collective("all_to_all", "ep", C, "moe_dispatch",
+                              bytes=size_ep * k, degree=ep_degree, link="ep",
+                              note="full-width dispatch A2A (Eq. 12)"))
+        if moe_tp > 1 and not token_sliced:
+            ent.append(Collective("all_reduce", "tp", C, "moe_expert",
+                                  bytes=size, degree=moe_tp,
+                                  note="Tutel-style full-width TP AR"))
+        ent.append(Collective("all_to_all", "ep", C, "moe_combine",
+                              bytes=size_ep * k, degree=ep_degree, link="ep",
+                              note="full-width combine A2A"))
+        body_tp = moe_tp if moe_tp > 1 else attn_tp
+        if token_sliced and body_tp > 1:
+            ent.append(Collective("all_gather", "tp", 1, "moe_epilogue",
+                                  degree=body_tp, priced=False,
+                                  note="token-axis unslice (dp_ep layout)"))
+        if n_shared and body_tp > 1:
+            ent.append(Collective("all_reduce", "tp", 1, "shared",
+                                  degree=body_tp, priced=False,
+                                  note="shared-expert TP partials"))
+
+    if cap_bounded:
+        # Count-bounded exchange: rank-uniform overflow predicate, plus the
+        # bit-exact worst-case-extent fallback inside lax.cond (the counts
+        # A2A is NOT redone — counts are cap-independent).
+        ent.append(Collective("all_reduce", "guard", C, "overflow_guard",
+                              priced=False,
+                              note="pmax of per-segment max over tp ∪ ep"))
+        cond = [Collective("all_to_all", "ep", C, "moe_dispatch",
+                           priced=False, conditional=True),
+                Collective("all_to_all", "ep", C, "moe_combine",
+                           priced=False, conditional=True)]
+        if fused:
+            cond += [Collective("all_gather", "tp", C, "moe_dispatch",
+                                priced=False, conditional=True),
+                     Collective("reduce_scatter", "tp", C, "moe_combine",
+                                priced=False, conditional=True)]
+        elif moe_tp > 1 and not token_sliced:
+            cond.append(Collective("all_reduce", "tp", C, "moe_expert",
+                                   priced=False, conditional=True))
+        ent += cond
+    return ent
+
+
+def comm_census(model: ModelConfig, strat: Strategy, work: Workload, *,
+                ep_overlap: EpOverlap | None = None,
+                tokens_local: int | None = None) -> CommCensus:
+    """The per-Decoder-layer collective census for ``strat``.
+
+    Returns every collective the strategy's program issues per layer —
+    kind, logical axis, count, phase — with the alpha-beta pricing inputs
+    attached to the entries ``comm_latency`` charges.  The structure
+    mirrors the dropless ``models.moe`` implementation (the default
+    dispatch path) plus the GSPMD-side attention collectives.
+
+    ``ep_overlap`` expands the counts to the micro-chunked count-bounded
+    schedule (C issues of the per-chunk collectives, the overflow guard,
+    and the conditional worst-case fallback).  ``tokens_local`` — the
+    per-EP-rank token count the traced program will see — pins the chunk
+    count C = gcd(chunks, tokens_local) and the cap decision exactly;
+    without it the census estimates both from ``work``.
+    """
+    is_moe = model.is_moe
+    n_shared = model.n_shared_experts if is_moe else 0
+    # Layout resolution mirrors partitioner.make_plan's Strategy mapping:
+    # moe_tp>1 & moe_ep>1 -> mixserve; moe_ep>1 -> dp_ep (token-sliced pure
+    # EP, comm_algo forced "unfused"); else pure TP.
+    if not is_moe:
+        layout = "dense"
+    elif strat.moe_ep <= 1:
+        layout = "pure_tp"
+    elif strat.moe_tp <= 1:
+        layout = "dp_ep"
+    else:
+        layout = "mixserve"
+    token_sliced = layout == "dp_ep" and strat.attn_tp > 1
+    comm_algo = "unfused" if token_sliced else strat.comm_algo
+    fused = (comm_algo in ("fused", "sync") and strat.moe_tp > 1
+             and strat.moe_ep > 1 and not token_sliced)
+
+    # Pricing sizes (Eq. 5 / 12 / 13 — see comm_latency for the link model).
     tokens = work.batch * work.seq_len / max(strat.attn_dp, strat.moe_ep)
+    size = tokens * model.d_model * BYTES
     ep_degree = min(strat.moe_ep, strat.attn_dp) if strat.attn_dp > 1 \
         else strat.moe_ep
-    size = tokens * model.d_model * BYTES          # hidden states per DP group
-    k = max(1, model.top_k)
-
-    if strat.moe_ep <= 1:
-        # pure TP MoE block: just the AR (Eq. 12 degenerate)
-        return ar_cost(size, strat.moe_tp, bw_intra, a_intra)
-
-    if strat.moe_tp <= 1:
-        # pure EP (vLLM DP+EP): "EP is essentially equivalent to DP among the
-        # experts" — every device is its own token group, so the A2A runs at
-        # degree d_EP on bs/d_EP tokens per rank (no Fig. 6c dropping).
+    if layout == "dp_ep":
+        # pure EP (vLLM DP+EP): every device is its own token group — the
+        # A2A runs at degree d_EP on bs/d_EP tokens (no Fig. 6c dropping).
         tok_ep = work.batch * work.seq_len / strat.moe_ep
         size_ep = tok_ep * model.d_model * BYTES
-        return 2 * a2a_cost(size_ep * k, strat.moe_ep, bw_ep, a_ep)
-
-    if strat.comm_algo == "unfused":
-        # Tutel-style: synchronize TP at full width first, then full-volume
-        # A2A across the EP group (Eq. 12's structure inside a TP-EP layout).
-        return (ar_cost(size, strat.moe_tp, bw_intra, a_intra)
-                + 2 * a2a_cost(size * k, ep_degree, bw_ep, a_ep))
-
-    # ---- fused RS-A2A-AG (Eq. 13) ----
-    # Hidden states ride the inter-node wire 1/tp-sharded, so the A2A volume
-    # drops by 1/moe_tp relative to Eq. 12.
-    a2a_sharded = a2a_cost(size * k / strat.moe_tp, ep_degree, bw_ep, a_ep)
-    # dispatch epilogue: AG the received 1/tp-wide token shards back to full
-    # width inside the node (Alg. 2); combine prologue: RS the partial expert
-    # outputs (Alg. 1); combine epilogue: AG the weighted sum.
-    ag_disp = ag_cost(size * k, strat.moe_tp, bw_intra, a_intra)
-    rs_comb = rs_cost(size * k, strat.moe_tp, bw_intra, a_intra)
-    ag_comb = ag_cost(size, strat.moe_tp, bw_intra, a_intra)
-    if strat.comm_algo == "fused":
-        # Fig. 9: pairwise inter-node rounds overlap the intra-node RS/AG
-        # rounds; wall time ~ max(inter, intra) per phase + epilogue.
-        dispatch = max(a2a_sharded, ag_disp)
-        combine = max(a2a_sharded, rs_comb) + ag_comb
+        ep_degree = strat.moe_ep
     else:
-        dispatch = a2a_sharded + ag_disp
-        combine = rs_comb + a2a_sharded + ag_comb
-    return dispatch + combine
+        size_ep = size
+
+    # Micro-chunk schedule: C and the cap decision, pinned by tokens_local
+    # when the caller knows the traced program's local token count.
+    chunks, cap_bounded = 1, False
+    if (ep_overlap is not None and strat.moe_ep > 1
+            and not (ep_overlap.chunks <= 1 and ep_overlap.cap_rows == -1)):
+        if tokens_local is None:
+            est = work.batch * work.seq_len / max(strat.moe_ep, 1)
+            if token_sliced and strat.attn_tp > 1:
+                est /= strat.attn_tp
+            tokens_local = max(1, int(est))
+        chunks = math.gcd(ep_overlap.chunks, tokens_local) \
+            if ep_overlap.chunks > 1 else 1
+        n_c = (tokens_local // chunks) * max(1, model.top_k)
+        cap_bounded = cap_rows_for(n_c, strat.moe_ep, ep_overlap) < n_c
+
+    entries: list[Collective] = []
+    tokens_attn = work.batch * work.seq_len / strat.attn_dp
+    size_attn = tokens_attn * model.d_model * BYTES
+    if strat.attn_tp > 1:
+        # Attention block TP: 2 ARs per layer (attn out + [dense] ffn out
+        # share the residual stream; Eq. 5 counts 2 x AR).  GSPMD inserts
+        # these during SPMD partitioning -> not visible in the moe jaxpr.
+        entries.append(Collective("all_reduce", "tp", 2, "attn",
+                                  bytes=size_attn, degree=strat.attn_tp,
+                                  link="attn", traceable=False))
+    entries += _moe_census_entries(
+        is_moe=is_moe, n_shared=n_shared, moe_tp=strat.moe_tp,
+        moe_ep=strat.moe_ep, attn_tp=strat.attn_tp, fused=fused,
+        token_sliced=token_sliced, comm_algo=comm_algo, ep_degree=ep_degree,
+        size=size, size_ep=size_ep, k=max(1, model.top_k), chunks=chunks,
+        cap_bounded=cap_bounded)
+    if is_moe:
+        # aux-loss pmean over every mesh axis (replicated out_spec).
+        entries.append(Collective("all_reduce", "mesh", 1, "aux",
+                                  priced=False, note="scalar aux-loss pmean"))
+        if strat.attn_tp != strat.moe_tp and strat.moe_tp > 1:
+            # layout resync between the attention TP group and the MoE TP
+            # group (hidden states re-gathered on entry + exit) — GSPMD-side.
+            entries.append(Collective(
+                "all_gather", "tp", 2, "resync", bytes=size_attn,
+                degree=max(strat.attn_tp, strat.moe_tp), link="resync",
+                traceable=False))
+    return CommCensus(strategy=strat, layout=layout, fused=fused,
+                      token_sliced=token_sliced, chunks=chunks,
+                      cap_bounded=cap_bounded, entries=tuple(entries))
 
 
 def _routed_expert_seconds(model: ModelConfig, strat: Strategy,
@@ -431,30 +645,83 @@ def moe_overlap_lambda(lam_moe: float, tau_expert: float, overlap: EpOverlap,
             + (C - 1) * chunk_alpha)
 
 
+_COST_FN = {"all_reduce": ar_cost, "all_gather": ag_cost,
+            "reduce_scatter": rs_cost, "all_to_all": a2a_cost}
+
+
+def _census_links(strat: Strategy, cluster: ClusterSpec) -> dict:
+    """(bw, alpha) per census link class (Fig. 3 / Fig. 6 link model).
+
+    ``attn``: the attention TP fabric, with contention when several
+    attention TP groups share one node.  ``moe_intra``: ditto for the MoE
+    TP group.  ``ep``: the EP-exchange links, divided across the
+    d_DP/d_EP parallel A2A groups that CONTEND for the same inter-node
+    links (Fig. 6b).  ``resync``: the intra-node layout-resync AG.
+    """
+    bw_attn, a_attn = tp_link(cluster, strat.attn_tp)
+    if 1 < strat.attn_tp < cluster.n_proc:
+        bw_attn = bw_attn * strat.attn_tp / cluster.n_proc
+    bw_moe, a_moe = tp_link(cluster, strat.moe_tp)
+    if strat.moe_tp < cluster.n_proc:
+        bw_moe = bw_moe * strat.moe_tp / cluster.n_proc
+    inter = strat.ep_inter_node
+    bw_ep, a_ep = cluster.bw(inter), cluster.latency(inter)
+    if inter:
+        n_groups = max(1, strat.attn_dp // max(strat.moe_ep, 1))
+        bw_ep = bw_ep / n_groups
+    return {"attn": (bw_attn, a_attn), "moe_intra": (bw_moe, a_moe),
+            "ep": (bw_ep, a_ep), "resync": (cluster.intra_node_bw, a_attn)}
+
+
+def _price(e: Collective, links: dict) -> float:
+    bw, alpha = links["attn" if e.phase == "attn"
+                      else "resync" if e.phase == "resync" else e.link]
+    return e.count * _COST_FN[e.kind](e.bytes, e.degree, bw, alpha)
+
+
 def comm_latency(model: ModelConfig, strat: Strategy, work: Workload,
                  cluster: ClusterSpec, *,
                  ep_overlap: EpOverlap | None = None) -> float:
     """lambda(d_TP, d_EP, d_DP): per-rank per-layer comm latency (Eq. 5).
 
+    Prices the ``comm_census`` entry list — the same (kind, count, axis)
+    collectives the trace contract checks against the lowered program —
+    with the Eq. 1-3 alpha-beta costs and the Eq. 13 schedule:
+
+    unfused:  AR(bsh, tp)  then  2 x A2A(bshk, ep)   at FULL hidden width
+    fused:    RS-A2A-AG — the A2A operates on hidden states already sharded
+              1/tp, so inter-node volume drops by 1/tp (Eq. 13); with
+              ``comm_algo == 'fused'`` intra- and inter-node rounds overlap
+              (Fig. 9) so each phase's wall time is max(inter, intra), plus
+              the serial epilogue AG.
+
     ``ep_overlap``: price the micro-chunked dispatch/GEMM/combine pipeline
     (models.moe) instead of the serial sum-of-phases exchange.
     """
-    bw_intra, a_intra = tp_link(cluster, strat.attn_tp)
-    # fabric contention: attn_tp < n_proc -> several attention TP groups
-    # share one node's NVLink/HCCS fabric
-    if 1 < strat.attn_tp < cluster.n_proc:
-        bw_intra = bw_intra * strat.attn_tp / cluster.n_proc
+    census = comm_census(model, strat, work)   # monolithic (C=1) structure
+    links = _census_links(strat, cluster)
 
-    tokens = work.batch * work.seq_len / strat.attn_dp
-    size = tokens * model.d_model * BYTES
+    lam = sum(_price(e, links) for e in census.entries
+              if e.priced and e.phase in ("attn", "resync"))
 
-    # Attention block TP: 2 ARs per layer (attn out + [dense] ffn out share
-    # the residual stream; Eq. 5 counts 2 x AR).
-    lam = 2 * ar_cost(size, strat.attn_tp, bw_intra, a_intra) \
-        if strat.attn_tp > 1 else 0.0
-
-    if model.is_moe:
-        lam_moe = _moe_lambda_hybrid(model, strat, work, cluster)
+    moe = [e for e in census.entries
+           if e.priced and e.phase.startswith("moe_")]
+    if moe:
+        if census.fused and strat.comm_algo == "fused":
+            # Fig. 9: pairwise inter-node rounds overlap the intra-node
+            # RS/AG rounds; wall time ~ max(inter, intra) per phase +
+            # epilogue.
+            phase_cost = {"moe_dispatch": 0.0, "moe_combine": 0.0,
+                          "moe_epilogue": 0.0}
+            for e in moe:
+                p = _price(e, links)
+                if e.phase == "moe_epilogue":
+                    phase_cost[e.phase] += p
+                else:
+                    phase_cost[e.phase] = max(phase_cost[e.phase], p)
+            lam_moe = sum(phase_cost.values())
+        else:
+            lam_moe = sum(_price(e, links) for e in moe)
         if (ep_overlap is not None and ep_overlap.chunks > 1
                 and strat.moe_ep > 1):
             tau_e = _routed_expert_seconds(model, strat, work, cluster)
@@ -467,12 +734,6 @@ def comm_latency(model: ModelConfig, strat: Strategy, work: Workload,
             lam_moe = moe_overlap_lambda(lam_moe, tau_e, ep_overlap,
                                          chunk_alpha)
         lam += lam_moe
-        if strat.attn_tp != strat.moe_tp and strat.moe_tp > 1:
-            # layout resync between the attention TP group and the MoE TP
-            # group (hidden states re-gathered on entry + exit)
-            lam += 2 * ag_cost(size, max(strat.attn_tp, strat.moe_tp),
-                               cluster.intra_node_bw, a_intra)
-    # dense models: the second AR above already covers the FFN TP sync.
     return lam
 
 
@@ -623,6 +884,7 @@ __all__ = [
     "BYTES", "MFU", "Strategy", "Workload", "Indicators",
     "EpOverlap", "EP_OVERLAP_OFF", "cap_rows_for", "moe_overlap_lambda",
     "rs_cost", "ag_cost", "ar_cost", "a2a_cost", "p2p_cost",
+    "Collective", "CommCensus", "comm_census",
     "compute_latency", "comm_latency", "lambda_pure_ep",
     "service_latency", "queuing_delay", "indicators",
     "memory_per_device", "fits_memory",

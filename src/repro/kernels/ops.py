@@ -136,6 +136,7 @@ flash_decode_ref = ref.flash_decode_ref
 flash_chunk_ref = ref.flash_chunk_ref
 flash_chunk_paged_ref = ref.flash_chunk_paged_ref
 permute_tokens_ref = ref.permute_tokens_ref
+permute_tokens_ragged_ref = ref.permute_tokens_ragged_ref
 unpermute_tokens_ref = ref.unpermute_tokens_ref
 
 __all__ = ["moe_gemm", "grouped_gemm", "topk_gate", "flash_decode",
@@ -143,4 +144,5 @@ __all__ = ["moe_gemm", "grouped_gemm", "topk_gate", "flash_decode",
            "permute_tokens_ragged", "unpermute_tokens", "moe_gemm_ref",
            "grouped_gemm_ref", "topk_gate_ref", "flash_decode_ref",
            "flash_chunk_ref", "flash_chunk_paged_ref", "permute_tokens_ref",
-           "unpermute_tokens_ref", "counters", "reset_counters"]
+           "permute_tokens_ragged_ref", "unpermute_tokens_ref", "counters",
+           "reset_counters"]

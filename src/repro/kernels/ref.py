@@ -114,6 +114,18 @@ def permute_tokens_ref(x, src_tok):
     return jnp.where(src_tok[:, None] >= 0, rows, jnp.zeros_like(rows))
 
 
+def permute_tokens_ragged_ref(x, src_tok, total, *, seg_stride=None):
+    """Oracle for the segment-aware ragged permute (kernels.permute).
+
+    Validity rides entirely in ``src_tok`` — rows outside the per-segment
+    prefixes carry ``-1`` and come back as zero rows — so the dense
+    gather IS the answer; ``total``/``seg_stride`` only tell the kernel
+    which tiles it may skip.
+    """
+    del total, seg_stride
+    return permute_tokens_ref(x, src_tok)
+
+
 def unpermute_tokens_ref(buf, src_slot, weights):
     """buf (M, h), src_slot (T, k) int32, weights (T, k) -> (T, h).
 
@@ -129,4 +141,5 @@ def unpermute_tokens_ref(buf, src_slot, weights):
 
 __all__ = ["moe_gemm_ref", "grouped_gemm_ref", "topk_gate_ref",
            "flash_decode_ref", "flash_chunk_ref", "flash_chunk_paged_ref",
-           "permute_tokens_ref", "unpermute_tokens_ref"]
+           "permute_tokens_ref", "permute_tokens_ragged_ref",
+           "unpermute_tokens_ref"]

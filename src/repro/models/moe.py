@@ -138,7 +138,12 @@ def positions_in_expert(flat_e, n_experts: int):
     """Rank of each (token, k) slot within its expert, via stable sort —
     O(N log N), no (N, E) one-hot materialization."""
     n = flat_e.shape[0]
-    order = jnp.argsort(flat_e, stable=True)
+    # Known-risk sort, deliberately kept: single consumer chain (the
+    # gather below), no interpret-mode pallas_call sibling to trigger the
+    # R1 fusion-duplication miscompile, and the result is pinned bitwise
+    # against the one-hot oracle in the sharded subprocess lanes.
+    # Revisit if the capacity path ever feeds a Pallas kernel directly.
+    order = jnp.argsort(flat_e, stable=True)  # repro-lint: disable=R1
     sorted_e = flat_e[order]
     ar = jnp.arange(n, dtype=jnp.int32)
     new_seg = jnp.concatenate([jnp.ones((1,), bool),
@@ -442,7 +447,7 @@ def _axis_size(axes: tuple):
     return s
 
 
-def _routed_counts_stat(idx, e_global: int, mesh_axes, tp_axes,
+def _routed_counts_stat(idx, e_global: int, mesh_axes: tuple, tp_axes: tuple,
                         token_sliced: bool):
     """(E,) int32 global routed-slot counts, replicated (observability).
 

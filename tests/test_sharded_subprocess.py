@@ -39,3 +39,10 @@ def test_overlap_exchange_bitwise_equivalence():
     incl. the overflow fallback under adversarial routing skew."""
     out = _run("run_overlap_equivalence.py")
     assert "OVERLAP_EQUIVALENCE_OK" in out
+
+
+def test_trace_contract_census_matches_cost_model():
+    """The traced moe_block's collective census == cost_model.comm_census
+    for every strategy/algorithm/overlap, and a sabotaged block fails."""
+    out = _run("run_trace_contract.py")
+    assert "TRACE_CONTRACT_OK" in out
